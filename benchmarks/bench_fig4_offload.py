@@ -1,0 +1,68 @@
+"""Fig. 4 (offload analogue): cache bytes touched per step mode, and the
+modelled step time when the full cache sits behind a slow link (PCIe on
+the paper's 4090; sequence-sharded ICI hops on a TPU pod).
+
+Partial verification keeps the small partial cache local and touches the
+full cache only on refresh — the traffic ratio is the speedup mechanism.
+"""
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(__file__))
+from common import RESULTS_DIR, print_table, write_rows  # noqa
+
+from repro.artifacts import get_trained_pair, corpus_for  # noqa
+from repro.configs import SpecPVConfig  # noqa
+from repro.core import SpecPVEngine  # noqa
+from repro.data import continuation_task  # noqa
+from repro.kvcache.offload import full_step_bytes, partial_step_bytes  # noqa
+
+PCIE_GBPS = 25.0  # paper's RTX-4090 host link
+
+
+def main(quick: bool = False):
+    cfg, dcfg, params, dparams = get_trained_pair("tiny-dense")
+    corpus = corpus_for(cfg)
+    ctx, max_new = (256, 24) if quick else (512, 48)
+    spec = SpecPVConfig(block_size=16, num_sink_blocks=1,
+                        retrieval_budget_blocks=4, local_window_blocks=2,
+                        buffer_size=48)
+    rows = []
+    for partial in (False, True):
+        eng = SpecPVEngine(cfg, spec, dcfg, params, dparams, batch=1,
+                           max_len=ctx + max_new + 160,
+                           partial_verification=partial)
+        prompt, _ = continuation_task(corpus, batch=1, context_len=ctx)
+        _, stats = eng.generate(prompt, max_new)
+        tm = eng.traffic
+        total_mib = tm.total() / 2**20
+        steps = stats["steps"]
+        modelled_ms = tm.modelled_time_s(PCIE_GBPS) / max(steps, 1) * 1e3
+        rows.append(["partial" if partial else "full-verify",
+                     steps,
+                     {k: f"{v/2**20:.1f}MiB"
+                      for k, v in tm.bytes_by_mode.items()},
+                     f"{total_mib:.1f}", f"{modelled_ms:.3f}"])
+    # projected at the paper's 60K context for an 8B-class model
+    proj = []
+    for name, fn, arg in [
+            ("full@60K", full_step_bytes, 61440),
+            ("partial@60K", partial_step_bytes, 4576)]:
+        nbytes = fn(32, 1, arg, 8, 128, 2)
+        proj.append([name, "-", "-", f"{nbytes/2**20:.1f}",
+                     f"{nbytes/ (PCIE_GBPS*1e9) * 1e3:.2f}"])
+    header = ["mode", "steps", "bytes_by_mode", "total_MiB",
+              "modelled_ms/step@25GBps"]
+    print_table("Fig.4 — cache-traffic (offload analogue)", header,
+                rows + proj)
+    write_rows(os.path.join(RESULTS_DIR, "fig4_offload.csv"), header,
+               [[r[0], r[1], str(r[2]).replace(",", ";"), r[3], r[4]]
+                for r in rows + proj])
+    for r in rows + proj:
+        print(f"fig4/{r[0]},{r[4]},total_MiB={r[3]}")
+
+
+if __name__ == "__main__":
+    main("--quick" in sys.argv)

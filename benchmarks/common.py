@@ -1,0 +1,74 @@
+"""Shared benchmark utilities: trained artifacts, timing, CSV/markdown."""
+from __future__ import annotations
+
+import os
+import sys
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def ensure_dir(p):
+    os.makedirs(p, exist_ok=True)
+    return p
+
+
+def time_fn(fn: Callable, *args, iters: int = 3, warmup: int = 1) -> float:
+    """Median wall seconds per call (post-warmup, blocked on results)."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def lcs_len(a: np.ndarray, b: np.ndarray) -> int:
+    """Longest common subsequence length (ROUGE-L numerator on tokens)."""
+    n, m = len(a), len(b)
+    dp = np.zeros((m + 1,), np.int32)
+    for i in range(1, n + 1):
+        prev = 0
+        for j in range(1, m + 1):
+            cur = dp[j]
+            dp[j] = prev + 1 if a[i - 1] == b[j - 1] else max(dp[j],
+                                                             dp[j - 1])
+            prev = cur
+    return int(dp[m])
+
+
+def rouge_l(cand: np.ndarray, ref: np.ndarray) -> float:
+    """Token-level ROUGE-L F1 (the paper's Tab. 2 metric, on token ids)."""
+    if len(cand) == 0 or len(ref) == 0:
+        return 0.0
+    l = lcs_len(cand, ref)
+    p = l / len(cand)
+    r = l / len(ref)
+    return 0.0 if p + r == 0 else 2 * p * r / (p + r)
+
+
+def write_rows(path: str, header: List[str], rows: List[List]) -> None:
+    ensure_dir(os.path.dirname(path))
+    with open(path, "w") as f:
+        f.write(",".join(header) + "\n")
+        for r in rows:
+            f.write(",".join(str(x) for x in r) + "\n")
+    print(f"  -> {path}")
+
+
+def print_table(title: str, header: List[str], rows: List[List]) -> None:
+    print(f"\n== {title} ==")
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows))
+              for i, h in enumerate(header)] if rows else [len(h) for h in
+                                                           header]
+    print("  " + " | ".join(str(h).ljust(w) for h, w in zip(header, widths)))
+    for r in rows:
+        print("  " + " | ".join(str(x).ljust(w) for x, w in zip(r, widths)))

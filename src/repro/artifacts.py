@@ -1,0 +1,81 @@
+"""Shared trained-model artifacts for examples, tests and benchmarks.
+
+Training tiny models on the synthetic corpus takes a few CPU-minutes; we
+cache (target, draft) checkpoints under results/artifacts/ so every
+benchmark and example reuses them.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, DraftConfig
+from repro.configs.base import ModelConfig
+from repro.data import SyntheticCorpus, batch_iterator
+from repro.models import api
+from repro.core.draft import init_draft_params
+from repro.train.checkpoint import save_checkpoint, load_checkpoint
+from repro.train.trainer import Trainer, TrainConfig
+from repro.train.draft_train import DraftTrainer, DraftTrainConfig
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "results",
+                       "artifacts")
+
+DEFAULT_DCFG = DraftConfig(tree_depth=3, tree_branch=(2, 2, 1), ttt_steps=3)
+
+
+def corpus_for(cfg: ModelConfig) -> SyntheticCorpus:
+    return SyntheticCorpus(vocab_size=cfg.vocab_size, order=1, branching=4,
+                           seed=0)
+
+
+def get_trained_pair(arch: str = "tiny-dense", *,
+                     target_steps: int = 200, draft_steps: int = 150,
+                     dcfg: Optional[DraftConfig] = None,
+                     batch: int = 8, seq_len: int = 128,
+                     yarn_factor: float = 1.0,
+                     force: bool = False) -> Tuple:
+    """Returns (cfg, dcfg, target_params, draft_params)."""
+    dcfg = dcfg or DEFAULT_DCFG
+    cfg = get_config(arch)
+    if cfg.num_layers > 8:
+        cfg = cfg.reduced()
+    os.makedirs(ART_DIR, exist_ok=True)
+    tpath = os.path.join(ART_DIR, f"{cfg.name}_t{target_steps}.npz")
+    dpath = os.path.join(ART_DIR,
+                         f"{cfg.name}_t{target_steps}_d{draft_steps}.npz")
+    corpus = corpus_for(cfg)
+
+    tmpl = api.init_params(cfg, jax.random.PRNGKey(0))
+    if os.path.exists(tpath) and not force:
+        params, _ = load_checkpoint(tpath, tmpl)
+    else:
+        tr = Trainer(cfg, TrainConfig(total_steps=target_steps, warmup=10,
+                                      log_every=max(target_steps // 4, 1)),
+                     params=tmpl)
+        extra = api.extra_inputs_for(cfg, batch, jax.random.PRNGKey(5)) \
+            or None
+        tr.extra = extra
+        tr.fit(batch_iterator(corpus, batch=batch, seq_len=seq_len),
+               steps=target_steps)
+        params = tr.params
+        save_checkpoint(tpath, jax.device_get(params), step=target_steps)
+
+    dtmpl = init_draft_params(cfg, dcfg, jax.random.PRNGKey(1))
+    if os.path.exists(dpath) and not force:
+        dparams, _ = load_checkpoint(dpath, dtmpl)
+    else:
+        dtr = DraftTrainer(cfg, dcfg, params,
+                           DraftTrainConfig(total_steps=draft_steps,
+                                            warmup=10,
+                                            log_every=max(draft_steps // 4,
+                                                          1)),
+                           dparams=dtmpl)
+        dtr.fit(batch_iterator(corpus, batch=batch, seq_len=seq_len, seed=7),
+                steps=draft_steps)
+        dparams = dtr.dparams
+        save_checkpoint(dpath, jax.device_get(dparams), step=draft_steps)
+    return cfg, dcfg, params, dparams

@@ -1,0 +1,262 @@
+"""Config system.
+
+``ModelConfig`` is a frozen dataclass describing one architecture instance.
+Every assigned architecture gets one module in ``repro/configs/`` that
+builds its exact published config (source cited in the module docstring)
+and registers it under its ``--arch`` id.
+
+``reduced()`` produces the CPU-smoke-test variant of the same family
+(≤2 layers, d_model ≤ 512, ≤4 experts) used by tests and examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+ARCH_TYPES = ("dense", "moe", "ssm", "hybrid", "vlm", "audio")
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    # identity
+    name: str
+    arch_type: str                      # one of ARCH_TYPES
+    source: str = ""                    # citation for the config numbers
+
+    # transformer trunk
+    num_layers: int = 2
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: int = 0                   # 0 -> d_model // num_heads
+    d_ff: int = 1024
+    vocab_size: int = 1024
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    act: str = "silu"                   # "silu" (swiglu) | "gelu" (geglu/mlp)
+    norm_eps: float = 1e-5
+
+    # rope / long context
+    rope_theta: float = 10_000.0
+    yarn_factor: float = 1.0            # >1 enables YARN NTK-by-parts scaling
+    yarn_orig_len: int = 4096           # original trained context for YARN
+    max_position: int = 1 << 20
+
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_aux_loss_coef: float = 0.01
+
+    # SSM (rwkv6)
+    ssm_head_dim: int = 64
+
+    # hybrid (recurrentgemma / griffin)
+    layer_pattern: Tuple[str, ...] = () # e.g. ("rec", "rec", "attn")
+    window_size: int = 0                # local attention window
+    rnn_width: int = 0                  # RG-LRU width (0 -> d_model)
+
+    # vlm
+    cross_attn_every: int = 0           # a cross-attn layer every N layers
+    num_image_tokens: int = 0
+    vision_dim: int = 0                 # pre-projector vision feature dim
+
+    # audio enc-dec (whisper)
+    encoder_layers: int = 0
+    num_audio_frames: int = 0
+
+    # numerics
+    dtype: str = "float32"              # activation/compute dtype
+    param_dtype: str = "float32"
+    remat: bool = True                  # checkpoint layer activations (train)
+
+    # ------------------------------------------------------------------
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def is_attention_arch(self) -> bool:
+        """Does the arch keep a growing softmax-attention KV cache?"""
+        return self.arch_type in ("dense", "moe", "vlm", "audio")
+
+    @property
+    def has_encoder(self) -> bool:
+        return self.encoder_layers > 0
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Per-(decoder-)layer kind sequence."""
+        if self.arch_type == "ssm":
+            return ("rwkv",) * self.num_layers
+        if self.arch_type == "hybrid":
+            pat = self.layer_pattern or ("rec", "rec", "attn")
+            out = []
+            while len(out) < self.num_layers:
+                out.extend(pat)
+            return tuple(out[: self.num_layers])
+        if self.arch_type == "audio":
+            # whisper decoder layer: self-attn + cross-attn + mlp
+            return ("dec",) * self.num_layers
+        if self.arch_type == "vlm" and self.cross_attn_every > 0:
+            out = []
+            for i in range(self.num_layers):
+                # every Nth layer (1-indexed) is a cross-attn layer
+                if (i + 1) % self.cross_attn_every == 0:
+                    out.append("cross")
+                else:
+                    out.append("attn")
+            return tuple(out)
+        return ("attn",) * self.num_layers
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def reduced(self) -> "ModelConfig":
+        """CPU smoke-test variant of the same family."""
+        kw: Dict = dict(
+            name=self.name + "-reduced",
+            num_layers=min(self.num_layers, 2),
+            d_model=min(self.d_model, 256),
+            d_ff=min(self.d_ff, 512),
+            vocab_size=min(self.vocab_size, 512),
+            max_position=65536,
+        )
+        heads = max(2, min(self.num_heads, 4))
+        kv = max(1, min(self.num_kv_heads, heads))
+        kw.update(num_heads=heads, num_kv_heads=kv, head_dim=0)
+        if self.num_experts:
+            kw.update(num_experts=min(self.num_experts, 4),
+                      experts_per_token=min(self.experts_per_token, 2))
+        if self.arch_type == "hybrid":
+            # keep the family's pattern but only 2 layers: one rec, one attn
+            kw.update(layer_pattern=("rec", "attn"),
+                      window_size=min(self.window_size or 128, 128),
+                      rnn_width=0)
+        if self.arch_type == "vlm":
+            kw.update(cross_attn_every=2, num_image_tokens=16,
+                      vision_dim=min(self.vision_dim or 64, 64))
+        if self.has_encoder:
+            kw.update(encoder_layers=2, num_audio_frames=32)
+        return self.replace(**kw)
+
+    def param_count(self) -> int:
+        """Approximate parameter count (for roofline MODEL_FLOPS)."""
+        d, dff, V, L = self.d_model, self.d_ff, self.vocab_size, self.num_layers
+        hd = self.head_dim_
+        q = d * self.num_heads * hd
+        kv = 2 * d * self.num_kv_heads * hd
+        o = self.num_heads * hd * d
+        attn = q + kv + o
+        if self.act == "silu":
+            mlp = 3 * d * dff
+        else:
+            mlp = 2 * d * dff
+        total = 0
+        kinds = self.layer_kinds()
+        for kind in kinds:
+            if kind in ("attn", "cross"):
+                total += attn + mlp
+            elif kind == "rwkv":
+                total += 2 * d * d + d * d + mlp  # r,k,v/g/o approx
+            elif kind == "rec":
+                w = self.rnn_width or d
+                total += 2 * d * w + w * d + mlp
+            if kind in ("attn", "cross", "rwkv", "rec"):
+                total += 2 * d  # norms
+        if self.num_experts:
+            # replace dense mlp by experts (already counted once per layer)
+            per = (3 if self.act == "silu" else 2) * d * dff
+            total += (self.num_experts - 1) * per * len(kinds)
+            total += self.num_experts * d * len(kinds)  # router approx
+        total += V * d * (1 if self.tie_embeddings else 2)
+        if self.has_encoder:
+            total += self.encoder_layers * (attn + mlp)
+        return total
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE top-k)."""
+        if not self.num_experts:
+            return self.param_count()
+        d, dff = self.d_model, self.d_ff
+        per = (3 if self.act == "silu" else 2) * d * dff
+        L = self.num_layers
+        inactive = (self.num_experts - self.experts_per_token) * per * L
+        return self.param_count() - inactive
+
+
+# ---------------------------------------------------------------------------
+# SpecPV configuration
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class SpecPVConfig:
+    """Configuration of the paper's technique (Sec. 3.2/3.3)."""
+    block_size: int = 128           # KV block (page) size, TPU-aligned
+    num_sink_blocks: int = 1        # always-kept leading blocks
+    retrieval_budget_blocks: int = 32   # Quest-retrieved blocks ("4K"=32)
+    local_window_blocks: int = 2    # trailing full-resolution window
+    buffer_size: int = 96           # partially-verified + candidate tokens
+    reduction: str = "mean"         # mean | max | last   (Tab. 4)
+    score_mode: str = "paper"       # "paper" eq.(2) | "quest" elementwise
+    refresh_margin: int = 20        # paper: one verify step + margin of 20
+    use_pallas: bool = False        # route scoring through repro.kernels
+                                    # (interpret mode off-TPU)
+
+    @property
+    def partial_budget_tokens(self) -> int:
+        return (self.num_sink_blocks + self.retrieval_budget_blocks
+                + self.local_window_blocks) * self.block_size
+
+    def replace(self, **kw) -> "SpecPVConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class DraftConfig:
+    """EAGLE-3-style draft module: one decoder layer over fused features."""
+    num_layers: int = 1
+    fuse_layers: Tuple[float, float, float] = (0.25, 0.5, 1.0)  # rel. depths
+    tree_depth: int = 5
+    tree_branch: Tuple[int, ...] = (4, 2, 2, 1, 1)  # children per level
+    ttt_steps: int = 4              # training-time-test unroll
+    ttt_alpha: float = 0.8          # loss decay (eq. 5)
+    draft_vocab: int = 0            # 0 -> share target vocab
+
+    @property
+    def tree_size(self) -> int:
+        """Total candidate nodes (excl. root context token)."""
+        n, level = 0, 1
+        for b in self.tree_branch[: self.tree_depth]:
+            level *= b
+            n += level
+        return n
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register(arch_id: str):
+    def deco(fn: Callable[[], ModelConfig]):
+        _REGISTRY[arch_id] = fn
+        return fn
+    return deco
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    import repro.configs  # noqa: F401  (triggers registration)
+    if arch_id not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[arch_id]()
+
+
+def list_archs():
+    import repro.configs  # noqa: F401
+    return sorted(_REGISTRY)

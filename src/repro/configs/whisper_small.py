@@ -1,0 +1,34 @@
+"""whisper-small  [audio]  — enc-dec, conv frontend (stub).
+
+12L(enc)+12L(dec) d_model=768 12H (kv=12) d_ff=3072 vocab=51865
+[arXiv:2212.04356]
+
+The mel-spectrogram + conv feature extractor is a STUB: ``input_specs()``
+provides pre-computed frame embeddings [B, num_audio_frames, d_model];
+we implement the encoder stack and the decoder (self-attn + cross-attn)
+which is where SpecPV's verification lives.
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("whisper-small")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-small",
+        arch_type="audio",
+        source="arXiv:2212.04356",
+        num_layers=12,            # decoder layers
+        encoder_layers=12,
+        num_audio_frames=1500,    # 30 s of audio after conv downsampling
+        d_model=768,
+        num_heads=12,
+        num_kv_heads=12,
+        d_ff=3072,
+        vocab_size=51865,
+        qkv_bias=True,
+        act="gelu",
+        rope_theta=10_000.0,      # we use rope in place of learned abs-pos
+        tie_embeddings=True,
+        dtype="bfloat16",
+        param_dtype="bfloat16",
+    )

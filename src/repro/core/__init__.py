@@ -1,0 +1,13 @@
+"""SpecPV core: the paper's contribution — self-speculative decoding with
+partial verification (draft tree, verification modes, acceptance, engine).
+"""
+from repro.core.tree import TreeSpec, greedy_tree_accept, chain_accept_greedy
+from repro.core.draft import (init_draft_params, init_draft_cache,
+                              draft_extend, tree_draft, draft_model_config)
+from repro.core.engine import SpecPVEngine, EngineState, StepOutput
+from repro.core.reference import autoregressive_generate
+
+__all__ = ["TreeSpec", "greedy_tree_accept", "chain_accept_greedy",
+           "init_draft_params", "init_draft_cache", "draft_extend",
+           "tree_draft", "draft_model_config", "SpecPVEngine", "EngineState",
+           "StepOutput", "autoregressive_generate"]

@@ -1,0 +1,240 @@
+"""EAGLE-3-style self-speculative draft module (paper §3.1).
+
+One decoder layer whose input is ``in_proj(concat(token_emb, fused))``
+where ``fused = fuse(concat(h_low, h_mid, h_top))`` — the low/mid/top
+target-layer features produced *for free* by verification.  Token
+prediction reuses the target's LM head (weight tying), per EAGLE-3's
+direct-token-prediction setup.
+
+The draft keeps its own single-layer KV cache over the accepted context.
+During tree drafting, node K/V live in scratch slots appended after the
+context and are discarded after the step; node inputs at levels > 0 use
+the *draft layer's own hidden state* as the feature (training-time-test
+semantics).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, DraftConfig
+from repro.models import common as cm
+from repro.models import blocks as bk
+from repro.models import dense as dn
+from repro.core.tree import TreeSpec
+
+
+def draft_model_config(cfg: ModelConfig, yarn_factor: float = 1.0
+                       ) -> ModelConfig:
+    """The draft layer's effective config: same dims as the target, one
+    layer, optional YARN long-context scaling (paper App. A)."""
+    return cfg.replace(name=cfg.name + "-draft", num_layers=1,
+                       arch_type="dense", num_experts=0, experts_per_token=0,
+                       yarn_factor=yarn_factor, layer_pattern=(),
+                       cross_attn_every=0, encoder_layers=0)
+
+
+def init_draft_params(cfg: ModelConfig, dcfg: DraftConfig, key) -> Dict:
+    pd = cm.dt(cfg.param_dtype)
+    d = cfg.d_model
+    ks = cm.split_keys(key, 4)
+    mcfg = draft_model_config(cfg)
+    return {
+        "fuse": cm.dense_init(ks[0], (3 * d, d), dtype=pd),
+        "in_proj": cm.dense_init(ks[1], (2 * d, d), dtype=pd),
+        "layer": dn._init_layer(mcfg, ks[2], "attn"),
+        "final_norm": jnp.ones((d,), pd),
+    }
+
+
+def init_draft_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    dtype = cm.dt(cfg.dtype)
+    hk, dh = cfg.num_kv_heads, cfg.head_dim_
+    return {"k": jnp.zeros((batch, max_len, hk, dh), dtype),
+            "v": jnp.zeros((batch, max_len, hk, dh), dtype),
+            "length": jnp.zeros((batch,), jnp.int32)}
+
+
+def _draft_inputs(cfg: ModelConfig, dp: Dict, target_embed, tokens, fused_feats):
+    """tokens: [B, T]; fused_feats: [B, T, 3d] -> layer inputs [B, T, d]."""
+    dt = cm.dt(cfg.dtype)
+    emb = target_embed[tokens].astype(dt)
+    fused = fused_feats.astype(dt) @ dp["fuse"].astype(dt)
+    return jnp.concatenate([emb, fused], axis=-1) @ dp["in_proj"].astype(dt)
+
+
+def _layer_fwd(cfg: ModelConfig, mcfg: ModelConfig, dp: Dict, x, positions,
+               ctx_k, ctx_v, ctx_valid, self_mask, inv_freq, mscale):
+    """One decoder layer over inputs x with explicit context + self mask."""
+    lp = dp["layer"]
+    h = x
+    xn = cm.rmsnorm(h, lp["norm1"], cfg.norm_eps)
+    q = bk.project_q(mcfg, lp["attn"], xn, positions, inv_freq, mscale)
+    k_new, v_new = bk.project_kv(mcfg, lp["attn"], xn, positions, inv_freq,
+                                 mscale)
+    parts = []
+    if ctx_k is not None:
+        parts.append(cm.dense_attn_part(q, ctx_k, ctx_v,
+                                        mask=ctx_valid[:, None, None, :]))
+    parts.append(cm.dense_attn_part(q, k_new, v_new, mask=self_mask[:, None]))
+    out = cm.combine_attn_parts(parts, h.dtype)
+    h = h + bk.attn_output(mcfg, lp["attn"], out)
+    xn = cm.rmsnorm(h, lp["norm2"], cfg.norm_eps)
+    h = h + bk.mlp_fwd(mcfg, lp["mlp"], xn)
+    return h, k_new, v_new
+
+
+def draft_head(cfg: ModelConfig, dp: Dict, target_params, h):
+    h = cm.rmsnorm(h, dp["final_norm"], cfg.norm_eps)
+    w = (target_params["embed"].T if cfg.tie_embeddings
+         else target_params["head"])
+    return (h @ w.astype(h.dtype)).astype(jnp.float32)
+
+
+def draft_extend(cfg: ModelConfig, dcfg: DraftConfig, dp: Dict,
+                 target_params, cache: Dict, tokens, fused_feats, valid):
+    """Append accepted tokens to the draft KV cache.
+
+    tokens: [B, E]; fused_feats: [B, E, 3d]; valid: [B, E] prefix mask.
+    Returns (cache, h_last [B, d], logits_last [B, V]) — the hidden/logits
+    at the last valid entry (the root-parent for the next tree draft).
+    """
+    mcfg = draft_model_config(cfg)
+    inv_freq = jnp.asarray(cm.rope_inv_freq(mcfg))
+    mscale = cm.yarn_mscale(mcfg)
+    b, e = tokens.shape
+    x = _draft_inputs(cfg, dp, target_params["embed"], tokens, fused_feats)
+    nvalid = jnp.sum(valid.astype(jnp.int32), axis=1)
+    positions = cache["length"][:, None] + jnp.cumsum(
+        valid.astype(jnp.int32), axis=1) - 1
+    positions = jnp.maximum(positions, 0)
+    s = cache["k"].shape[1]
+    ctx_pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    ctx_valid = ctx_pos < cache["length"][:, None]
+    self_mask = (jnp.tril(jnp.ones((e, e), bool))[None]
+                 & valid[:, None, :] & valid[:, :, None])
+    h, k_new, v_new = _layer_fwd(cfg, mcfg, dp, x, positions, cache["k"],
+                                 cache["v"], ctx_valid, self_mask, inv_freq,
+                                 mscale)
+    # write valid entries into the cache at per-batch offsets
+    def wr(buf, new, off, v):
+        new = jnp.where(v[:, None, None], new.astype(buf.dtype), 0)
+        return jax.lax.dynamic_update_slice(buf, new, (off, 0, 0))
+    cache = dict(cache)
+    cache["k"] = jax.vmap(wr)(cache["k"], k_new, cache["length"], valid)
+    cache["v"] = jax.vmap(wr)(cache["v"], v_new, cache["length"], valid)
+    cache["length"] = cache["length"] + nvalid
+    last = jnp.maximum(nvalid - 1, 0)
+    h_last = jnp.take_along_axis(h, last[:, None, None], axis=1)[:, 0]
+    logits_last = draft_head(cfg, dp, target_params, h_last[:, None])[:, 0]
+    return cache, h_last, logits_last
+
+
+def tree_draft(cfg: ModelConfig, dcfg: DraftConfig, dp: Dict, target_params,
+               cache: Dict, tree: TreeSpec, h_root, logits_root, last_token,
+               sample_key=None, temperature: float = 1.0
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Draft a static tree of candidates (read-only w.r.t. the cache).
+
+    h_root: [B, d] draft hidden at the root parent; logits_root: [B, V].
+    sample_key: when given, children are drawn i.i.d. from the draft
+    distribution (required for lossless stochastic verification); the
+    default is deterministic top-k (greedy mode).
+    Returns (tree_tokens [B, T], node_logits [B, T+1, V] — entry 0 is the
+    root parent's draft logits, entry 1+n node n's; greedy callers may
+    ignore it).
+    """
+    mcfg = draft_model_config(cfg)
+    inv_freq = jnp.asarray(cm.rope_inv_freq(mcfg))
+    mscale = cm.yarn_mscale(mcfg)
+    b = h_root.shape[0]
+    t = tree.size
+    d = cfg.d_model
+    dt = cm.dt(cfg.dtype)
+    s = cache["k"].shape[1]
+    ctx_pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    ctx_valid = ctx_pos < cache["length"][:, None]
+    anc = jnp.asarray(tree.ancestor_mask())
+    root_pos = cache["length"] - 1                        # position of root
+
+    tree_tokens = jnp.zeros((b, t), jnp.int32)
+    tree_logp = jnp.zeros((b, t), jnp.float32)
+    node_h = jnp.zeros((b, t, d), dt)                     # draft hiddens
+    node_k = jnp.zeros((b, t, cfg.num_kv_heads, cfg.head_dim_), dt)
+    node_v = jnp.zeros((b, t, cfg.num_kv_heads, cfg.head_dim_), dt)
+
+    parent_logits = {-1: logits_root}                     # per-node logits
+    parent_h = {-1: h_root}
+    if sample_key is not None:
+        node_keys = jax.random.split(sample_key, t)
+
+    for l, (lo, hi) in enumerate(tree.level_slices):
+        bfac = tree.branch[l]
+        # expand: children = top-b (greedy) or i.i.d. draws (stochastic)
+        new_tokens, new_logp, feats = [], [], []
+        for n in range(lo, hi):
+            p = tree.parents[n]
+            rank = (n - lo) % bfac
+            lg = parent_logits[p]
+            logp = jax.nn.log_softmax(lg, axis=-1)
+            if sample_key is None:
+                topv, topi = jax.lax.top_k(logp, bfac)
+                new_tokens.append(topi[:, rank])
+                new_logp.append(topv[:, rank])
+            else:
+                tok = jax.random.categorical(
+                    node_keys[n], lg / max(temperature, 1e-6), axis=-1
+                ).astype(jnp.int32)
+                new_tokens.append(tok)
+                new_logp.append(jnp.take_along_axis(
+                    logp, tok[:, None], axis=1)[:, 0])
+            feats.append(parent_h[p])
+        toks_l = jnp.stack(new_tokens, axis=1)            # [B, n_l]
+        logp_l = jnp.stack(new_logp, axis=1)
+        feat_l = jnp.stack(feats, axis=1)                 # [B, n_l, d]
+        tree_tokens = jax.lax.dynamic_update_slice(tree_tokens, toks_l,
+                                                   (0, lo))
+        tree_logp = jax.lax.dynamic_update_slice(tree_logp, logp_l, (0, lo))
+
+        # forward the level: input = (emb(token), feature = parent hidden)
+        emb = target_params["embed"][toks_l].astype(dt)
+        fused = jnp.concatenate([feat_l, feat_l, feat_l], axis=-1) @ \
+            dp["fuse"].astype(dt)
+        x = jnp.concatenate([emb, fused], axis=-1) @ dp["in_proj"].astype(dt)
+        positions = (root_pos[:, None] + 1 + l)           # [B, n_l]
+        positions = jnp.broadcast_to(positions, (b, hi - lo))
+        # attention over: draft cache + ancestor nodes drafted so far
+        self_mask = jnp.broadcast_to(anc[None, lo:hi, :], (b, hi - lo, t))
+        node_valid = jnp.arange(t)[None, None, :] < lo    # already computed
+        prev_mask = self_mask & node_valid
+        lp = dp["layer"]
+        xn = cm.rmsnorm(x, lp["norm1"], cfg.norm_eps)
+        q = bk.project_q(mcfg, lp["attn"], xn, positions, inv_freq, mscale)
+        k_new, v_new = bk.project_kv(mcfg, lp["attn"], xn, positions,
+                                     inv_freq, mscale)
+        parts = [cm.dense_attn_part(q, cache["k"], cache["v"],
+                                    mask=ctx_valid[:, None, None, :]),
+                 cm.dense_attn_part(q, node_k, node_v, mask=prev_mask[:, None]),
+                 cm.dense_attn_part(q, k_new, v_new,
+                                    mask=jnp.eye(hi - lo, dtype=bool)[None, None])]
+        out = cm.combine_attn_parts(parts, x.dtype)
+        h = x + bk.attn_output(mcfg, lp["attn"], out)
+        xn = cm.rmsnorm(h, lp["norm2"], cfg.norm_eps)
+        h = h + bk.mlp_fwd(mcfg, lp["mlp"], xn)
+        node_k = jax.lax.dynamic_update_slice(node_k, k_new, (0, lo, 0, 0))
+        node_v = jax.lax.dynamic_update_slice(node_v, v_new, (0, lo, 0, 0))
+        node_h = jax.lax.dynamic_update_slice(node_h, h, (0, lo, 0))
+
+        if l + 1 < tree.depth or sample_key is not None:
+            lg_l = draft_head(cfg, dp, target_params, h)  # [B, n_l, V]
+            for i, n in enumerate(range(lo, hi)):
+                parent_logits[n] = lg_l[:, i]
+                parent_h[n] = h[:, i]
+    if sample_key is not None:
+        # [B, T+1, V]: root parent's draft logits first, then per node
+        node_logits = jnp.stack(
+            [logits_root] + [parent_logits[n] for n in range(t)], axis=1)
+        return tree_tokens, node_logits
+    return tree_tokens, tree_logp

@@ -1,0 +1,445 @@
+"""SpecPV generation engine (paper Algorithm 1).
+
+Host-driven loop (vLLM-style) over jitted step functions:
+
+  prefill (chunked) -> [ draft -> verify(mode) -> accept -> commit ]*
+
+Mode automaton (host side, §3.3):
+  - context below the partial budget        -> Full verification
+  - budget first exceeded                   -> Refresh (full verify +
+                                               partial-cache initialisation)
+  - buffer has room for one more step       -> Partial verification
+  - buffer would overflow                   -> Refresh
+
+State architectures (ssm/hybrid) run chain speculation with native
+(windowed/recurrent) verification — partial verification is inapplicable
+(DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, SpecPVConfig, DraftConfig
+from repro.models import api
+from repro.models import common as cm
+from repro.core import draft as dr
+from repro.core import tree as tr
+from repro.core import verify as vf
+from repro.utils import pytree_dataclass
+from repro.kvcache.offload import TrafficMeter, full_step_bytes, \
+    partial_step_bytes
+
+
+@pytree_dataclass
+class EngineState:
+    cache: Any
+    dcache: Any
+    pkv_k: Any
+    pkv_v: Any
+    pkv_pos: Any
+    buf_len: jax.Array          # [B]
+    pending: jax.Array          # [B, Pmax]
+    pending_len: jax.Array      # [B]
+    seq_len: jax.Array          # [B]
+    ext_tokens: jax.Array       # [B, E]
+    ext_feats: jax.Array        # [B, E, 3d]
+    ext_len: jax.Array          # [B]
+    key: jax.Array              # PRNG key (stochastic mode)
+
+
+@dataclass
+class StepOutput:
+    tokens: np.ndarray          # [B, D+1] accepted tokens (path + bonus)
+    counts: np.ndarray          # [B] number of valid tokens (= accept+1)
+    accept_len: np.ndarray      # [B]
+    mode: str
+
+
+class SpecPVEngine:
+    def __init__(self, cfg: ModelConfig, spec: SpecPVConfig,
+                 dcfg: DraftConfig, params, draft_params, *,
+                 batch: int, max_len: int,
+                 partial_verification: Optional[bool] = None,
+                 draft_chain: Optional[bool] = None,
+                 temperature: float = 0.0):
+        self.cfg = cfg
+        self.spec = spec
+        self.dcfg = dcfg
+        self.params = params
+        self.dparams = draft_params
+        self.batch = batch
+        self.max_len = max_len
+        self.temperature = temperature
+        self.is_attn = cfg.is_attention_arch
+        if partial_verification is None:
+            partial_verification = self.is_attn
+        self.partial_enabled = partial_verification and self.is_attn
+        if draft_chain is None:
+            draft_chain = not self.is_attn
+        branch = ((1,) * dcfg.tree_depth if draft_chain
+                  else dcfg.tree_branch[: dcfg.tree_depth])
+        self.tree = tr.TreeSpec.from_branch(branch)
+        self.pmax = spec.buffer_size            # max pending (refresh input)
+        self.emax = self.tree.max_path          # max draft-extend per step
+        self.traffic = TrafficMeter()
+        self._pkv_active = False
+        self._build_jits()
+
+    # ------------------------------------------------------------------
+    def _build_jits(self):
+        cfg, spec, dcfg, tree = self.cfg, self.spec, self.dcfg, self.tree
+
+        @jax.jit
+        def _prefill_chunk(params, dparams, cache, dcache, tokens,
+                           prev_feat, extra):
+            logits, feats, cache = api.prefill(cfg, params, tokens, cache,
+                                               extra=extra, spec=spec)
+            fused = feats.fused_input()                       # [B, T, 3d]
+            shifted = jnp.concatenate([prev_feat[:, None], fused[:, :-1]],
+                                      axis=1)
+            b, t = tokens.shape
+            valid = jnp.ones((b, t), bool)
+            dcache, h_last, dlogits = dr.draft_extend(
+                cfg, dcfg, dparams, params, dcache, tokens, shifted, valid)
+            return (cache, dcache, logits, fused[:, -1])
+
+        self._prefill_chunk = _prefill_chunk
+
+        sample = self.temperature > 0.0
+
+        def _draft_phase(params, dparams, st: EngineState, draft_key=None):
+            ext_valid = (jnp.arange(self.emax)[None]
+                         < st.ext_len[:, None])
+            dcache, h_root, logits_root = dr.draft_extend(
+                cfg, dcfg, dparams, params, st.dcache, st.ext_tokens,
+                st.ext_feats, ext_valid)
+            last_tok = jnp.take_along_axis(
+                st.ext_tokens, jnp.maximum(st.ext_len - 1, 0)[:, None],
+                axis=1)[:, 0]
+            tree_tokens, aux = dr.tree_draft(
+                cfg, dcfg, dparams, params, dcache, tree, h_root,
+                logits_root, last_tok, sample_key=draft_key,
+                temperature=self.temperature)
+            return dcache, tree_tokens, aux
+
+        def _post_accept(st, vin, out, path, acc, bonus, bonus_parent):
+            """Shared ext-queue + seq_len bookkeeping. Returns pieces."""
+            b = bonus.shape[0]
+            d = tree.depth
+            # accepted path tokens, compacted
+            tree_tokens = vin["tokens"][:, vin["tokens"].shape[1] - tree.size:]
+            path_valid = path >= 0
+            path_toks = jnp.take_along_axis(
+                tree_tokens, jnp.maximum(path, 0), axis=1)
+            path_toks = jnp.where(path_valid, path_toks, 0)
+            # new tokens in order: path (acc) then bonus at slot acc
+            newtoks = jnp.zeros((b, d + 1), jnp.int32)
+            newtoks = newtoks.at[:, :d].set(path_toks)
+            newtoks = jnp.where(
+                jnp.arange(d + 1)[None] == acc[:, None],
+                bonus[:, None], jnp.pad(newtoks[:, : d + 1], ((0, 0), (0, 0))))
+            # ext feats: fused at [root_slot, path_slots[:-1].., bonus_parent]
+            fused = out.features.fused_input()                # [B, S, 3d]
+            path_slots = jnp.where(path_valid,
+                                   vin["node_slots"][:, 0:1] * 0
+                                   + vin["tokens"].shape[1] - tree.size
+                                   + jnp.maximum(path, 0), 0)
+            fslots = jnp.concatenate([vin["root_slot"][:, None], path_slots],
+                                     axis=1)                  # [B, D+1]
+            ext_feats = jnp.take_along_axis(fused, fslots[..., None], axis=1)
+            ext_len = acc + 1
+            seq_len = st.seq_len + acc + 1
+            return newtoks, ext_feats, ext_len, seq_len
+
+        def _step_attn(params, dparams, st: EngineState, *, mode: str):
+            b = self.batch
+            key_draft = key_accept = key_next = st.key
+            if sample:
+                key_draft, key_accept, key_next = jax.random.split(st.key, 3)
+            dcache, tree_tokens, aux = _draft_phase(
+                params, dparams, st, key_draft if sample else None)
+
+            if mode == "partial_verify":
+                xb = jnp.take_along_axis(
+                    st.pending, jnp.maximum(st.pending_len - 1, 0)[:, None],
+                    axis=1)
+                pend_in, plen_in = xb, jnp.ones((b,), jnp.int32)
+            elif mode == "refresh":
+                pend_in, plen_in = st.pending, st.pending_len
+            else:  # full
+                pend_in, plen_in = st.pending[:, :1], jnp.ones((b,), jnp.int32)
+
+            vin = vf.build_verify_inputs(tree, pend_in, plen_in, tree_tokens,
+                                         st.seq_len)
+            want_refresh = mode in ("refresh", "init_partial")
+            out = api.decode(
+                cfg, params, vin["tokens"], vin["positions"], st.cache,
+                mode=("partial" if mode == "partial_verify" else "full"),
+                self_mask=vin["self_mask"],
+                pkv=(st.pkv_k, st.pkv_v, st.pkv_pos),
+                spec=spec, emit_queries=want_refresh)
+
+            if sample:
+                from repro.core.sampling import tree_speculative_sample
+                path, acc, bonus = tree_speculative_sample(
+                    tree, tree_tokens, aux, out.logits, vin["root_slot"],
+                    vin["node_slots"], key_accept,
+                    temperature=self.temperature)
+                bonus_parent = vin["root_slot"]
+            else:
+                path, acc, bonus, bonus_parent = tr.greedy_tree_accept(
+                    tree, tree_tokens, out.logits, vin["root_slot"],
+                    vin["node_slots"])
+            newtoks, ext_feats, ext_len, seq_len = _post_accept(
+                st, vin, out, path, acc, bonus, bonus_parent)
+
+            p_in = pend_in.shape[1]
+            slots, slot_valid = vf.commit_slots(tree, vin["pend_valid"],
+                                                path, p_in)
+            ck, cv = vf.gather_new_kv(out.new_kv, slots, slot_valid)
+            count = plen_in + acc
+
+            cache = st.cache
+            pkv_k, pkv_v, pkv_pos = st.pkv_k, st.pkv_v, st.pkv_pos
+            buf_len = st.buf_len
+            if mode == "partial_verify":
+                cpos = jnp.take_along_axis(vin["positions"], slots, axis=1)
+                pkv_k, pkv_v, pkv_pos, buf_len = vf.append_buffer(
+                    pkv_k, pkv_v, pkv_pos, spec.partial_budget_tokens,
+                    buf_len, ck, cv, cpos, count)
+                pending = jax.vmap(
+                    lambda p_, n_, o_: jax.lax.dynamic_update_slice(
+                        p_, n_, (o_,)))(st.pending, newtoks, st.pending_len)
+                pending_len = st.pending_len + acc + 1
+            else:
+                cache = vf.append_full_cache(cache, ck, cv, count, spec)
+                if want_refresh:
+                    # weight = valid pending + accepted nodes
+                    t = tree.size
+                    node_w = jnp.zeros((b, t))
+                    node_w = jnp.where(
+                        (jnp.arange(t)[None, None, :]
+                         == jnp.maximum(path, 0)[:, :, None])
+                        & (path >= 0)[:, :, None], 1.0, 0.0).sum(1)
+                    qw = jnp.concatenate(
+                        [vin["pend_valid"].astype(jnp.float32), node_w],
+                        axis=1)
+                    pk, pv, ppos = vf.refresh_partial_from_queries(
+                        cfg, spec, out.queries, qw, cache)
+                    pad = spec.buffer_size
+                    pkv_k = jnp.pad(pk, ((0, 0), (0, 0), (0, 0), (0, pad),
+                                         (0, 0)))
+                    pkv_v = jnp.pad(pv, ((0, 0), (0, 0), (0, 0), (0, pad),
+                                         (0, 0)))
+                    pkv_pos = jnp.pad(ppos, ((0, 0), (0, 0), (0, 0),
+                                             (0, pad)), constant_values=-1)
+                    buf_len = jnp.zeros((b,), jnp.int32)
+                pending = jnp.zeros_like(st.pending)
+                pending = pending.at[:, 0].set(bonus)
+                pending_len = jnp.ones((b,), jnp.int32)
+
+            st2 = EngineState(
+                cache=cache, dcache=dcache, pkv_k=pkv_k, pkv_v=pkv_v,
+                pkv_pos=pkv_pos, buf_len=buf_len, pending=pending,
+                pending_len=pending_len, seq_len=seq_len,
+                ext_tokens=newtoks, ext_feats=ext_feats, ext_len=ext_len,
+                key=key_next)
+            return st2, (newtoks, acc + 1, acc)
+
+        def _step_state(params, dparams, st: EngineState):
+            b = self.batch
+            key_draft = key_accept = key_next = st.key
+            if sample:
+                key_draft, key_accept, key_next = jax.random.split(st.key, 3)
+            dcache, tree_tokens, aux = _draft_phase(
+                params, dparams, st, key_draft if sample else None)
+            pend_in = st.pending[:, :1]
+            plen_in = jnp.ones((b,), jnp.int32)
+            vin = vf.build_verify_inputs(tree, pend_in, plen_in, tree_tokens,
+                                         st.seq_len)
+            out = api.decode(cfg, params, vin["tokens"], vin["positions"],
+                             st.cache, self_mask=vin["self_mask"], spec=spec)
+            if sample:
+                from repro.core.sampling import tree_speculative_sample
+                path, acc, bonus = tree_speculative_sample(
+                    tree, tree_tokens, aux, out.logits, vin["root_slot"],
+                    vin["node_slots"], key_accept,
+                    temperature=self.temperature)
+                bonus_parent = vin["root_slot"]
+            else:
+                path, acc, bonus, bonus_parent = tr.greedy_tree_accept(
+                    tree, tree_tokens, out.logits, vin["root_slot"],
+                    vin["node_slots"])
+            newtoks, ext_feats, ext_len, seq_len = _post_accept(
+                st, vin, out, path, acc, bonus, bonus_parent)
+            # advance state with [x_b] ++ accepted path (valid = 1 + acc)
+            adv_toks = jnp.concatenate([pend_in, jnp.where(
+                path >= 0, jnp.take_along_axis(tree_tokens,
+                                               jnp.maximum(path, 0), axis=1),
+                0)], axis=1)
+            adv_valid = (jnp.arange(1 + tree.depth)[None]
+                         < (1 + acc)[:, None])
+            cache = api.advance(cfg, params, adv_toks, st.cache, adv_valid)
+            pending = jnp.zeros_like(st.pending)
+            pending = pending.at[:, 0].set(bonus)
+            st2 = EngineState(
+                cache=cache, dcache=dcache, pkv_k=st.pkv_k, pkv_v=st.pkv_v,
+                pkv_pos=st.pkv_pos, buf_len=st.buf_len, pending=pending,
+                pending_len=jnp.ones((b,), jnp.int32), seq_len=seq_len,
+                ext_tokens=newtoks, ext_feats=ext_feats, ext_len=ext_len,
+                key=key_next)
+            return st2, (newtoks, acc + 1, acc)
+
+        if self.is_attn:
+            self._step_full = jax.jit(functools.partial(_step_attn,
+                                                        mode="full"))
+            self._step_refresh = jax.jit(functools.partial(_step_attn,
+                                                           mode="refresh"))
+            self._step_partial = jax.jit(
+                functools.partial(_step_attn, mode="partial_verify"))
+        else:
+            self._step_state = jax.jit(_step_state)
+
+    # ------------------------------------------------------------------
+    def prefill(self, prompt: np.ndarray, chunk: int = 256,
+                extra: Optional[Dict] = None) -> EngineState:
+        cfg, spec = self.cfg, self.spec
+        b, s0 = prompt.shape
+        assert b == self.batch
+        cache = api.init_cache(cfg, b, self.max_len, spec)
+        dcache = dr.init_draft_cache(cfg, b, self.max_len)
+        prev_feat = jnp.zeros((b, 3 * cfg.d_model), cm.dt(cfg.dtype))
+        logits_last = None
+        for off in range(0, s0, chunk):
+            toks = jnp.asarray(prompt[:, off: off + chunk])
+            cache, dcache, logits_last, prev_feat = self._prefill_chunk(
+                self.params, self.dparams, cache, dcache, toks, prev_feat,
+                extra)
+        if self.temperature > 0:
+            bonus0 = jax.random.categorical(
+                jax.random.PRNGKey(11),
+                logits_last / self.temperature, axis=-1).astype(jnp.int32)
+        else:
+            bonus0 = jnp.argmax(logits_last, axis=-1).astype(jnp.int32)
+
+        pend = jnp.zeros((b, self.pmax), jnp.int32).at[:, 0].set(bonus0)
+        ext_tokens = jnp.zeros((b, self.emax), jnp.int32).at[:, 0].set(bonus0)
+        ext_feats = jnp.zeros((b, self.emax, 3 * cfg.d_model),
+                              cm.dt(cfg.dtype)).at[:, 0].set(prev_feat)
+        hk, dh = cfg.num_kv_heads, cfg.head_dim_
+        if self.is_attn:
+            from repro.models.dense import attn_layer_count
+            l_attn = attn_layer_count(cfg.layer_kinds())
+            p_slots = spec.partial_budget_tokens + spec.buffer_size
+            pkv_k = jnp.zeros((l_attn, b, hk, p_slots, dh), cm.dt(cfg.dtype))
+            pkv_v = jnp.zeros_like(pkv_k)
+            pkv_pos = jnp.full((l_attn, b, hk, p_slots), -1, jnp.int32)
+        else:
+            pkv_k = pkv_v = pkv_pos = jnp.zeros((0,))
+        self._pkv_active = False
+        ones = jnp.ones((b,), jnp.int32)
+        return EngineState(
+            cache=cache, dcache=dcache, pkv_k=pkv_k, pkv_v=pkv_v,
+            pkv_pos=pkv_pos, buf_len=0 * ones, pending=pend,
+            pending_len=ones, seq_len=(s0 + 1) * ones,
+            ext_tokens=ext_tokens, ext_feats=ext_feats, ext_len=ones,
+            key=jax.random.PRNGKey(17))
+
+    # ------------------------------------------------------------------
+    def select_mode(self, pending_len_max: int, seq_len_min: int) -> str:
+        if not self.is_attn:
+            return "state"
+        if not self.partial_enabled:
+            return "full"
+        if seq_len_min <= self.spec.partial_budget_tokens:
+            return "full"
+        if not self._pkv_active:
+            return "refresh"
+        if (pending_len_max - 1 + self.tree.max_path
+                + self.spec.refresh_margin // 4 > self.spec.buffer_size):
+            return "refresh"
+        return "partial"
+
+    def step(self, st: EngineState, mode: str) -> Tuple[EngineState,
+                                                        StepOutput]:
+        if mode == "state":
+            st, (toks, counts, acc) = self._step_state(self.params,
+                                                       self.dparams, st)
+        elif mode == "full":
+            st, (toks, counts, acc) = self._step_full(self.params,
+                                                      self.dparams, st)
+        elif mode == "refresh":
+            st, (toks, counts, acc) = self._step_refresh(self.params,
+                                                         self.dparams, st)
+            self._pkv_active = True
+        elif mode == "partial":
+            st, (toks, counts, acc) = self._step_partial(self.params,
+                                                         self.dparams, st)
+        else:
+            raise ValueError(mode)
+        self._record_traffic(mode, st)
+        return st, StepOutput(tokens=np.asarray(toks),
+                              counts=np.asarray(counts),
+                              accept_len=np.asarray(acc), mode=mode)
+
+    def _record_traffic(self, mode: str, st: EngineState):
+        cfg, spec = self.cfg, self.spec
+        if not self.is_attn:
+            return
+        from repro.models.dense import attn_layer_count
+        l_attn = attn_layer_count(cfg.layer_kinds())
+        itemsize = 2 if cfg.dtype == "bfloat16" else 4
+        seq = int(np.max(np.asarray(st.seq_len)))
+        if mode == "partial":
+            nbytes = partial_step_bytes(
+                l_attn, self.batch,
+                spec.partial_budget_tokens + spec.buffer_size,
+                cfg.num_kv_heads, cfg.head_dim_, itemsize)
+        else:
+            nbytes = full_step_bytes(l_attn, self.batch, seq,
+                                     cfg.num_kv_heads, cfg.head_dim_,
+                                     itemsize)
+        self.traffic.record(mode, nbytes)
+
+    # ------------------------------------------------------------------
+    def generate(self, prompt: np.ndarray, max_new_tokens: int,
+                 eos_id: int = -1, prefill_chunk: int = 256,
+                 extra: Optional[Dict] = None):
+        """Greedy SpecPV generation.  Returns (tokens [B, <=max_new],
+        stats dict)."""
+        st = self.prefill(prompt, chunk=prefill_chunk, extra=extra)
+        b = self.batch
+        out: List[List[int]] = [[int(np.asarray(st.pending[i, 0]))]
+                                for i in range(b)]
+        pending_max, seq_min = 1, int(np.min(np.asarray(st.seq_len)))
+        accepts: List[int] = []
+        modes: List[str] = []
+        steps = 0
+        while min(len(o) for o in out) < max_new_tokens:
+            mode = self.select_mode(pending_max, seq_min)
+            st, so = self.step(st, mode)
+            steps += 1
+            modes.append(mode)
+            accepts.extend(so.accept_len.tolist())
+            for i in range(b):
+                cnt = int(so.counts[i])
+                out[i].extend(int(x) for x in so.tokens[i, :cnt])
+            pending_max = int(np.max(np.asarray(st.pending_len)))
+            seq_min = int(np.min(np.asarray(st.seq_len)))
+            if eos_id >= 0 and all(eos_id in o for o in out):
+                break
+        toks = np.full((b, max_new_tokens), -1, np.int64)
+        for i in range(b):
+            n = min(len(out[i]), max_new_tokens)
+            toks[i, :n] = out[i][:n]
+        stats = dict(steps=steps, mean_accept=float(np.mean(accepts)),
+                     modes={m: modes.count(m) for m in set(modes)},
+                     tokens_per_step=float(np.mean(
+                         [len(o) for o in out]) / max(steps, 1)))
+        return toks, stats

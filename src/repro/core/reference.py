@@ -1,0 +1,53 @@
+"""Reference generators: plain autoregressive decoding (the paper's
+baseline denominator) used for losslessness tests and speedup accounting.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, SpecPVConfig
+from repro.models import api
+from repro.core import verify as vf
+
+
+def autoregressive_generate(cfg: ModelConfig, params, prompt: np.ndarray,
+                            max_new_tokens: int, *, max_len: int,
+                            extra: Optional[Dict] = None,
+                            prefill_chunk: int = 256,
+                            spec: Optional[SpecPVConfig] = None):
+    """Greedy AR decoding.  Returns tokens [B, max_new]."""
+    spec = spec or SpecPVConfig()
+    b, s0 = prompt.shape
+    cache = api.init_cache(cfg, b, max_len, spec)
+    logits = None
+    for off in range(0, s0, prefill_chunk):
+        toks = jnp.asarray(prompt[:, off: off + prefill_chunk])
+        logits, _, cache = api.prefill(cfg, params, toks, cache, extra=extra,
+                                       spec=spec)
+    cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out = [np.asarray(cur)]
+    is_attn = cfg.is_attention_arch
+
+    @jax.jit
+    def step(params, cache, cur):
+        pos = cache["length"][:, None]
+        o = api.decode(cfg, params, cur[:, None], pos, cache, mode="full",
+                       spec=spec)
+        nxt = jnp.argmax(o.logits[:, 0], axis=-1).astype(jnp.int32)
+        if is_attn:
+            ck, cv = o.new_kv
+            cache = vf.append_full_cache(cache, ck, cv,
+                                         jnp.ones((b,), jnp.int32), spec)
+        else:
+            cache = api.advance(cfg, params, cur[:, None],
+                                cache, jnp.ones((b, 1), bool))
+        return cache, nxt
+
+    for _ in range(max_new_tokens - 1):
+        cache, cur = step(params, cache, cur)
+        out.append(np.asarray(cur))
+    return np.stack(out, axis=1)

@@ -1,0 +1,110 @@
+"""Exact speculative sampling over draft trees (SpecInfer-style
+multi-round rejection; Leviathan et al. for chains).
+
+The paper evaluates at temperature 0 (greedy), where acceptance reduces to
+argmax matching (core/tree.py).  This module adds the temperature > 0
+case with the *losslessness guarantee*: the emitted token at every
+position is distributed exactly as a sample from the target distribution,
+regardless of draft quality.
+
+Per node with candidate children c_1..c_k (tokens drawn i.i.d. from the
+parent's draft distribution q — stochastic mode requires *sampled* drafts,
+see ``tree_draft(sample_key=...)``):
+
+  for i = 1..k:   accept c_i with prob min(1, p(t_i)/q(t_i));
+                  on accept -> recurse into c_i
+                  on reject -> p <- normalize(max(p - q, 0))
+  if none accepted -> emit bonus ~ p (the residual distribution)
+
+(SpecInfer's multi-round rejection; preserves the target distribution for
+i.i.d. q-samples.  Deterministic top-k drafts do NOT carry the guarantee
+— that is what greedy temperature-0 acceptance is for.)
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tree import TreeSpec
+
+
+def _norm(p):
+    return p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+
+
+def tree_speculative_sample(tree: TreeSpec, tree_tokens, draft_logits,
+                            target_logits, root_slot, node_slots, key,
+                            temperature: float = 1.0):
+    """Stochastic tree verification.
+
+    tree_tokens:   [B, T] candidate tokens
+    draft_logits:  [B, T+1, V] draft distributions — entry 0 is the root
+                   parent's draft distribution, entry 1+n is node n's
+                   (used when recursing into n's children)
+    target_logits: [B, S, V] verify logits over the whole input
+    root_slot:     [B] input slot of the root parent
+    node_slots:    [B, T] input slots of the tree nodes
+
+    Returns (path [B, depth] node ids (-1 padded), accept_len [B],
+             bonus [B]).
+    """
+    b, t = tree_tokens.shape
+    v = target_logits.shape[-1]
+    temp = max(temperature, 1e-6)
+    p_all = jax.nn.softmax(target_logits.astype(jnp.float32) / temp, -1)
+    q_all = jax.nn.softmax(draft_logits.astype(jnp.float32) / temp, -1)
+
+    # children-of lists are static
+    children = {pid: [n for n in range(t) if tree.parents[n] == pid]
+                for pid in [-1] + list(range(t))}
+
+    def per_batch(tokens_b, p_b, q_b, root_slot_b, node_slots_b, key_b):
+        # p at the current parent (starts at the root parent's slot)
+        p_cur = p_b[root_slot_b]                          # [V]
+        q_cur = q_b[0]
+        path = jnp.full((tree.depth,), -1, jnp.int32)
+        accept_len = jnp.zeros((), jnp.int32)
+        done = jnp.zeros((), bool)
+        cur = -1                                          # current parent id
+        keys = jax.random.split(key_b, tree.size + 1)
+        ki = 0
+        # static walk: at each level, try the current parent's children in
+        # order.  `cur` is traced, so we iterate over ALL nodes per level
+        # and mask (tree sizes are small).
+        for level in range(tree.depth):
+            lo, hi = tree.level_slices[level]
+            accepted_this = jnp.zeros((), bool)
+            for n in range(lo, hi):
+                is_child = (jnp.asarray(tree.parents[n]) == cur)
+                tok = tokens_b[n]
+                ratio = p_cur[tok] / jnp.maximum(q_cur[tok], 1e-30)
+                u = jax.random.uniform(keys[ki])
+                ki += 1
+                try_this = is_child & ~accepted_this & ~done
+                accept = try_this & (u < ratio)
+                # on accept: move to node n
+                path = jnp.where(accept, path.at[level].set(n), path)
+                accept_len = jnp.where(accept, level + 1, accept_len)
+                cur = jnp.where(accept, n, cur)
+                new_p = p_b[node_slots_b[n]]
+                new_q = q_b[1 + n]
+                p_next = jnp.where(accept, new_p, p_cur)
+                q_next = jnp.where(accept, new_q, q_cur)
+                # on reject: residual update (q unchanged — i.i.d. draws)
+                rej = try_this & ~accept
+                p_res = _norm(jnp.maximum(p_cur - q_cur, 0.0))
+                p_cur = jnp.where(rej, p_res, p_next)
+                q_cur = jnp.where(accept, q_next, q_cur)
+                accepted_this = accepted_this | accept
+            done = done | ~accepted_this
+        # bonus from the final p_cur (target dist at deepest accepted node,
+        # or the fully-rejected residual)
+        bonus = jax.random.categorical(keys[-1], jnp.log(
+            jnp.maximum(p_cur, 1e-30)))
+        return path, accept_len, bonus.astype(jnp.int32)
+
+    keys = jax.random.split(key, b)
+    return jax.vmap(per_batch)(tree_tokens, p_all, q_all, root_slot,
+                               node_slots, keys)

@@ -1,0 +1,188 @@
+"""Static draft-tree topology + tree acceptance.
+
+The tree is defined by per-level branching factors (EAGLE-style static
+tree; dynamic trees are an orthogonal extension).  Node 0..T-1 are laid out
+level by level; level l has prod(branch[:l+1]) nodes.  The *root parent*
+(the last accepted token, whose logits decide level-0 acceptance) is NOT a
+node — level-0 nodes have parent = -1.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class TreeSpec:
+    branch: Tuple[int, ...]
+    parents: Tuple[int, ...]        # -1 for level-0 nodes
+    depths: Tuple[int, ...]
+    level_slices: Tuple[Tuple[int, int], ...]   # [start, end) per level
+
+    @property
+    def size(self) -> int:
+        return len(self.parents)
+
+    @property
+    def depth(self) -> int:
+        return len(self.branch)
+
+    @property
+    def max_path(self) -> int:
+        """Maximum accepted tokens per verify step (path + bonus)."""
+        return self.depth + 1
+
+    @classmethod
+    def from_branch(cls, branch: Tuple[int, ...]) -> "TreeSpec":
+        parents, depths, slices = [], [], []
+        prev_level: list = [-1]
+        start = 0
+        for l, b in enumerate(branch):
+            cur = []
+            for p in prev_level:
+                for _ in range(b):
+                    cur.append(len(parents))
+                    parents.append(p)
+                    depths.append(l)
+            slices.append((start, start + len(cur)))
+            start += len(cur)
+            prev_level = cur
+        return cls(branch=tuple(branch), parents=tuple(parents),
+                   depths=tuple(depths), level_slices=tuple(slices))
+
+    def ancestor_mask(self) -> np.ndarray:
+        """[T, T] bool — mask[i, j] = node j is an ancestor of i or i==j."""
+        t = self.size
+        m = np.zeros((t, t), dtype=bool)
+        for i in range(t):
+            j = i
+            while j != -1:
+                m[i, j] = True
+                j = self.parents[j]
+        return m
+
+    def parents_arr(self) -> np.ndarray:
+        return np.asarray(self.parents, np.int32)
+
+    def depths_arr(self) -> np.ndarray:
+        return np.asarray(self.depths, np.int32)
+
+
+def greedy_tree_accept(tree: TreeSpec, tree_tokens, logits, root_slot,
+                       input_slots):
+    """Greedy (temperature-0) tree acceptance.
+
+    tree_tokens: [B, T] candidate tokens (tree layout)
+    logits:      [B, S, V] verify logits over the whole verify input
+    root_slot:   [B] input slot of the root parent (last accepted token)
+    input_slots: [B, T] input slot of each tree node in the verify input
+
+    Returns (path_nodes [B, D] node-ids padded with -1, accept_len [B],
+             bonus [B] next token, bonus_parent_slot [B]).
+    """
+    b, t = tree_tokens.shape
+    argmax = jnp.argmax(logits, axis=-1)                  # [B, S]
+    root_pred = jnp.take_along_axis(argmax, root_slot[:, None], axis=1)[:, 0]
+
+    parents = jnp.asarray(tree.parents_arr())
+    parents_b = jnp.broadcast_to(jnp.maximum(parents, 0)[None], (b, t))
+    # prediction at each node's parent
+    parent_slot = jnp.where(parents[None] >= 0,
+                            jnp.take_along_axis(input_slots, parents_b,
+                                                axis=1),
+                            root_slot[:, None])           # [B, T]
+    pred_at_parent = jnp.take_along_axis(argmax, parent_slot, axis=1)
+    match = tree_tokens == pred_at_parent                 # [B, T]
+
+    # ok[n] = match[n] & ok[parent]; static topological loop
+    ok_cols = []
+    for n in range(t):
+        p = tree.parents[n]
+        ok_n = match[:, n] if p < 0 else (match[:, n] & ok_cols[p])
+        ok_cols.append(ok_n)
+    ok = jnp.stack(ok_cols, axis=1)                       # [B, T]
+
+    # deepest accepted node (at most one per depth since argmax is unique)
+    depths = jnp.asarray(tree.depths_arr())
+    node_score = jnp.where(ok, depths[None] + 1, 0)       # accepted depth+1
+    best = jnp.argmax(node_score, axis=1)                 # [B]
+    accept_len = jnp.max(node_score, axis=1)              # [B] 0..depth
+
+    # path from best: walk parents (static depth loop)
+    d = tree.depth
+    path = jnp.full((b, d), -1, jnp.int32)
+    cur = jnp.where(accept_len > 0, best.astype(jnp.int32), -1)
+    for level in range(d - 1, -1, -1):
+        at_level = (cur >= 0) & (jnp.take(depths, jnp.maximum(cur, 0)) == level)
+        path = path.at[:, level].set(jnp.where(at_level, cur, path[:, level]))
+        cur = jnp.where(at_level, jnp.take(parents, jnp.maximum(cur, 0)), cur)
+
+    # bonus: argmax at deepest accepted node (or root parent if none)
+    bonus_parent = jnp.where(
+        accept_len > 0,
+        jnp.take_along_axis(input_slots, jnp.maximum(best, 0)[:, None],
+                            axis=1)[:, 0],
+        root_slot)
+    bonus = jnp.take_along_axis(argmax, bonus_parent[:, None], axis=1)[:, 0]
+    return path, accept_len, bonus, bonus_parent
+
+
+def chain_accept_greedy(chain_tokens, logits, root_slot, input_slots):
+    """Greedy acceptance for a chain draft (branch = 1 everywhere).
+
+    chain_tokens: [B, T]; logits: [B, S, V]; slots as in tree acceptance.
+    Returns (accept_len [B], bonus [B], bonus_parent_slot [B]).
+    """
+    b, t = chain_tokens.shape
+    argmax = jnp.argmax(logits, axis=-1)
+    prev_slots = jnp.concatenate([root_slot[:, None], input_slots[:, :-1]],
+                                 axis=1)                  # [B, T]
+    pred = jnp.take_along_axis(argmax, prev_slots, axis=1)
+    match = chain_tokens == pred
+    acc = jnp.cumprod(match.astype(jnp.int32), axis=1)
+    accept_len = jnp.sum(acc, axis=1)                     # [B]
+    bonus_parent = jnp.where(
+        accept_len > 0,
+        jnp.take_along_axis(input_slots,
+                            jnp.maximum(accept_len - 1, 0)[:, None],
+                            axis=1)[:, 0],
+        root_slot)
+    bonus = jnp.take_along_axis(argmax, bonus_parent[:, None], axis=1)[:, 0]
+    return accept_len, bonus, bonus_parent
+
+
+def chain_accept_sampling(chain_tokens, draft_logprobs, logits, root_slot,
+                          input_slots, key, temperature: float = 1.0):
+    """Stochastic (lossless) speculative sampling for a chain draft
+    (Leviathan et al. 2023).  draft_logprobs: [B, T] log q(token_i).
+    Returns (accept_len, bonus, bonus_parent_slot)."""
+    b, t = chain_tokens.shape
+    logp = jax.nn.log_softmax(logits / max(temperature, 1e-6), axis=-1)
+    prev_slots = jnp.concatenate([root_slot[:, None], input_slots[:, :-1]],
+                                 axis=1)
+    p_tok = jnp.take_along_axis(
+        jnp.take_along_axis(logp, prev_slots[..., None], axis=1)
+        .reshape(b, t, -1),
+        chain_tokens[..., None], axis=-1)[..., 0]         # [B, T] log p
+    u = jnp.log(jnp.maximum(jax.random.uniform(key, (b, t)), 1e-30))
+    ok = u < (p_tok - draft_logprobs)                     # accept if u < p/q
+    acc = jnp.cumprod(ok.astype(jnp.int32), axis=1)
+    accept_len = jnp.sum(acc, axis=1)
+    bonus_parent = jnp.where(
+        accept_len > 0,
+        jnp.take_along_axis(input_slots,
+                            jnp.maximum(accept_len - 1, 0)[:, None],
+                            axis=1)[:, 0],
+        root_slot)
+    # residual sampling at the rejection point is approximated by sampling
+    # the target distribution at the bonus parent (exact for greedy; the
+    # full residual-correction variant is in repro/core/sampling.py)
+    gumbel = jax.random.gumbel(key, logp.shape[-1:])
+    bonus_logits = jnp.take_along_axis(
+        logp, bonus_parent[:, None, None], axis=1)[:, 0]
+    bonus = jnp.argmax(bonus_logits + gumbel[None], axis=-1)
+    return accept_len, bonus.astype(jnp.int32), bonus_parent

@@ -1,0 +1,191 @@
+"""Verification-step plumbing: input assembly, cache commits, buffer
+writes, and the post-commit partial refresh (paper §3.2-3.3).
+
+Verify-input layout (attention archs):
+
+  full/partial step:   [ x_b | tree nodes ]                (S = 1 + T)
+  refresh step:        [ pending (padded to Pmax) | tree ] (S = Pmax + T)
+
+``pending`` are accepted tokens whose exact full-context KV is not in the
+full cache yet (all tokens accepted under partial verification since the
+last refresh, ending with the newest bonus x_b).  The pkv *buffer* holds
+the approximate KV of pending[:-1].
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SpecPVConfig
+from repro.core.tree import TreeSpec
+from repro.models.dense import quest_block_scores, select_and_gather_partial
+from repro.kvcache.cache import update_layer_summaries
+
+
+# ---------------------------------------------------------------------------
+# input assembly
+# ---------------------------------------------------------------------------
+
+def build_verify_inputs(tree: TreeSpec, pending, pending_len, tree_tokens,
+                        seq_len):
+    """Assemble the verify input for a step.
+
+    pending: [B, P] left-aligned tokens (P = 1 for full/partial steps);
+    pending_len: [B] valid count (>= 1); tree_tokens: [B, T];
+    seq_len: [B] total accepted tokens so far (prompt + generated).
+
+    Returns dict with tokens [B,S], positions [B,S], self_mask [B,S,S],
+    q_valid [B,S], root_slot [B], node_slots [B,T].
+    """
+    b, p = pending.shape
+    t = tree.size
+    s = p + t
+    tokens = jnp.concatenate([pending, tree_tokens], axis=1)
+
+    pend_valid = jnp.arange(p)[None] < pending_len[:, None]       # [B, P]
+    valid = jnp.concatenate([pend_valid,
+                             jnp.ones((b, t), bool)], axis=1)     # [B, S]
+
+    # positions: pending token i sits at seq_len - pending_len + i;
+    # tree node n sits at seq_len + depth(n)
+    pend_pos = seq_len[:, None] - pending_len[:, None] + jnp.arange(p)[None]
+    depths = jnp.asarray(tree.depths_arr())
+    node_pos = seq_len[:, None] + depths[None]
+    positions = jnp.concatenate([pend_pos, node_pos], axis=1)
+    positions = jnp.maximum(positions, 0)
+
+    # self mask
+    anc = jnp.asarray(tree.ancestor_mask())                       # [T, T]
+    m = jnp.zeros((b, s, s), bool)
+    causal_pp = (jnp.arange(p)[None, :, None] >= jnp.arange(p)[None, None, :])
+    m = m.at[:, :p, :p].set(causal_pp & pend_valid[:, None, :]
+                            & pend_valid[:, :, None])
+    m = m.at[:, p:, :p].set(pend_valid[:, None, :])               # tree->pend
+    m = m.at[:, p:, p:].set(jnp.broadcast_to(anc[None], (b, t, t)))
+
+    root_slot = pending_len - 1                                   # [B]
+    node_slots = jnp.broadcast_to(p + jnp.arange(t)[None], (b, t))
+    return dict(tokens=tokens, positions=positions, self_mask=m,
+                q_valid=valid, root_slot=root_slot, node_slots=node_slots,
+                pend_valid=pend_valid)
+
+
+def commit_slots(tree: TreeSpec, pend_valid, path_nodes, p: int):
+    """Input slots to commit, compacted: valid pending first, then the
+    accepted path.  Returns (slots [B, P+D], slot_valid [B, P+D])."""
+    b = pend_valid.shape[0]
+    d = tree.depth
+    path_valid = path_nodes >= 0
+    path_slots = p + jnp.maximum(path_nodes, 0)
+    slots = jnp.concatenate(
+        [jnp.broadcast_to(jnp.arange(p)[None], (b, p)), path_slots], axis=1)
+    valid = jnp.concatenate([pend_valid, path_valid], axis=1)
+    # stable compaction: valid entries to the front, order preserved
+    order = jnp.argsort(jnp.where(valid, 0, 1), axis=1, stable=True)
+    slots = jnp.take_along_axis(slots, order, axis=1)
+    valid = jnp.take_along_axis(valid, order, axis=1)
+    return slots, valid
+
+
+# ---------------------------------------------------------------------------
+# commits
+# ---------------------------------------------------------------------------
+
+def gather_new_kv(new_kv, slots, slot_valid):
+    """new_kv: (k, v) [L, B, S, Hk, Dh]; slots: [B, W] -> [L, B, W, Hk, Dh].
+    Invalid slots are zeroed (they land beyond the committed length)."""
+    k, v = new_kv
+    idx = slots[None, :, :, None, None]
+    msk = slot_valid[None, :, :, None, None]
+
+    def g(a):
+        out = jnp.take_along_axis(
+            a, jnp.broadcast_to(idx, (a.shape[0], a.shape[1], slots.shape[1],
+                                      a.shape[3], a.shape[4])), axis=2)
+        return jnp.where(msk, out, 0)
+    return g(k), g(v)
+
+
+def append_full_cache(cache: Dict, ck, cv, count, spec: SpecPVConfig):
+    """Append compacted committed KV to the full cache + summaries.
+
+    ck/cv: [L, B, W, Hk, Dh]; count: [B] valid entries (prefix)."""
+    length = cache["length"]
+
+    def write_one(buf, new, off):        # [S,Hk,Dh], [W,Hk,Dh]
+        return jax.lax.dynamic_update_slice(buf, new.astype(buf.dtype),
+                                            (off, 0, 0))
+
+    def write_layer(buf_l, new_l):       # [B,S,Hk,Dh], [B,W,Hk,Dh]
+        return jax.vmap(write_one)(buf_l, new_l, length)
+
+    cache = dict(cache)
+    cache["k"] = jax.vmap(write_layer)(cache["k"], ck)
+    cache["v"] = jax.vmap(write_layer)(cache["v"], cv)
+    new_len = length + count
+    nkmax, nkmin = jax.vmap(
+        lambda kx, kn, kl: update_layer_summaries(kx, kn, kl, length,
+                                                  new_len, spec.block_size)
+    )(cache["kmax"], cache["kmin"], cache["k"])
+    cache["kmax"] = nkmax
+    cache["kmin"] = nkmin
+    cache["length"] = new_len
+    return cache
+
+
+def append_buffer(pkv_k, pkv_v, pkv_pos, body_len: int, buf_len, ck, cv,
+                  positions, count):
+    """Write committed approximate KV into the pkv buffer region.
+
+    pkv_*: [L, B, Hk, P, Dh]; ck/cv: [L, B, W, Hk, Dh];
+    positions: [B, W] absolute positions of committed tokens;
+    body_len: static partial-body slot count; buf_len/count: [B]."""
+    ckh = jnp.moveaxis(ck, 3, 2)                          # [L, B, Hk, W, Dh]
+    cvh = jnp.moveaxis(cv, 3, 2)
+    w = ck.shape[2]
+    off = body_len + buf_len                              # [B]
+
+    def one(buf, new, o):                                 # [Hk,P,Dh],[Hk,W,Dh]
+        return jax.lax.dynamic_update_slice(buf, new.astype(buf.dtype),
+                                            (0, o, 0))
+    def per_layer(buf_l, new_l):
+        return jax.vmap(one)(buf_l, new_l, off)
+
+    pkv_k = jax.vmap(per_layer)(pkv_k, ckh)
+    pkv_v = jax.vmap(per_layer)(pkv_v, cvh)
+    # positions: same for every layer/head; invalid entries -> -1
+    posw = jnp.where(jnp.arange(w)[None] < count[:, None], positions, -1)
+
+    def pos_one(buf, new, o):                             # [Hk,P],[Hk,W]
+        return jax.lax.dynamic_update_slice(buf, new, (0, o))
+    l_, b_, hk = pkv_pos.shape[:3]
+    posw_h = jnp.broadcast_to(posw[:, None, :], (b_, hk, w))
+    pkv_pos = jax.vmap(lambda buf_l: jax.vmap(pos_one)(buf_l, posw_h, off)
+                       )(pkv_pos)
+    return pkv_k, pkv_v, pkv_pos, buf_len + count
+
+
+def refresh_partial_from_queries(cfg: ModelConfig, spec: SpecPVConfig,
+                                 queries, q_weight, cache: Dict):
+    """Post-commit retrieval refresh: score blocks with this step's queries
+    and re-materialise the partial body (sink + retrieval + local).
+
+    queries: [L, B, T, H, Dh]; q_weight: [B, T].
+    Returns (pk, pv, ppos): [L, B, Hk, P_body(+pad), Dh]."""
+    use_kernel = (spec.use_pallas and spec.score_mode == "paper"
+                  and spec.reduction == "mean")
+
+    def per_layer(q_l, kmax_l, kmin_l, k_l, v_l):
+        if use_kernel:
+            from repro.kernels import ops as kops
+            scores = kops.retrieval_scores(q_l, kmax_l, kmin_l, q_weight)
+        else:
+            scores = quest_block_scores(q_l, kmax_l, kmin_l, q_weight,
+                                        score_mode=spec.score_mode,
+                                        reduction=spec.reduction)
+        return select_and_gather_partial(spec, scores, k_l, v_l,
+                                         cache["length"])
+    return jax.vmap(per_layer)(queries, cache["kmax"], cache["kmin"],
+                               cache["k"], cache["v"])

@@ -1,0 +1,4 @@
+from repro.data.pipeline import (SyntheticCorpus, batch_iterator,
+                                 continuation_task)
+
+__all__ = ["SyntheticCorpus", "batch_iterator", "continuation_task"]

@@ -1,0 +1,5 @@
+from repro.distributed.sharding import (param_shardings, cache_shardings,
+                                        batch_spec, ShardingRules)
+
+__all__ = ["param_shardings", "cache_shardings", "batch_spec",
+           "ShardingRules"]

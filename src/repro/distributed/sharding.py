@@ -1,0 +1,201 @@
+"""Sharding rules for every architecture family and every step kind.
+
+Strategy (DESIGN.md §5):
+
+* **Tensor parallelism** on the `model` axis: column-split fused-QKV / MLP
+  up-projections (last dim), row-split output projections (second-to-last
+  dim), expert-split MoE weights (expert dim).
+* **Data parallelism** on (`pod`, `data`): batch dims of activations and
+  caches.
+* **FSDP for training**: parameters additionally sharded over the data
+  axes on their largest remaining dim (XLA SPMD inserts the per-layer
+  all-gathers); AdamW moments inherit the param sharding.
+* **Context parallelism for decode**: the full KV cache's sequence dim is
+  sharded over `model` (and over everything for long_500k's batch=1);
+  the partial (SpecPV) cache is small and only batch-sharded.
+
+Every rule degrades gracefully: a dim is sharded over an axis only when
+divisible, otherwise the next candidate dim (or replication) is used, so
+uneven head counts (qwen2 14H, qwen1.5 40H, recurrentgemma 10H, whisper
+12H) still lower — at a roofline cost the §Perf log tracks.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+# param names whose *second-to-last* dim is the sharded (row/input) dim
+ROW_NAMES = {"wo", "cm_wv", "wd_B", "lora_B"}
+# names never sharded (small / scalar / router)
+REPLICATED_NAMES = {"router", "gate_attn", "gate_mlp", "conv_w", "conv_b",
+                    "lam", "w0", "u", "gn_scale", "gn_bias"}
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    mesh: Any
+    fsdp: bool = False          # also shard params over data axes (training)
+
+    @property
+    def model_size(self) -> int:
+        return self.mesh.shape["model"]
+
+    @property
+    def data_axes(self) -> Tuple[str, ...]:
+        return (("pod", "data") if "pod" in self.mesh.axis_names
+                else ("data",))
+
+    @property
+    def data_size(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.data_axes]))
+
+
+def _divisible(dim: int, size: int) -> bool:
+    return dim % size == 0 and dim >= size
+
+
+def _spec_for_leaf(rules: ShardingRules, path: Tuple, leaf) -> P:
+    """Choose a PartitionSpec for one parameter."""
+    names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+    name = names[-1] if names else ""
+    shape = leaf.shape
+    nd = len(shape)
+    spec = [None] * nd
+    if nd == 0 or name in REPLICATED_NAMES:
+        return P()
+    if nd == 1:
+        return P()
+
+    in_moe = "moe" in names
+    # scan-stacked params have a leading n_super dim we never shard;
+    # detect heuristically: decoder/encoder slots are lists of stacked trees
+    stacked = ("slots" in names or "layers" in names) and nd >= 2
+
+    if in_moe and name in ("wi", "wg", "wo") and nd >= 3:
+        # [( n,) E, d, f] — shard experts over model
+        e_axis = nd - 3
+        if _divisible(shape[e_axis], rules.model_size):
+            spec[e_axis] = "model"
+    elif name == "embed":
+        # [V, d] — shard d over model (vocab sizes are rarely divisible)
+        if _divisible(shape[-1], rules.model_size):
+            spec[-1] = "model"
+        elif _divisible(shape[-2], rules.model_size):
+            spec[-2] = "model"
+    elif name == "head":
+        if _divisible(shape[-1], rules.model_size):
+            spec[-1] = "model"
+    elif name in ROW_NAMES:
+        if _divisible(shape[-2], rules.model_size):
+            spec[-2] = "model"
+    else:
+        # column-parallel default (wq/wk/wv/wi/wg/fuse/in_proj/wx/...)
+        if _divisible(shape[-1], rules.model_size):
+            spec[-1] = "model"
+        elif _divisible(shape[-2], rules.model_size):
+            spec[-2] = "model"
+
+    if rules.fsdp:
+        # additionally shard the largest unsharded dim over the data axes
+        dsz = rules.data_size
+        cand = sorted(range(nd), key=lambda i: -shape[i])
+        for i in cand:
+            if spec[i] is None and _divisible(shape[i], dsz):
+                spec[i] = rules.data_axes
+                break
+    return P(*spec)
+
+
+def param_shardings(rules: ShardingRules, params) -> Any:
+    """NamedSharding pytree matching ``params``."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    shardings = [NamedSharding(rules.mesh, _spec_for_leaf(rules, p, l))
+                 for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, shardings)
+
+
+def batch_spec(rules: ShardingRules, batch: int) -> P:
+    """Batch-dim spec: shard over data axes when divisible."""
+    if _divisible(batch, rules.data_size):
+        return P(rules.data_axes)
+    if _divisible(batch, rules.mesh.shape.get("data", 1)):
+        return P(("data",))
+    return P()
+
+
+def cache_shardings(rules: ShardingRules, cfg: ModelConfig, cache: Dict,
+                    *, shard_seq_over_all: bool = False) -> Dict:
+    """Shardings for the arch-specific cache dict.
+
+    Attention caches [L, B, S, Hk, Dh]: B over data axes, S over `model`
+    (context parallelism).  For long_500k (batch=1) pass
+    ``shard_seq_over_all=True`` to spread S over every mesh axis.
+    State-arch caches are small: batch-sharded only.
+    """
+    mesh = rules.mesh
+    batch = next((v.shape[1] for v in cache.values() if len(v.shape) >= 2),
+                 1)
+    bspec = batch_spec(rules, batch)
+    bax = bspec[0] if len(bspec) else None
+    all_axes = tuple(mesh.axis_names)
+
+    def div(a_, dim: int, axes) -> bool:
+        if axes is None:
+            return False
+        ax = (axes,) if isinstance(axes, str) else axes
+        size = int(np.prod([mesh.shape[x] for x in ax]))
+        return a_.shape[dim] % size == 0 and a_.shape[dim] >= size
+
+    def spec_for(key: str, a) -> P:
+        nd = len(a.shape)
+        if key in ("k", "v", "kmax", "kmin"):  # [L, B, S|NB, Hk, Dh]
+            if shard_seq_over_all:
+                seq_ax = all_axes if div(a, 2, all_axes) else (
+                    "model" if div(a, 2, "model") else None)
+                return P(None, None, seq_ax, None, None)
+            seq_ax = "model" if div(a, 2, "model") else None
+            return P(None, bax, seq_ax, None, None)
+        if key in ("cross_k", "cross_v"):   # [L, B, Te, Hk, Dh]
+            return P(None, bax, None, None, None)
+        if key == "length":
+            return P(bax) if False else P()   # lengths replicated
+        if key in ("win_k", "win_v"):   # [La, B, W, Hk, Dh]
+            return P(None, bax, None, None, None)
+        if key == "win_pos":
+            return P(None, bax, None)
+        if key == "wkv":                # [L, B, H, dk, dv]
+            return P(None, bax, None, None, None)
+        if key in ("ts_tm", "ts_cm"):   # [L, B, d]
+            return P(None, bax, None)
+        if key == "rnn_h":              # [Lr, B, w]
+            return P(None, bax, None)
+        if key == "conv":               # [Lr, B, 3, w]
+            return P(None, bax, None, None)
+        return P(*([None] * nd))
+
+    return {k: NamedSharding(mesh, spec_for(k, v)) for k, v in cache.items()}
+
+
+def pkv_shardings(rules: ShardingRules, pkv_shapes) -> Tuple:
+    """PartitionSpecs for the materialised partial cache
+    (k, v: [L, B, Hk, P, Dh]; pos: [L, B, Hk, P])."""
+    mesh = rules.mesh
+    k_shape = pkv_shapes[0].shape
+    b, hk, p = k_shape[1], k_shape[2], k_shape[3]
+    bspec = batch_spec(rules, b)
+    bax = bspec[0] if len(bspec) else None
+    if _divisible(hk, rules.model_size):
+        head_ax, slot_ax = "model", None
+    elif _divisible(p, rules.model_size):
+        head_ax, slot_ax = None, "model"
+    else:
+        head_ax = slot_ax = None
+    return (NamedSharding(mesh, P(None, bax, head_ax, slot_ax, None)),
+            NamedSharding(mesh, P(None, bax, head_ax, slot_ax, None)),
+            NamedSharding(mesh, P(None, bax, head_ax, slot_ax)))

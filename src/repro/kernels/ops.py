@@ -1,0 +1,58 @@
+"""Jit'd public wrappers over the Pallas kernels with batch handling and
+an automatic interpret-mode fallback on non-TPU backends.
+
+On CPU (this container) the kernels execute in ``interpret=True`` mode —
+the kernel body runs step-by-step exactly as the TPU grid would, which is
+what the correctness sweeps in tests/test_kernels.py validate.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.block_summary import block_summary_pallas
+from repro.kernels.retrieval_score import retrieval_score_pallas
+from repro.kernels.sparse_attention import sparse_verify_attention_pallas
+from repro.kernels import ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "use_pallas"))
+def block_summaries(k, length, block_size: int = 128,
+                    use_pallas: bool = True):
+    """Batched summaries.  k: [B, S, Hk, Dh]; length: [B].
+    Returns (kmax, kmin): [B, NB, Hk, Dh] fp32."""
+    fn = (functools.partial(block_summary_pallas, block_size=block_size,
+                            interpret=_interpret())
+          if use_pallas else
+          functools.partial(ref.block_summary_ref, block_size=block_size))
+    return jax.vmap(fn)(k, length)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def retrieval_scores(q, kmax, kmin, q_weight, use_pallas: bool = True):
+    """Batched Quest scores.  q: [B, T, H, Dh]; kmax/kmin: [B, NB, Hk, Dh];
+    q_weight: [B, T].  Returns [B, Hk, NB] fp32."""
+    fn = (functools.partial(retrieval_score_pallas, interpret=_interpret())
+          if use_pallas else ref.retrieval_score_ref)
+    return jax.vmap(fn)(q, kmax, kmin, q_weight)
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "use_pallas"))
+def sparse_verify_attention(q, k_cache, v_cache, block_idx, block_valid_len,
+                            block_size: int = 128, use_pallas: bool = True):
+    """Batched block-sparse verification attention partials.
+
+    q: [B, T, H, Dh]; caches: [B, S, Hk, Dh]; idx/vlen: [B, Hk, NSel].
+    Returns (m [B, H, T], l [B, H, T], acc [B, H, T, Dh])."""
+    fn = (functools.partial(sparse_verify_attention_pallas,
+                            block_size=block_size, interpret=_interpret())
+          if use_pallas else
+          functools.partial(ref.sparse_verify_attention_ref,
+                            block_size=block_size))
+    return jax.vmap(fn)(q, k_cache, v_cache, block_idx, block_valid_len)

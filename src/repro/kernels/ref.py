@@ -1,0 +1,91 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth for the per-kernel allclose sweeps in
+``tests/test_kernels.py`` and double as the CPU execution path.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def block_summary_ref(k, length, block_size: int):
+    """k: [S, Hk, Dh]; length: scalar int.  Per-block elementwise key
+    max/min (paper eq. (1)); unwritten positions excluded; untouched blocks
+    get (-1e30, +1e30) so they never win retrieval.
+
+    Returns (kmax, kmin): [NB, Hk, Dh] fp32 with NB = S // block_size."""
+    s, hk, dh = k.shape
+    nb = s // block_size
+    kb = k[: nb * block_size].astype(jnp.float32).reshape(
+        nb, block_size, hk, dh)
+    tok = (jnp.arange(nb)[:, None] * block_size
+           + jnp.arange(block_size)[None])                 # [NB, bs]
+    valid = (tok < length)[..., None, None]
+    kmax = jnp.max(jnp.where(valid, kb, -1e30), axis=1)
+    kmin = jnp.min(jnp.where(valid, kb, 1e30), axis=1)
+    any_valid = jnp.any(valid, axis=1)
+    kmax = jnp.where(any_valid, kmax, 0.0)   # empty blocks score neutrally;
+    kmin = jnp.where(any_valid, kmin, 0.0)   # retrieval masks them anyway
+    return kmax, kmin
+
+
+def retrieval_score_ref(q, kmax, kmin, q_weight):
+    """Paper eqs. (2)-(3) with mean reduction.
+
+    q: [T, H, Dh]; kmax/kmin: [NB, Hk, Dh] fp32; q_weight: [T] in {0,1}.
+    Returns scores [Hk, NB] fp32 (mean over participating queries and over
+    the query heads grouped onto each kv head)."""
+    t, h, dh = q.shape
+    nb, hk, _ = kmax.shape
+    rep = h // hk
+    qg = q.reshape(t, hk, rep, dh).astype(jnp.float32)
+    smax = jnp.einsum("tkrd,nkd->tkrn", qg, kmax)
+    smin = jnp.einsum("tkrd,nkd->tkrn", qg, kmin)
+    s = jnp.maximum(smax, smin)                            # [T, Hk, rep, NB]
+    s = jnp.mean(s, axis=2)                                # over head group
+    w = q_weight.astype(jnp.float32)[:, None, None]
+    return jnp.sum(s * w, axis=0) / jnp.maximum(jnp.sum(w), 1e-9)
+
+
+def sparse_verify_attention_ref(q, k_cache, v_cache, block_idx,
+                                block_valid_len, block_size: int):
+    """Block-sparse verification attention — softmax partials over the
+    selected KV blocks only.
+
+    q: [T, H, Dh]; k_cache/v_cache: [S, Hk, Dh];
+    block_idx: [Hk, NSel] block ids; block_valid_len: [Hk, NSel] valid
+    tokens per selected block (0 = selection slot unused).
+
+    Returns partials (m [H, T], l [H, T], acc [H, T, Dh]) fp32, combinable
+    with the buffer/tree segment via models.common.combine_attn_parts."""
+    t, h, dh = q.shape
+    s, hk, _ = k_cache.shape
+    nsel = block_idx.shape[1]
+    rep = h // hk
+    scale = 1.0 / math.sqrt(dh)
+    nb = s // block_size
+    kb = k_cache[: nb * block_size].reshape(nb, block_size, hk, dh)
+    vb = v_cache[: nb * block_size].reshape(nb, block_size, hk, dh)
+    # gather per kv head: [Hk, NSel, bs, Dh]
+    kg = jnp.take_along_axis(
+        kb.transpose(2, 0, 1, 3), block_idx[:, :, None, None]
+        .astype(jnp.int32).clip(0), axis=1)
+    vg = jnp.take_along_axis(
+        vb.transpose(2, 0, 1, 3), block_idx[:, :, None, None]
+        .astype(jnp.int32).clip(0), axis=1)
+    valid = (jnp.arange(block_size)[None, None]
+             < block_valid_len[:, :, None])                # [Hk, NSel, bs]
+    qg = q.reshape(t, hk, rep, dh).astype(jnp.float32) * scale
+    logits = jnp.einsum("tkrd,knbd->krtnb", qg, kg.astype(jnp.float32))
+    logits = jnp.where(valid[:, None, None], logits, -1e30)
+    logits = logits.reshape(hk, rep, t, nsel * block_size)
+    m = jnp.max(logits, axis=-1)
+    p = jnp.exp(logits - m[..., None])
+    p = p * (logits > -1e29)
+    l = jnp.sum(p, axis=-1)
+    vflat = vg.reshape(hk, nsel * block_size, dh).astype(jnp.float32)
+    acc = jnp.einsum("krts,ksd->krtd", p, vflat)
+    return (m.reshape(h, t), l.reshape(h, t), acc.reshape(h, t, dh))

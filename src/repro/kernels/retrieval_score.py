@@ -1,0 +1,55 @@
+"""Pallas TPU kernel: Quest-style block scoring (paper eqs. (2)-(3)).
+
+One grid step per kv head: the head's grouped queries ([rep, T, Dh]) and
+the full summary table ([NB, Dh]) are VMEM-resident; two MXU matmuls
+(q @ Kmax^T, q @ Kmin^T), elementwise max, then mean reduction over group
+heads and participating queries.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(q_ref, kmax_ref, kmin_ref, qw_ref, out_ref):
+    q = q_ref[0].astype(jnp.float32)                      # [rep, T, Dh]
+    kmax = kmax_ref[:, 0].astype(jnp.float32)             # [NB, Dh]
+    kmin = kmin_ref[:, 0].astype(jnp.float32)
+    rep, t, dh = q.shape
+    q2 = q.reshape(rep * t, dh)
+    smax = q2 @ kmax.T                                    # [rep*T, NB]
+    smin = q2 @ kmin.T
+    s = jnp.maximum(smax, smin).reshape(rep, t, -1)
+    s = jnp.mean(s, axis=0)                               # [T, NB]
+    w = qw_ref[:, 0].astype(jnp.float32)                  # [T]
+    out = jnp.sum(s * w[:, None], axis=0) / jnp.maximum(jnp.sum(w), 1e-9)
+    out_ref[...] = out[None]
+
+
+def retrieval_score_pallas(q, kmax, kmin, q_weight, *,
+                           interpret: bool = True):
+    """q: [T, H, Dh]; kmax/kmin: [NB, Hk, Dh]; q_weight: [T].
+    Returns scores [Hk, NB] fp32 (paper score mode, mean reduction)."""
+    t, h, dh = q.shape
+    nb, hk, _ = kmax.shape
+    rep = h // hk
+    qg = q.reshape(t, hk, rep, dh).transpose(1, 2, 0, 3)  # [Hk, rep, T, Dh]
+    qw = q_weight.reshape(t, 1).astype(jnp.float32)
+    grid = (hk,)
+    fn = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, rep, t, dh), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((nb, 1, dh), lambda i: (0, i, 0)),
+            pl.BlockSpec((nb, 1, dh), lambda i: (0, i, 0)),
+            pl.BlockSpec((t, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, nb), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((hk, nb), jnp.float32),
+        interpret=interpret)
+    return fn(qg, kmax, kmin, qw)

@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: block-sparse verification attention — the paper's
+hot spot, adapted to TPU (DESIGN.md §Hardware adaptation).
+
+This is a paged/block-sparse flash attention: the selected block ids (the
+partial cache's page table) arrive via *scalar prefetch*, and the KV
+BlockSpec index_map uses them so the pipeline streams exactly the selected
+128-token KV tiles HBM->VMEM — the partial cache is never materialised.
+Running (m, l, acc) live in VMEM scratch; the final grid step emits
+softmax partials that the caller merges with the small buffer/tree segment
+(models.common.combine_attn_parts).
+
+Grid: (Hk, NSel).  Per step: one KV block tile [bs, Dh] against the head's
+grouped queries [rep, T, Dh] — two MXU matmuls per tile.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(idx_ref, vlen_ref, q_ref, k_ref, v_ref,
+            m_out, l_out, acc_out, m_s, l_s, acc_s, *,
+            block_size: int, nsel: int):
+    h = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q = q_ref[0].astype(jnp.float32)                      # [rep, T, Dh]
+    k = k_ref[0, :, 0].astype(jnp.float32)                # [bs, Dh]
+    v = v_ref[0, :, 0].astype(jnp.float32)                # [bs, Dh]
+    rep, t, dh = q.shape
+
+    logits = jnp.einsum("rtd,sd->rts", q, k)              # [rep, T, bs]
+    nvalid = vlen_ref[h, j]
+    svalid = (jax.lax.broadcasted_iota(jnp.int32, (1, 1, block_size), 2)
+              < nvalid)
+    logits = jnp.where(svalid, logits, NEG)
+
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+    p = jnp.exp(logits - m_new[..., None]) * svalid
+    corr = jnp.exp(m_prev - m_new)
+    l_s[...] = l_s[...] * corr + jnp.sum(p, axis=-1)
+    acc_s[...] = (acc_s[...] * corr[..., None]
+                  + jax.lax.dot_general(
+                      p.reshape(rep * t, block_size), v,
+                      (((1,), (0,)), ((), ()))).reshape(rep, t, dh))
+    m_s[...] = m_new
+
+    @pl.when(j == nsel - 1)
+    def _emit():
+        m_out[0] = m_s[...]
+        l_out[0] = l_s[...]
+        acc_out[0] = acc_s[...]
+
+
+def sparse_verify_attention_pallas(q, k_cache, v_cache, block_idx,
+                                   block_valid_len, block_size: int, *,
+                                   interpret: bool = True):
+    """q: [T, H, Dh]; k_cache/v_cache: [S, Hk, Dh];
+    block_idx/block_valid_len: [Hk, NSel] int32.
+
+    Returns softmax partials (m [H, T], l [H, T], acc [H, T, Dh]) fp32."""
+    t, h, dh = q.shape
+    s, hk, _ = k_cache.shape
+    nsel = block_idx.shape[1]
+    rep = h // hk
+    nb = s // block_size
+    scale = 1.0 / math.sqrt(dh)
+    qg = (q.reshape(t, hk, rep, dh).transpose(1, 2, 0, 3)
+          * scale)                                         # [Hk, rep, T, Dh]
+    kb = k_cache[: nb * block_size].reshape(nb, block_size, hk, dh)
+    vb = v_cache[: nb * block_size].reshape(nb, block_size, hk, dh)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(hk, nsel),
+        in_specs=[
+            pl.BlockSpec((1, rep, t, dh),
+                         lambda hh, jj, idx, vl: (hh, 0, 0, 0)),
+            pl.BlockSpec((1, block_size, 1, dh),
+                         lambda hh, jj, idx, vl: (idx[hh, jj], 0, hh, 0)),
+            pl.BlockSpec((1, block_size, 1, dh),
+                         lambda hh, jj, idx, vl: (idx[hh, jj], 0, hh, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, rep, t), lambda hh, jj, idx, vl: (hh, 0, 0)),
+            pl.BlockSpec((1, rep, t), lambda hh, jj, idx, vl: (hh, 0, 0)),
+            pl.BlockSpec((1, rep, t, dh),
+                         lambda hh, jj, idx, vl: (hh, 0, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((rep, t), jnp.float32),
+            pltpu.VMEM((rep, t), jnp.float32),
+            pltpu.VMEM((rep, t, dh), jnp.float32),
+        ],
+    )
+    out_shape = [
+        jax.ShapeDtypeStruct((hk, rep, t), jnp.float32),
+        jax.ShapeDtypeStruct((hk, rep, t), jnp.float32),
+        jax.ShapeDtypeStruct((hk, rep, t, dh), jnp.float32),
+    ]
+    fn = pl.pallas_call(
+        functools.partial(_kernel, block_size=block_size, nsel=nsel),
+        grid_spec=grid_spec, out_shape=out_shape, interpret=interpret)
+    idx = jnp.clip(block_idx.astype(jnp.int32), 0, nb - 1)
+    m, l, acc = fn(idx, block_valid_len.astype(jnp.int32), qg, kb, vb)
+    return (m.reshape(h, t), l.reshape(h, t), acc.reshape(h, t, dh))

@@ -1,0 +1,4 @@
+from repro.kvcache.cache import KVCache, BlockSummaries, PartialKV
+from repro.kvcache.offload import TrafficMeter
+
+__all__ = ["KVCache", "BlockSummaries", "PartialKV", "TrafficMeter"]

@@ -1,0 +1,147 @@
+"""Blocked KV cache structures.
+
+* ``KVCache`` — the full cache: [L, B, S_max, Hk, Dh] with per-sequence
+  lengths.  S_max is a multiple of the SpecPV block size so the cache is
+  implicitly paged at block granularity (vLLM-style, but 128-token blocks
+  for TPU tiling).
+* ``BlockSummaries`` — per-block elementwise key max/min (paper eq. (1)),
+  maintained for the full cache and used for Quest-style retrieval.
+* ``PartialKV`` — the *materialised* partial cache (sink + retrieval +
+  local + buffer), per layer and per kv-head (retrieval is query-aware per
+  head).  Token order is preserved; the buffer occupies the tail slots.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SpecPVConfig
+from repro.utils import pytree_dataclass, cdiv
+
+
+@pytree_dataclass
+class KVCache:
+    k: jax.Array        # [L, B, S_max, Hk, Dh]
+    v: jax.Array        # [L, B, S_max, Hk, Dh]
+    length: jax.Array   # [B] int32 — tokens currently resident
+
+    @property
+    def max_len(self) -> int:
+        return self.k.shape[2]
+
+    @property
+    def num_layers(self) -> int:
+        return self.k.shape[0]
+
+
+def init_kv_cache(num_layers: int, batch: int, max_len: int, num_kv_heads: int,
+                  head_dim: int, dtype) -> KVCache:
+    shape = (num_layers, batch, max_len, num_kv_heads, head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   length=jnp.zeros((batch,), jnp.int32))
+
+
+def append_layer_kv(k_layer, v_layer, new_k, new_v, length):
+    """Write new tokens into one layer's cache at per-sequence offsets.
+
+    k_layer: [B, S, Hk, Dh]; new_k: [B, T, Hk, Dh]; length: [B].
+    Returns updated (k_layer, v_layer).  (Length bookkeeping is external —
+    verification may keep only a prefix of what was written.)
+    """
+    def upd(buf, new, off):
+        return jax.lax.dynamic_update_slice(buf, new.astype(buf.dtype),
+                                            (off, 0, 0))
+    k_layer = jax.vmap(upd)(k_layer, new_k, length)
+    v_layer = jax.vmap(upd)(v_layer, new_v, length)
+    return k_layer, v_layer
+
+
+# ---------------------------------------------------------------------------
+# block summaries (paper eq. (1))
+# ---------------------------------------------------------------------------
+
+@pytree_dataclass
+class BlockSummaries:
+    kmax: jax.Array     # [L, B, NB, Hk, Dh]
+    kmin: jax.Array     # [L, B, NB, Hk, Dh]
+
+    @property
+    def num_blocks(self) -> int:
+        return self.kmax.shape[2]
+
+
+def init_summaries(num_layers: int, batch: int, max_len: int, block: int,
+                   num_kv_heads: int, head_dim: int) -> BlockSummaries:
+    nb = cdiv(max_len, block)
+    shape = (num_layers, batch, nb, num_kv_heads, head_dim)
+    # neutral zeros: unwritten blocks score ~0 and retrieval masks them out
+    # explicitly (select_and_gather_partial candidate mask)
+    return BlockSummaries(kmax=jnp.zeros(shape, jnp.float32),
+                          kmin=jnp.zeros(shape, jnp.float32))
+
+
+def update_layer_summaries(kmax_l, kmin_l, k_layer, start, end, block: int):
+    """Recompute summaries for the blocks covering tokens [start, end) of one
+    layer's cache.  All shapes static; start/end dynamic scalars.
+
+    kmax_l/kmin_l: [B, NB, Hk, Dh]; k_layer: [B, S, Hk, Dh].
+    We recompute *every* block but only write those intersecting the range
+    (cheap enough at update time; the Pallas kernel in repro/kernels does the
+    fused version used on-device).
+    """
+    b, s, hk, dh = k_layer.shape
+    nb = kmax_l.shape[1]
+    if s < nb * block:  # cache smaller than the rounded block span
+        k_layer = jnp.pad(k_layer, ((0, 0), (0, nb * block - s),
+                                    (0, 0), (0, 0)))
+    kb = k_layer[:, : nb * block].reshape(b, nb, block, hk, dh)
+    tok_idx = (jnp.arange(nb)[:, None] * block
+               + jnp.arange(block)[None, :])                 # [NB, blk]
+    valid = (tok_idx[None] < end[:, None, None])             # [B, NB, blk]
+    validb = valid[..., None, None]
+    kf = kb.astype(jnp.float32)
+    kmax_new = jnp.max(jnp.where(validb, kf, -1e30), axis=2)
+    kmin_new = jnp.min(jnp.where(validb, kf, 1e30), axis=2)
+    blk_lo = start // block
+    blk_hi = (end + block - 1) // block
+    blk = jnp.arange(nb)
+    touched = (blk[None] >= blk_lo[:, None]) & (blk[None] < blk_hi[:, None])
+    tb = touched[..., None, None]
+    return (jnp.where(tb, kmax_new, kmax_l),
+            jnp.where(tb, kmin_new, kmin_l))
+
+
+# ---------------------------------------------------------------------------
+# partial cache (materialised)
+# ---------------------------------------------------------------------------
+
+@pytree_dataclass
+class PartialKV:
+    k: jax.Array        # [L, B, Hk, P, Dh]   P = partial tokens + buffer
+    v: jax.Array        # [L, B, Hk, P, Dh]
+    pos: jax.Array      # [L, B, Hk, P] int32 absolute position, -1 = invalid
+    length: jax.Array   # [B] int32 — valid partial tokens (sink+ret+local)
+    buf_len: jax.Array  # [B] int32 — buffered partially-verified tokens
+
+    @property
+    def max_slots(self) -> int:
+        return self.k.shape[3]
+
+
+def init_partial_kv(num_layers: int, batch: int, num_kv_heads: int,
+                    head_dim: int, spec: SpecPVConfig, dtype) -> PartialKV:
+    p = spec.partial_budget_tokens + spec.buffer_size
+    shape = (num_layers, batch, num_kv_heads, p, head_dim)
+    return PartialKV(
+        k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+        pos=jnp.full(shape[:-1], -1, jnp.int32),
+        length=jnp.zeros((batch,), jnp.int32),
+        buf_len=jnp.zeros((batch,), jnp.int32))
+
+
+def partial_valid_mask(pkv: PartialKV, layer=None) -> jax.Array:
+    """[B, Hk, P] bool — slots holding real tokens (partial body + buffer)."""
+    pos = pkv.pos if layer is None else pkv.pos[layer]
+    return pos >= 0

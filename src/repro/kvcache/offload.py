@@ -1,0 +1,45 @@
+"""Cache residency / traffic accounting.
+
+The paper's offloading experiment (Fig. 4) keeps the full KV cache in host
+memory and only the partial + draft caches on-device; partial verification
+then avoids PCIe traffic.  On a TPU pod the analogue is *sharding*: the
+full cache is sequence-sharded over the `model` axis while the partial
+cache is small enough to live replicated next to the compute.  What we can
+account for on any runtime is *bytes of cache touched per step mode*, which
+is exactly the quantity that the PCIe link (GPU) or ICI (TPU) pays for.
+
+``TrafficMeter`` tallies those bytes; ``benchmarks/bench_fig4_offload.py``
+turns them into modelled step times for a given link bandwidth.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict
+
+
+@dataclass
+class TrafficMeter:
+    bytes_by_mode: Dict[str, int] = field(default_factory=dict)
+    steps_by_mode: Dict[str, int] = field(default_factory=dict)
+
+    def record(self, mode: str, nbytes: int) -> None:
+        self.bytes_by_mode[mode] = self.bytes_by_mode.get(mode, 0) + nbytes
+        self.steps_by_mode[mode] = self.steps_by_mode.get(mode, 0) + 1
+
+    def total(self) -> int:
+        return sum(self.bytes_by_mode.values())
+
+    def modelled_time_s(self, link_gbps: float) -> float:
+        """Time to move the recorded bytes over a link of `link_gbps` GB/s."""
+        return self.total() / (link_gbps * 1e9)
+
+
+def full_step_bytes(num_layers: int, batch: int, ctx_len: int, hk: int,
+                    dh: int, itemsize: int) -> int:
+    """Bytes of full cache read by one full/refresh verification step."""
+    return 2 * num_layers * batch * ctx_len * hk * dh * itemsize
+
+
+def partial_step_bytes(num_layers: int, batch: int, partial_tokens: int,
+                       hk: int, dh: int, itemsize: int) -> int:
+    return 2 * num_layers * batch * partial_tokens * hk * dh * itemsize

@@ -1,0 +1,23 @@
+"""Int8 KV-cache quantization (beyond-paper §Perf optimization).
+
+Per-(token, head) absmax scaling: k int8 [., S, Hk, Dh] + scale
+[., S, Hk] bf16.  Dequantization happens tile-by-tile inside the chunked
+attention, so no fp copy of the cache ever materialises.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_kv(x):
+    """x: [..., Dh] float -> (q int8, scale [...] bf16)."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(absmax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def dequantize_kv(q, scale):
+    return q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]

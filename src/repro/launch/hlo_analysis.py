@@ -1,0 +1,45 @@
+"""Optimized-HLO analysis helpers (no jax/device side effects on import).
+
+``parse_collective_bytes`` sums the result-shape bytes of every collective
+op in post-SPMD HLO text — the §Roofline collective term's numerator.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "f64": 8, "s32": 4, "u32": 4,
+                "s64": 8, "u64": 8, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(r"=\s+(.*?)\s+(" + "|".join(COLLECTIVES)
+                    + r")(?:-start|-done)?\(")
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, int]:
+    out = {c: 0 for c in COLLECTIVES}
+    counts = {c: 0 for c in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:   # start/done pairs counted once
+            continue
+        shapes, coll = m.group(1), m.group(2)
+        total = 0
+        for dt, dims in _SHAPE_RE.findall(shapes):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * _DTYPE_BYTES[dt]
+        out[coll] += total
+        counts[coll] += 1
+    out["counts"] = counts
+    return out

@@ -1,0 +1,108 @@
+"""Production step functions lowered by the dry-run and used by the
+launchers: train_step (loss -> grad -> clip -> AdamW), prefill_step, and
+decode_step (one new token against a seq_len KV cache; the long-context
+variant decodes through the SpecPV block-sparse partial cache).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SpecPVConfig
+from repro.models import api
+from repro.models import rwkv6 as rw
+from repro.models import griffin as gf
+from repro.core import verify as vf
+from repro.train.optimizer import (adamw_update, clip_by_global_norm,
+                                   cosine_schedule)
+
+
+def make_train_step(cfg: ModelConfig, grad_shardings=None):
+    """(params, opt, tokens [B, S+1], extra) -> (params, opt, loss).
+
+    grad_shardings: optional sharding pytree matching params — constrains
+    the gradient tree (otherwise XLA's backward-of-scan can leave stacked
+    grads replicated, inflating memory by the model-parallel factor)."""
+
+    def step(params, opt, tokens, extra):
+        def loss_fn(p):
+            return api.train_loss(cfg, p, tokens, extra=extra)
+        (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        if grad_shardings is not None:
+            grads = jax.lax.with_sharding_constraint(grads, grad_shardings)
+        grads, _ = clip_by_global_norm(grads, 1.0)
+        lr = cosine_schedule(opt.step, base_lr=3e-4, warmup=100, total=10000)
+        params, opt = adamw_update(params, grads, opt, lr=lr)
+        return params, opt, loss
+
+    return step
+
+
+def make_prefill_step(cfg: ModelConfig, spec: SpecPVConfig):
+    """(params, cache, tokens [B, S], extra) -> (next_token [B], cache)."""
+
+    def step(params, cache, tokens, extra):
+        logits, _, cache = api.prefill(cfg, params, tokens, cache,
+                                       extra=extra, spec=spec)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, cache
+
+    return step
+
+
+def make_decode_step(cfg: ModelConfig, spec: SpecPVConfig, *,
+                     partial: bool = False):
+    """One-token decode.
+
+    attention archs, full:    (params, cache, token [B]) -> (next, cache)
+    attention archs, partial: (params, cache, pkv, token)
+                              -> (next, cache, pkv)     [SpecPV long-context
+                              path: attention touches only the partial cache;
+                              the full cache stays resident for refreshes]
+    state archs:              (params, cache, token) -> (next, cache)
+    """
+    b1 = jnp.ones((1,), jnp.int32)  # placeholder; count derived per batch
+
+    if not cfg.is_attention_arch:
+        def step_state(params, cache, token):
+            b = token.shape[0]
+            pos = cache["length"][:, None]
+            out = api.decode(cfg, params, token[:, None], pos, cache,
+                             spec=spec)
+            nxt = jnp.argmax(out.logits[:, 0], axis=-1).astype(jnp.int32)
+            cache = api.advance(cfg, params, token[:, None], cache,
+                                jnp.ones((b, 1), bool))
+            return nxt, cache
+        return step_state
+
+    if not partial:
+        def step_full(params, cache, token):
+            b = token.shape[0]
+            pos = cache["length"][:, None]
+            out = api.decode(cfg, params, token[:, None], pos, cache,
+                             mode="full", spec=spec)
+            nxt = jnp.argmax(out.logits[:, 0], axis=-1).astype(jnp.int32)
+            cache = vf.append_full_cache(cache, out.new_kv[0], out.new_kv[1],
+                                         jnp.ones((b,), jnp.int32), spec)
+            return nxt, cache
+        return step_full
+
+    def step_partial(params, cache, pkv_k, pkv_v, pkv_pos, buf_len, token):
+        b = token.shape[0]
+        # position = total sequence length (committed + buffered)
+        pos = (cache["length"] + buf_len)[:, None]
+        out = api.decode(cfg, params, token[:, None], pos, cache,
+                         mode="partial", pkv=(pkv_k, pkv_v, pkv_pos),
+                         spec=spec)
+        nxt = jnp.argmax(out.logits[:, 0], axis=-1).astype(jnp.int32)
+        ones = jnp.ones((b,), jnp.int32)
+        pkv_k, pkv_v, pkv_pos, buf_len = vf.append_buffer(
+            pkv_k, pkv_v, pkv_pos, spec.partial_budget_tokens, buf_len,
+            out.new_kv[0], out.new_kv[1], pos, ones)
+        # full cache passes through untouched (resident, refresh-only)
+        return nxt, cache, pkv_k, pkv_v, pkv_pos, buf_len
+
+    return step_partial

@@ -1,0 +1,5 @@
+from repro.models.api import (init_params, init_cache, prefill, decode,
+                              train_loss, extra_inputs_for, Features)
+
+__all__ = ["init_params", "init_cache", "prefill", "decode", "train_loss",
+           "extra_inputs_for", "Features"]

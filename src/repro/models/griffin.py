@@ -1,0 +1,372 @@
+"""Griffin / RecurrentGemma hybrid trunk [arXiv:2402.19427].
+
+Layer pattern ("rec", "rec", "attn"): two RG-LRU recurrent blocks per local
+(sliding-window) attention layer.  26 layers = 8 superblocks + 2 remainder
+rec layers.
+
+* rec block: x-branch linear -> causal depthwise conv1d(4) -> RG-LRU;
+  gate branch linear -> gelu; elementwise product -> out proj.
+  RG-LRU:  r_t = sigma(x W_a + b_a),  i_t = sigma(x W_i + b_i)
+           a_t = exp(-c * softplus(L) * r_t),           c = 8
+           h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+* attn block: GQA (kv=1) with sliding window W and a *rolling* window KV
+  cache (slot = pos mod W) — decode touches exactly W slots.
+
+Forward modes:
+  train    no state, window flash attention
+  advance  process T tokens with a validity mask, update states
+           (prefill chunks and post-acceptance replay both use this)
+  verify   read-only chain verification: logits for T candidate tokens
+           against the current state, state unchanged
+
+SpecPV applicability: the attention KV is already bounded by the window, so
+partial verification degenerates to the local window (DESIGN.md) — the
+engine runs chain speculation with full (=windowed) verification.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+from repro.models import blocks as bk
+from repro.models.dense import superblock_decomp
+
+CONV_W = 4
+RGLRU_C = 8.0
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def _rec_init(cfg: ModelConfig, key) -> Dict:
+    pd = cm.dt(cfg.param_dtype)
+    d = cfg.d_model
+    w = cfg.rnn_width or d
+    ks = cm.split_keys(key, 8)
+    return {
+        "ln1": jnp.ones((d,), pd),
+        "wx": cm.dense_init(ks[0], (d, w), dtype=pd),
+        "wgate": cm.dense_init(ks[1], (d, w), dtype=pd),
+        "conv_w": cm.dense_init(ks[2], (CONV_W, w), dtype=pd),
+        "conv_b": jnp.zeros((w,), pd),
+        "wa": cm.dense_init(ks[3], (w, w), dtype=pd),
+        "ba": jnp.zeros((w,), pd),
+        "wi": cm.dense_init(ks[4], (w, w), dtype=pd),
+        "bi": jnp.zeros((w,), pd),
+        "lam": jnp.full((w,), 2.0, jnp.float32),   # softplus(2) ~ 2.1
+        "wo": cm.dense_init(ks[5], (w, d), dtype=pd),
+        "ln2": jnp.ones((d,), pd),
+        "mlp": bk.init_mlp_params(cfg, ks[6]),
+    }
+
+
+def _attn_init(cfg: ModelConfig, key) -> Dict:
+    pd = cm.dt(cfg.param_dtype)
+    ks = cm.split_keys(key, 2)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), pd),
+        "attn": bk.init_attn_params(cfg, ks[0]),
+        "ln2": jnp.ones((cfg.d_model,), pd),
+        "mlp": bk.init_mlp_params(cfg, ks[1]),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> Dict:
+    pd = cm.dt(cfg.param_dtype)
+    kinds = cfg.layer_kinds()
+    pattern, n_super, rem = superblock_decomp(kinds)
+    ks = cm.split_keys(key, len(kinds) + 3)
+    slots: List[Dict] = []
+    for j, kind in enumerate(pattern):
+        init = _rec_init if kind == "rec" else _attn_init
+        per = [init(cfg, ks[s * len(pattern) + j]) for s in range(n_super)]
+        slots.append(jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per))
+    rem_p = [(_rec_init if kind == "rec" else _attn_init)(
+        cfg, ks[n_super * len(pattern) + i]) for i, kind in enumerate(rem)]
+    p = {"embed": cm.embed_init(ks[-1], (cfg.vocab_size, cfg.d_model), pd),
+         "final_norm": jnp.ones((cfg.d_model,), pd),
+         "slots": slots, "rem": rem_p}
+    if not cfg.tie_embeddings:
+        p["head"] = cm.dense_init(ks[-2], (cfg.d_model, cfg.vocab_size),
+                                  dtype=pd)
+    return p
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    kinds = cfg.layer_kinds()
+    lr = sum(1 for k in kinds if k == "rec")
+    la = sum(1 for k in kinds if k == "attn")
+    w = cfg.rnn_width or cfg.d_model
+    W = cfg.window_size
+    hk, dh = cfg.num_kv_heads, cfg.head_dim_
+    return {
+        "rnn_h": jnp.zeros((lr, batch, w), jnp.float32),
+        "conv": jnp.zeros((lr, batch, CONV_W - 1, w), dtype),
+        "win_k": jnp.zeros((la, batch, W, hk, dh), dtype),
+        "win_v": jnp.zeros((la, batch, W, hk, dh), dtype),
+        "win_pos": jnp.full((la, batch, W), -1, jnp.int32),
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# rec block
+# ---------------------------------------------------------------------------
+
+def _rec_block(cfg: ModelConfig, lp, h, rnn_h, conv_st, valid, update: bool):
+    """h: [B,T,d]; rnn_h: [B,w] f32; conv_st: [B,3,w]; valid: [B,T]."""
+    b, t, d = h.shape
+    xd = h.dtype
+    x0 = cm.rmsnorm(h, lp["ln1"], cfg.norm_eps)
+    x = x0 @ lp["wx"].astype(xd)                           # [B,T,w]
+    gate = jax.nn.gelu(x0 @ lp["wgate"].astype(xd))
+    # causal depthwise conv1d with carried state
+    xin = jnp.concatenate([conv_st.astype(xd), x], axis=1)  # [B,T+3,w]
+    conv = sum(xin[:, i: i + t] * lp["conv_w"][i].astype(xd)
+               for i in range(CONV_W)) + lp["conv_b"].astype(xd)
+    # RG-LRU
+    cf = conv.astype(jnp.float32)
+    r = jax.nn.sigmoid(cf @ lp["wa"].astype(jnp.float32) + lp["ba"])
+    i = jax.nn.sigmoid(cf @ lp["wi"].astype(jnp.float32) + lp["bi"])
+    log_a = -RGLRU_C * jax.nn.softplus(lp["lam"])[None, None] * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.clip(1.0 - a * a, 0.0, 1.0)) * (i * cf)
+
+    vmask = valid.astype(jnp.float32)[..., None]           # [B,T,1]
+
+    def step(s, inp):
+        a_t, g_t, v_t = inp
+        s_new = a_t * s + g_t
+        s_new = v_t * s_new + (1.0 - v_t) * s              # skip padding
+        return s_new, s_new
+
+    xs = (a.transpose(1, 0, 2), gated.transpose(1, 0, 2),
+          vmask.transpose(1, 0, 2))
+    rnn_new, hs = cm.ckpt_chunked_scan(step, rnn_h, xs)
+    y = hs.transpose(1, 0, 2).astype(xd)                   # [B,T,w]
+    out = (y * gate) @ lp["wo"].astype(xd)
+
+    if update:
+        # conv state: last CONV_W-1 *valid* inputs.  Valid tokens form a
+        # prefix, so gather at indices (n_valid-1 - k).
+        nv = jnp.sum(valid.astype(jnp.int32), axis=1)      # [B]
+        full = jnp.concatenate([conv_st.astype(xd), x], axis=1)  # [B,T+3,w]
+        idx = (CONV_W - 1) + nv[:, None] - jnp.arange(CONV_W - 1, 0, -1)[None]
+        conv_new = jnp.take_along_axis(full, idx[..., None], axis=1)
+        return out, rnn_new, conv_new
+    return out, rnn_h, conv_st
+
+
+# ---------------------------------------------------------------------------
+# local attention block with rolling window cache
+# ---------------------------------------------------------------------------
+
+def _rolling_write(win, win_pos, new, positions, valid):
+    """win: [B,W,Hk,Dh]; new: [B,T,Hk,Dh]; positions: [B,T]; valid: [B,T]."""
+    W = win.shape[1]
+    slots = positions % W                                   # [B,T]
+    # XLA scatter order for duplicate indices is undefined, so when T > W we
+    # keep only the *last* write per slot: tokens within W of the max valid
+    # position.  (positions are strictly increasing along T.)
+    maxp = jnp.max(jnp.where(valid, positions, -1), axis=1)  # [B]
+    keep = valid & (positions > maxp[:, None] - W)
+
+    def one(w, wp, n, s, v, p):
+        safe = jnp.where(v, s, W)  # W is out of bounds -> dropped
+        w = w.at[safe].set(n.astype(w.dtype), mode="drop")
+        wp = wp.at[safe].set(p, mode="drop")
+        return w, wp
+
+    win, win_pos = jax.vmap(one)(win, win_pos, new, slots, keep, positions)
+    return win, win_pos
+
+
+def _attn_block(cfg: ModelConfig, lp, h, positions, win, valid,
+                self_mask, inv_freq, mscale, update: bool):
+    """Sliding-window attention.  win = (k, v, pos) rolling cache or None
+    (train mode).  Returns (out, new_win)."""
+    x = cm.rmsnorm(h, lp["ln1"], cfg.norm_eps)
+    q = bk.project_q(cfg, lp["attn"], x, positions, inv_freq, mscale)
+    k_new, v_new = bk.project_kv(cfg, lp["attn"], x, positions, inv_freq,
+                                 mscale)
+    b, t = positions.shape
+    W = cfg.window_size
+
+    if win is None:  # train: pure windowed flash over the sequence itself
+        out = cm.flash_attention(q, k_new, v_new, q_positions=positions,
+                                 kv_positions=positions, causal=True,
+                                 window=W, chunk=min(512, max(128, t)))
+        return bk.attn_output(cfg, lp["attn"], out), None
+
+    wk, wv, wpos = win
+    # context part: rolling window slots, masked by window & causality
+    ok = ((wpos[:, None, None, :] >= 0)
+          & (wpos[:, None, None, :] < positions[:, None, :, None])
+          & (wpos[:, None, None, :] > positions[:, None, :, None] - W))
+    part_ctx = cm.dense_attn_part(q, wk, wv, mask=ok)
+    # self part: among the T new tokens (chain mask + window)
+    sm = self_mask
+    win_ok = (positions[:, None, :, None] - positions[:, None, None, :] < W)
+    sm = sm[:, None] & win_ok & valid[:, None, None, :]
+    part_self = cm.dense_attn_part(q, k_new, v_new, mask=sm)
+    out = cm.combine_attn_parts([part_ctx, part_self], h.dtype)
+
+    new_win = win
+    if update:
+        nwk, nwpos = _rolling_write(wk, wpos, k_new, positions, valid)
+        nwv, _ = _rolling_write(wv, wpos, v_new, positions, valid)
+        new_win = (nwk, nwv, nwpos)
+    return bk.attn_output(cfg, lp["attn"], out), new_win
+
+
+# ---------------------------------------------------------------------------
+# trunk
+# ---------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params, tokens, positions, state, *,
+            mode: str, valid=None, self_mask=None,
+            collect_features: bool = True):
+    """mode in {train, advance, verify}.  Returns (h, feats, new_state)."""
+    kinds = cfg.layer_kinds()
+    pattern, n_super, rem = superblock_decomp(kinds)
+    p_len = len(pattern)
+    rec_per = sum(1 for k in pattern if k == "rec")
+    att_per = sum(1 for k in pattern if k == "attn")
+    L = len(kinds)
+    f_lo, f_mi, f_hi = (max(0, L // 4), L // 2, L - 1)
+    inv_freq = jnp.asarray(cm.rope_inv_freq(cfg))
+    mscale = cm.yarn_mscale(cfg)
+    b, t = tokens.shape
+    if valid is None:
+        valid = jnp.ones((b, t), bool)
+    if self_mask is None:  # causal among new tokens
+        self_mask = (positions[:, :, None] >= positions[:, None, :])
+    update = mode == "advance"
+    use_cache = mode in ("advance", "verify")
+
+    h = cm.constrain_batch(params["embed"][tokens].astype(cm.dt(cfg.dtype)))
+
+    xs: Dict[str, Any] = {"slot_params": params["slots"],
+                          "sidx": jnp.arange(n_super)}
+    if use_cache:
+        def rs(a, n_per):
+            return a.reshape((n_super, n_per) + a.shape[1:])
+        xs["rnn_h"] = rs(state["rnn_h"][: n_super * rec_per], rec_per)
+        xs["conv"] = rs(state["conv"][: n_super * rec_per], rec_per)
+        if att_per:
+            xs["wk"] = rs(state["win_k"], att_per)
+            xs["wv"] = rs(state["win_v"], att_per)
+            xs["wpos"] = rs(state["win_pos"], att_per)
+
+    def body(carry, x):
+        if collect_features:
+            hh, flo, fmi, fhi = carry
+        else:
+            (hh,) = carry
+            flo = fmi = fhi = None
+        r_i = a_i = 0
+        ys: Dict[str, List] = {k: [] for k in
+                               ("rnn", "conv", "wk", "wv", "wpos")}
+        for j, kind in enumerate(pattern):
+            lp = x["slot_params"][j]
+            if kind == "rec":
+                rh = x["rnn_h"][r_i] if use_cache else jnp.zeros(
+                    (b, cfg.rnn_width or cfg.d_model), jnp.float32)
+                cs = x["conv"][r_i] if use_cache else jnp.zeros(
+                    (b, CONV_W - 1, cfg.rnn_width or cfg.d_model), hh.dtype)
+                y, nrh, ncs = _rec_block(cfg, lp, hh, rh, cs, valid, update)
+                hh = hh + y
+                if use_cache:
+                    ys["rnn"].append(nrh)
+                    ys["conv"].append(ncs)
+                r_i += 1
+            else:
+                win = ((x["wk"][a_i], x["wv"][a_i], x["wpos"][a_i])
+                       if use_cache else None)
+                y, nwin = _attn_block(cfg, lp, hh, positions, win, valid,
+                                      self_mask, inv_freq, mscale, update)
+                hh = hh + y
+                if use_cache:
+                    ys["wk"].append(nwin[0])
+                    ys["wv"].append(nwin[1])
+                    ys["wpos"].append(nwin[2])
+                a_i += 1
+            x2 = cm.rmsnorm(hh, lp["ln2"], cfg.norm_eps)
+            hh = cm.constrain_batch(hh + bk.mlp_fwd(cfg, lp["mlp"], x2))
+            if collect_features:
+                g = x["sidx"] * p_len + j
+                flo = jnp.where(g == f_lo, hh, flo)
+                fmi = jnp.where(g == f_mi, hh, fmi)
+                fhi = jnp.where(g == f_hi, hh, fhi)
+        ys_arr = {k: (jnp.stack(v) if len(v) > 1 else v[0][None])
+                  for k, v in ys.items() if v}
+        out_carry = (hh, flo, fmi, fhi) if collect_features else (hh,)
+        return out_carry, ys_arr
+
+    z = jnp.zeros_like(h)
+    if mode == "train" and cfg.remat:
+        body = jax.checkpoint(body)
+    carry0 = (h, z, z, z) if collect_features else (h,)
+    if collect_features:
+        (h, flo, fmi, fhi), ys = jax.lax.scan(body, carry0, xs)
+    else:
+        (h,), ys = jax.lax.scan(body, carry0, xs)
+        flo = fmi = fhi = None
+
+    new_state = dict(state) if state is not None else None
+    rem_rnn, rem_conv = [], []
+    for i, kind in enumerate(rem):
+        lp = params["rem"][i]
+        g = n_super * p_len + i
+        assert kind == "rec"
+        li = n_super * rec_per + i
+        rh = (state["rnn_h"][li] if use_cache else
+              jnp.zeros((b, cfg.rnn_width or cfg.d_model), jnp.float32))
+        cs = (state["conv"][li] if use_cache else
+              jnp.zeros((b, CONV_W - 1, cfg.rnn_width or cfg.d_model),
+                        h.dtype))
+        y, nrh, ncs = _rec_block(cfg, lp, h, rh, cs, valid, update)
+        h = h + y
+        x2 = cm.rmsnorm(h, lp["ln2"], cfg.norm_eps)
+        h = h + bk.mlp_fwd(cfg, lp["mlp"], x2)
+        rem_rnn.append(nrh)
+        rem_conv.append(ncs)
+        if collect_features:
+            if g == f_lo:
+                flo = h
+            if g == f_mi:
+                fmi = h
+            if g == f_hi:
+                fhi = h
+
+    if use_cache and update:
+        def flat(name):
+            a = ys[name]
+            return a.reshape((-1,) + a.shape[2:])
+        rnn = flat("rnn") if "rnn" in ys else state["rnn_h"][:0]
+        conv = flat("conv") if "conv" in ys else state["conv"][:0]
+        if rem_rnn:
+            rnn = jnp.concatenate([rnn, jnp.stack(rem_rnn)], axis=0)
+            conv = jnp.concatenate([conv, jnp.stack(rem_conv)], axis=0)
+        new_state["rnn_h"] = rnn
+        new_state["conv"] = conv
+        if "wk" in ys:
+            new_state["win_k"] = flat("wk")
+            new_state["win_v"] = flat("wv")
+            new_state["win_pos"] = flat("wpos")
+        new_state["length"] = state["length"] + jnp.sum(
+            valid.astype(jnp.int32), axis=1)
+
+    feats = (flo, fmi, fhi) if collect_features else None
+    return h, feats, (new_state if update else state)
+
+
+def lm_head(cfg: ModelConfig, params, h):
+    h = cm.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return (h @ w.astype(h.dtype)).astype(jnp.float32)

@@ -1,0 +1,237 @@
+"""RWKV-6 (Finch) — attention-free SSM with data-dependent decay
+[arXiv:2404.05892].
+
+Per layer: time-mixing (ddlerp token-shift + per-channel data-dependent
+decay WKV recurrence + per-head groupnorm + silu gate) and channel-mixing
+(squared-relu MLP with token shift).  The WKV recurrence runs as a
+``lax.scan`` over time (TPU: compact while-loop HLO; a chunked Pallas
+kernel is a recorded beyond-paper candidate).
+
+SpecPV applicability: attention-free ⇒ no KV cache ⇒ *partial verification
+is inapplicable* (DESIGN.md §Arch-applicability).  Speculation still works:
+we verify a drafted chain by scanning it and accepting the longest matching
+prefix; per-step states are collected so the engine can roll back to the
+acceptance point.
+
+State per layer: wkv [B, H, dk, dv], token-shift tm [B, d], cm [B, d].
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+
+LORA_RANK = 16
+DDLERP_TARGETS = 5  # w, k, v, r, g
+
+
+def _layer_init(cfg: ModelConfig, key) -> Dict:
+    pd = cm.dt(cfg.param_dtype)
+    d = cfg.d_model
+    dk = cfg.ssm_head_dim
+    h = d // dk
+    ks = cm.split_keys(key, 12)
+    decay0 = np.linspace(-6.0, -1.0, dk, dtype=np.float32)
+    w0 = np.tile(decay0[None, :], (h, 1))
+    return {
+        "ln1": jnp.ones((d,), pd),
+        "mu_first": jnp.zeros((d,), pd),
+        "mu_base": jnp.zeros((DDLERP_TARGETS, d), pd),
+        "lora_A": cm.dense_init(ks[0], (DDLERP_TARGETS, d, LORA_RANK),
+                                in_axis=-2, dtype=pd),
+        "lora_B": jnp.zeros((DDLERP_TARGETS, LORA_RANK, d), pd),
+        "w0": jnp.asarray(w0, jnp.float32),
+        "u": jnp.zeros((h, dk), jnp.float32),
+        "wd_A": cm.dense_init(ks[9], (d, 4 * LORA_RANK), dtype=pd),
+        "wd_B": jnp.zeros((4 * LORA_RANK, d), pd),
+        "wr": cm.dense_init(ks[1], (d, d), dtype=pd),
+        "wk": cm.dense_init(ks[2], (d, d), dtype=pd),
+        "wv": cm.dense_init(ks[3], (d, d), dtype=pd),
+        "wg": cm.dense_init(ks[4], (d, d), dtype=pd),
+        "wo": cm.dense_init(ks[5], (d, d), dtype=pd),
+        "gn_scale": jnp.ones((h, dk), jnp.float32),
+        "gn_bias": jnp.zeros((h, dk), jnp.float32),
+        "ln2": jnp.ones((d,), pd),
+        "cm_mu_k": jnp.zeros((d,), pd),
+        "cm_mu_r": jnp.zeros((d,), pd),
+        "cm_wk": cm.dense_init(ks[6], (d, cfg.d_ff), dtype=pd),
+        "cm_wv": cm.dense_init(ks[7], (cfg.d_ff, d), dtype=pd),
+        "cm_wr": cm.dense_init(ks[8], (d, d), dtype=pd),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> Dict:
+    pd = cm.dt(cfg.param_dtype)
+    ks = cm.split_keys(key, cfg.num_layers + 3)
+    per = [_layer_init(cfg, ks[i]) for i in range(cfg.num_layers)]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per)
+    p = {"embed": cm.embed_init(ks[-1], (cfg.vocab_size, cfg.d_model), pd),
+         "final_norm": jnp.ones((cfg.d_model,), pd),
+         "layers": stacked}
+    if not cfg.tie_embeddings:
+        p["head"] = cm.dense_init(ks[-2], (cfg.d_model, cfg.vocab_size),
+                                  dtype=pd)
+    return p
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    d = cfg.d_model
+    dk = cfg.ssm_head_dim
+    h = d // dk
+    L = cfg.num_layers
+    return {
+        "wkv": jnp.zeros((L, batch, h, dk, dk), jnp.float32),
+        "ts_tm": jnp.zeros((L, batch, d), dtype),
+        "ts_cm": jnp.zeros((L, batch, d), dtype),
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def _ddlerp(lp, x, xx):
+    """Data-dependent lerp (RWKV6).  x/xx: [B, T, d].
+    Returns 5 mixed inputs [B, T, d] each (w, k, v, r, g order)."""
+    xd = x.dtype
+    base = x + xx * lp["mu_first"].astype(xd)
+    # [B,T,5,r] = tanh(base @ A)
+    z = jnp.tanh(jnp.einsum("btd,sdr->btsr", base, lp["lora_A"].astype(xd)))
+    mix = lp["mu_base"].astype(xd)[None, None] + jnp.einsum(
+        "btsr,srd->btsd", z, lp["lora_B"].astype(xd))
+    out = x[:, :, None, :] + xx[:, :, None, :] * mix      # [B,T,5,d]
+    return [out[:, :, i] for i in range(DDLERP_TARGETS)]
+
+
+def _time_mix(cfg: ModelConfig, lp, x, ts, wkv, valid, last_idx):
+    """x: [B, T, d]; ts: [B, d] previous-token state; wkv: [B,H,dk,dk] fp32;
+    valid: [B, T] (padding suffix is masked out of state updates);
+    last_idx: [B] index of the last valid token (-1 if none).
+    Returns (y, new_ts, new_wkv)."""
+    b, t, d = x.shape
+    dk = cfg.ssm_head_dim
+    h = d // dk
+    prev = jnp.concatenate([ts[:, None], x[:, :-1]], axis=1)
+    xx = prev - x
+    xw, xk, xv, xr, xg = _ddlerp(lp, x, xx)
+    xd = x.dtype
+    r = (xr @ lp["wr"].astype(xd)).reshape(b, t, h, dk)
+    k = (xk @ lp["wk"].astype(xd)).reshape(b, t, h, dk)
+    v = (xv @ lp["wv"].astype(xd)).reshape(b, t, h, dk)
+    g = jax.nn.silu(xg @ lp["wg"].astype(xd))
+    # data-dependent decay (Finch): w = exp(-exp(w0 + tanh(xw A_d) B_d))
+    dec = jnp.tanh(xw @ lp["wd_A"].astype(xd)) @ lp["wd_B"].astype(xd)
+    wlog = lp["w0"][None, None] + dec.reshape(b, t, h, dk).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(wlog))                           # (0,1) decay
+    u = lp["u"][None]                                     # [1,H,dk]
+
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt, mt = inp                          # [B,H,dk] + [B]
+        kv = kt[..., :, None] * vt[..., None, :]          # [B,H,dk,dk]
+        yt = jnp.einsum("bhi,bhij->bhj", rt, s + u[..., None] * kv)
+        s_new = wt[..., None] * s + kv
+        mt4 = mt[:, None, None, None]
+        s_new = jnp.where(mt4, s_new, s)                  # padding: no-op
+        return s_new, yt
+
+    xs = (rf.transpose(1, 0, 2, 3), kf.transpose(1, 0, 2, 3),
+          vf.transpose(1, 0, 2, 3), w.transpose(1, 0, 2, 3),
+          valid.transpose(1, 0))
+    wkv_new, ys = cm.ckpt_chunked_scan(step, wkv, xs)
+    y = ys.transpose(1, 0, 2, 3)                          # [B,T,H,dk]
+    y = cm.groupnorm_heads(y, lp["gn_scale"], lp["gn_bias"])
+    y = (y.reshape(b, t, d).astype(xd) * g) @ lp["wo"].astype(xd)
+    new_ts = jnp.where(last_idx[:, None] >= 0,
+                       jnp.take_along_axis(
+                           x, jnp.maximum(last_idx, 0)[:, None, None],
+                           axis=1)[:, 0], ts)
+    return y, new_ts, wkv_new
+
+
+def _channel_mix(cfg: ModelConfig, lp, x, ts, last_idx):
+    b, t, d = x.shape
+    prev = jnp.concatenate([ts[:, None], x[:, :-1]], axis=1)
+    xx = prev - x
+    xd = x.dtype
+    xk = x + xx * lp["cm_mu_k"].astype(xd)
+    xr = x + xx * lp["cm_mu_r"].astype(xd)
+    kk = jnp.square(jax.nn.relu(xk @ lp["cm_wk"].astype(xd)))
+    out = jax.nn.sigmoid(xr @ lp["cm_wr"].astype(xd)) * (
+        kk @ lp["cm_wv"].astype(xd))
+    new_ts = jnp.where(last_idx[:, None] >= 0,
+                       jnp.take_along_axis(
+                           x, jnp.maximum(last_idx, 0)[:, None, None],
+                           axis=1)[:, 0], ts)
+    return out, new_ts
+
+
+def forward(cfg: ModelConfig, params, tokens, state, *,
+            valid=None, update: bool = True,
+            collect_features: bool = True):
+    """Process T tokens (train chunk / prefill chunk / chain verify /
+    post-acceptance replay).  valid marks a *prefix* of real tokens; padding
+    never touches the state.  update=False -> read-only (chain verify).
+
+    Returns (h_final [B,T,d], features, new_state).
+    """
+    b, t = tokens.shape
+    if valid is None:
+        valid = jnp.ones((b, t), bool)
+    last_idx = jnp.sum(valid.astype(jnp.int32), axis=1) - 1   # [B], -1 if none
+    h = cm.constrain_batch(params["embed"][tokens].astype(cm.dt(cfg.dtype)))
+    L = cfg.num_layers
+    f_lo, f_mi, f_hi = (max(0, L // 4), L // 2, L - 1)
+
+    def body(carry, xs):
+        if collect_features:
+            hh, flo, fmi, fhi, li = carry
+        else:
+            hh, li = carry
+            flo = fmi = fhi = None
+        lp, wkv, ts_tm, ts_cm = xs
+        x1 = cm.rmsnorm(hh, lp["ln1"], cfg.norm_eps)
+        y, nts_tm, nwkv = _time_mix(cfg, lp, x1, ts_tm, wkv, valid, last_idx)
+        hh = hh + y
+        x2 = cm.rmsnorm(hh, lp["ln2"], cfg.norm_eps)
+        y2, nts_cm = _channel_mix(cfg, lp, x2, ts_cm, last_idx)
+        hh = cm.constrain_batch(hh + y2)
+        if collect_features:
+            flo = jnp.where(li == f_lo, hh, flo)
+            fmi = jnp.where(li == f_mi, hh, fmi)
+            fhi = jnp.where(li == f_hi, hh, fhi)
+            return (hh, flo, fmi, fhi, li + 1), (nwkv, nts_tm, nts_cm)
+        return (hh, li + 1), (nwkv, nts_tm, nts_cm)
+
+    z = jnp.zeros_like(h)
+    if not update and cfg.remat and t > 64:
+        body = jax.checkpoint(body)   # train path (read-only long chunks)
+    li0 = jnp.zeros((), jnp.int32)
+    xs_all = (params["layers"], state["wkv"], state["ts_tm"], state["ts_cm"])
+    if collect_features:
+        (h, flo, fmi, fhi, _), (wkv, ts_tm, ts_cm) = jax.lax.scan(
+            body, (h, z, z, z, li0), xs_all)
+    else:
+        (h, _), (wkv, ts_tm, ts_cm) = jax.lax.scan(body, (h, li0), xs_all)
+        flo = fmi = fhi = None
+    feats = (flo, fmi, fhi) if collect_features else None
+    if not update:
+        return h, feats, state
+    new_state = dict(state)
+    new_state["wkv"] = wkv
+    new_state["ts_tm"] = ts_tm
+    new_state["ts_cm"] = ts_cm
+    new_state["length"] = state["length"] + jnp.sum(valid.astype(jnp.int32),
+                                                    axis=1)
+    return h, feats, new_state
+
+
+def lm_head(cfg: ModelConfig, params, h):
+    h = cm.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return (h @ w.astype(h.dtype)).astype(jnp.float32)

@@ -1,0 +1,4 @@
+from repro.serving.request import Request, RequestOutput
+from repro.serving.engine import ServingEngine, ServingConfig
+
+__all__ = ["Request", "RequestOutput", "ServingEngine", "ServingConfig"]

@@ -1,0 +1,121 @@
+"""Batched SpecPV serving engine.
+
+Wave scheduler: pending requests are bucketed by prompt length (SpecPV's
+lock-step batch needs equal prefixes) and executed as fixed-size waves
+through one shared ``SpecPVEngine``.  Each wave runs chunked prefill,
+then draft/verify steps with the mode automaton (Full -> Refresh ->
+Partial* -> Refresh ...), streaming accepted tokens back per request.
+
+Continuous (in-flight) batching is an extension point: it needs per-slot
+cache eviction in the engine state, which the blocked cache layout
+already permits (slot = batch row).
+"""
+from __future__ import annotations
+
+import time
+from collections import defaultdict
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, SpecPVConfig, DraftConfig
+from repro.core.engine import SpecPVEngine
+from repro.serving.request import Request, RequestOutput
+
+
+@dataclass
+class ServingConfig:
+    batch: int = 4
+    max_len: int = 4096
+    prefill_chunk: int = 256
+    partial_verification: bool = True
+    pad_id: int = 0
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, spec: SpecPVConfig,
+                 dcfg: DraftConfig, params, draft_params,
+                 scfg: Optional[ServingConfig] = None):
+        self.cfg = cfg
+        self.spec = spec
+        self.dcfg = dcfg
+        self.scfg = scfg or ServingConfig()
+        self.params = params
+        self.dparams = draft_params
+        self.queue: List[Request] = []
+        self.outputs: Dict[str, RequestOutput] = {}
+        self._engines: Dict[int, SpecPVEngine] = {}
+        self._wave_id = 0
+        self.stats = defaultdict(float)
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _engine_for(self, batch: int) -> SpecPVEngine:
+        if batch not in self._engines:
+            self._engines[batch] = SpecPVEngine(
+                self.cfg, self.spec, self.dcfg, self.params, self.dparams,
+                batch=batch, max_len=self.scfg.max_len,
+                partial_verification=self.scfg.partial_verification)
+        return self._engines[batch]
+
+    def _next_wave(self) -> Optional[List[Request]]:
+        if not self.queue:
+            return None
+        buckets: Dict[int, List[Request]] = defaultdict(list)
+        for r in self.queue:
+            buckets[len(r.prompt)].append(r)
+        # largest bucket first
+        length = max(buckets, key=lambda k: len(buckets[k]))
+        wave = buckets[length][: self.scfg.batch]
+        for r in wave:
+            self.queue.remove(r)
+        # pad the wave to full batch by repeating the last request (its
+        # output is discarded) so the jitted step shapes stay constant
+        while len(wave) < self.scfg.batch:
+            wave.append(wave[-1])
+        return wave
+
+    def run(self) -> List[RequestOutput]:
+        """Drain the queue; returns outputs in completion order."""
+        done: List[RequestOutput] = []
+        while self.queue:
+            wave = self._next_wave()
+            if wave is None:
+                break
+            t0 = time.time()
+            engine = self._engine_for(len(wave))
+            prompts = np.stack([r.prompt for r in wave])
+            max_new = max(r.max_new_tokens for r in wave)
+            eos = wave[0].eos_id
+            toks, stats = engine.generate(
+                prompts, max_new, eos_id=eos,
+                prefill_chunk=self.scfg.prefill_chunk)
+            dt = time.time() - t0
+            seen = set()
+            for i, r in enumerate(wave):
+                if r.request_id in seen:
+                    continue
+                seen.add(r.request_id)
+                row = toks[i]
+                row = row[row >= 0][: r.max_new_tokens]
+                if r.eos_id >= 0 and (row == r.eos_id).any():
+                    row = row[: int(np.argmax(row == r.eos_id)) + 1]
+                out = RequestOutput(
+                    request_id=r.request_id, tokens=row,
+                    prompt_len=len(r.prompt), finished=True,
+                    wave_id=self._wave_id, latency_s=dt,
+                    mean_accept=stats["mean_accept"],
+                    tokens_per_step=stats["tokens_per_step"])
+                self.outputs[r.request_id] = out
+                done.append(out)
+            self.stats["waves"] += 1
+            self.stats["wall_s"] += dt
+            self.stats["tokens"] += sum(len(o.tokens) for o in done
+                                        if o.wave_id == self._wave_id)
+            self._wave_id += 1
+        return done
+
+    def throughput_tok_s(self) -> float:
+        return self.stats["tokens"] / max(self.stats["wall_s"], 1e-9)

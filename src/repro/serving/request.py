@@ -1,0 +1,29 @@
+"""Request / output records for the serving engine."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    request_id: str
+    prompt: np.ndarray                  # [S] int32 token ids
+    max_new_tokens: int = 128
+    eos_id: int = -1
+    arrival_s: float = field(default_factory=time.time)
+
+
+@dataclass
+class RequestOutput:
+    request_id: str
+    tokens: np.ndarray                  # generated ids
+    prompt_len: int
+    finished: bool
+    wave_id: int = -1
+    latency_s: float = 0.0
+    mean_accept: float = 0.0
+    tokens_per_step: float = 0.0

@@ -1,0 +1,6 @@
+from repro.train.optimizer import (adamw_init, adamw_update, OptState,
+                                   cosine_schedule, clip_by_global_norm)
+from repro.train.trainer import Trainer, TrainConfig
+
+__all__ = ["adamw_init", "adamw_update", "OptState", "cosine_schedule",
+           "clip_by_global_norm", "Trainer", "TrainConfig"]

@@ -1,0 +1,40 @@
+"""Flat-npz checkpointing (no orbax dependency)."""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix="") -> Dict[str, np.ndarray]:
+    out = {}
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_checkpoint(path: str, params: Any, step: int = 0) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(params)
+    flat["__step__"] = np.asarray(step)
+    np.savez(path, **flat)
+
+
+def load_checkpoint(path: str, params_template: Any):
+    """Restore into the structure of ``params_template``."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat_t, treedef = jax.tree_util.tree_flatten_with_path(params_template)
+    leaves = []
+    for p, leaf in flat_t:
+        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                       for q in p)
+        arr = data[key]
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        leaves.append(arr.astype(leaf.dtype))
+    step = int(data["__step__"]) if "__step__" in data else 0
+    return jax.tree_util.tree_unflatten(treedef, leaves), step

@@ -1,0 +1,84 @@
+"""Target-model trainer: pjit'd step (loss -> grads -> clip -> AdamW) with
+mesh-aware sharding; runs on a single CPU device transparently.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+from repro.train.optimizer import (adamw_init, adamw_update, OptState,
+                                   cosine_schedule, clip_by_global_norm)
+from repro.train.checkpoint import save_checkpoint
+
+
+@dataclass
+class TrainConfig:
+    base_lr: float = 3e-4
+    warmup: int = 50
+    total_steps: int = 500
+    max_grad_norm: float = 1.0
+    weight_decay: float = 0.1
+    log_every: int = 20
+    ckpt_path: Optional[str] = None
+    ckpt_every: int = 500
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig, params=None,
+                 seed: int = 0, mesh=None, extra: Optional[Dict] = None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        if params is None:
+            params = api.init_params(cfg, jax.random.PRNGKey(seed))
+        self.params = params
+        self.opt = adamw_init(params)
+        self.extra = extra
+        self.mesh = mesh
+        self.history: list = []
+
+        def step_fn(params, opt, tokens, extra):
+            def loss_fn(p):
+                loss, metrics = api.train_loss(cfg, p, tokens, extra=extra)
+                return loss, metrics
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params)
+            grads, gnorm = clip_by_global_norm(grads, tcfg.max_grad_norm)
+            lr = cosine_schedule(opt.step, base_lr=tcfg.base_lr,
+                                 warmup=tcfg.warmup, total=tcfg.total_steps)
+            params, opt = adamw_update(params, grads, opt, lr=lr,
+                                       weight_decay=tcfg.weight_decay)
+            metrics = dict(metrics, grad_norm=gnorm, lr=lr, loss=loss)
+            return params, opt, metrics
+
+        self._step = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    def fit(self, data: Iterator[np.ndarray], steps: Optional[int] = None
+            ) -> Dict[str, Any]:
+        steps = steps or self.tcfg.total_steps
+        t0 = time.time()
+        for i in range(steps):
+            tokens = jnp.asarray(next(data))
+            self.params, self.opt, metrics = self._step(
+                self.params, self.opt, tokens, self.extra)
+            if i % self.tcfg.log_every == 0 or i == steps - 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step"] = i
+                m["wall_s"] = time.time() - t0
+                self.history.append(m)
+                print(f"[train {self.cfg.name}] step={i} "
+                      f"loss={m['loss']:.4f} lr={m['lr']:.2e} "
+                      f"gnorm={m['grad_norm']:.2f} ({m['wall_s']:.0f}s)")
+            if (self.tcfg.ckpt_path and i > 0
+                    and i % self.tcfg.ckpt_every == 0):
+                save_checkpoint(self.tcfg.ckpt_path, self.params, step=i)
+        if self.tcfg.ckpt_path:
+            save_checkpoint(self.tcfg.ckpt_path, self.params, step=steps)
+        return {"final_loss": self.history[-1]["loss"],
+                "history": self.history}

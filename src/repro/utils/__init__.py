@@ -1,0 +1,5 @@
+from repro.utils.pytree import pytree_dataclass, field
+from repro.utils.misc import cdiv, round_up, tree_size_bytes, human_bytes
+
+__all__ = ["pytree_dataclass", "field", "cdiv", "round_up",
+           "tree_size_bytes", "human_bytes"]

@@ -1,0 +1,26 @@
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b
+
+
+def tree_size_bytes(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return int(sum(np.prod(l.shape) * np.dtype(l.dtype).itemsize
+                   for l in leaves if hasattr(l, "shape")))
+
+
+def human_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(n) < 1024.0:
+            return f"{n:.2f}{unit}"
+        n /= 1024.0
+    return f"{n:.2f}PiB"

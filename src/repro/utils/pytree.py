@@ -1,0 +1,39 @@
+"""Tiny pytree-dataclass helper (we do not depend on flax).
+
+``pytree_dataclass`` registers a frozen dataclass with jax so instances can
+flow through jit/scan/pjit.  Fields marked ``static=True`` become aux data
+(hashable, not traced).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+
+
+def field(*, static: bool = False, **kwargs: Any) -> dataclasses.Field:
+    metadata = dict(kwargs.pop("metadata", {}) or {})
+    metadata["static"] = static
+    return dataclasses.field(metadata=metadata, **kwargs)
+
+
+def pytree_dataclass(cls=None, /):
+    """Decorator: frozen dataclass registered as a jax pytree."""
+
+    def wrap(c):
+        c = dataclasses.dataclass(frozen=True)(c)
+        data_fields = []
+        meta_fields = []
+        for f in dataclasses.fields(c):
+            if f.metadata.get("static", False):
+                meta_fields.append(f.name)
+            else:
+                data_fields.append(f.name)
+        jax.tree_util.register_dataclass(
+            c, data_fields=data_fields, meta_fields=meta_fields)
+        return c
+
+    if cls is None:
+        return wrap
+    return wrap(cls)

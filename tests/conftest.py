@@ -1,0 +1,35 @@
+import os
+import sys
+
+# tests must see exactly ONE device (the dry-run sets its own flag)
+os.environ.setdefault("XLA_FLAGS", "")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import SpecPVConfig, DraftConfig
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def small_spec():
+    """Block/budget sizes scaled for tiny CPU models."""
+    return SpecPVConfig(block_size=16, num_sink_blocks=1,
+                        retrieval_budget_blocks=4, local_window_blocks=2,
+                        buffer_size=48)
+
+
+@pytest.fixture(scope="session")
+def small_dcfg():
+    return DraftConfig(tree_depth=3, tree_branch=(2, 2, 1), ttt_steps=2)

@@ -1,0 +1,60 @@
+"""Data pipeline determinism + serving wave scheduler."""
+import numpy as np
+
+from repro.data import SyntheticCorpus, batch_iterator, continuation_task
+from repro.launch.hlo_analysis import parse_collective_bytes
+
+
+def test_corpus_deterministic():
+    c1 = SyntheticCorpus(vocab_size=128, order=1, seed=3)
+    c2 = SyntheticCorpus(vocab_size=128, order=1, seed=3)
+    np.testing.assert_array_equal(c1.tokens(500, seed=1),
+                                  c2.tokens(500, seed=1))
+    assert not np.array_equal(c1.tokens(500, seed=1), c1.tokens(500, seed=2))
+    assert c1.tokens(500).max() < 128
+
+
+def test_batch_iterator_shapes():
+    c = SyntheticCorpus(vocab_size=64, order=1)
+    it = batch_iterator(c, batch=3, seq_len=32)
+    b1 = next(it)
+    b2 = next(it)
+    assert b1.shape == (3, 33)
+    assert not np.array_equal(b1, b2)
+
+
+def test_continuation_task():
+    c = SyntheticCorpus(vocab_size=64, order=1)
+    p, r = continuation_task(c, batch=2, context_len=50)
+    assert p.shape == (2, 50) and r.shape == (2, 256)
+
+
+def test_parse_collective_bytes():
+    hlo = """
+  %ag = f32[16,128]{1,0} all-gather(%x), replica_groups={}
+  %ar.1 = bf16[8,8]{1,0} all-reduce(%y), to_apply=%add
+  %cp = f32[4]{0} collective-permute(%z)
+  %other = f32[2,2]{1,0} add(%a, %b)
+"""
+    out = parse_collective_bytes(hlo)
+    assert out["all-gather"] == 16 * 128 * 4
+    assert out["all-reduce"] == 8 * 8 * 2
+    assert out["collective-permute"] == 4 * 4
+    assert out["counts"]["all-gather"] == 1
+
+
+def test_serving_wave_scheduler(monkeypatch):
+    """Scheduler buckets by prompt length and pads waves."""
+    from repro.serving import ServingEngine, ServingConfig, Request
+    from repro.configs import get_config, SpecPVConfig, DraftConfig
+
+    srv = ServingEngine(get_config("tiny-dense"), SpecPVConfig(),
+                        DraftConfig(), None, None,
+                        ServingConfig(batch=2))
+    for i, L in enumerate([10, 20, 10, 10]):
+        srv.submit(Request(request_id=f"r{i}",
+                           prompt=np.zeros(L, np.int32)))
+    wave = srv._next_wave()
+    assert len(wave) == 2
+    assert all(len(r.prompt) == 10 for r in wave)
+    assert len(srv.queue) == 2

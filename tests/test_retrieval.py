@@ -1,0 +1,91 @@
+"""Property tests for the Quest-style retrieval (hypothesis) and partial
+cache selection invariants (DESIGN.md §7)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import SpecPVConfig
+from repro.models.dense import (quest_block_scores,
+                                select_and_gather_partial)
+from repro.kernels import ref
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_quest_elementwise_bound(seed):
+    """The elementwise summary score upper-bounds q . k for every key in
+    the block (the Quest guarantee)."""
+    rng = np.random.default_rng(seed)
+    bs, dh = 8, 16
+    k = rng.standard_normal((bs, dh)).astype(np.float32)
+    q = rng.standard_normal((dh,)).astype(np.float32)
+    kmax = k.max(0)
+    kmin = k.min(0)
+    bound = np.maximum(q * kmax, q * kmin).sum()
+    true = (k @ q).max()
+    assert bound >= true - 1e-4
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from(["mean", "max", "last"]))
+def test_selection_invariants(seed, reduction):
+    rng = np.random.default_rng(seed)
+    spec = SpecPVConfig(block_size=8, num_sink_blocks=1,
+                        retrieval_budget_blocks=3, local_window_blocks=2,
+                        buffer_size=16, reduction=reduction)
+    b, s, hk, dh, h, t = 2, 128, 2, 8, 4, 5
+    k = jnp.asarray(rng.standard_normal((b, s, hk, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, hk, dh)), jnp.float32)
+    length = jnp.asarray(rng.integers(60, 120, size=b), jnp.int32)
+    km, kn = jax.vmap(lambda kk, ll: ref.block_summary_ref(kk, ll, 8))(
+        k, length)
+    q = jnp.asarray(rng.standard_normal((b, t, h, dh)), jnp.float32)
+    qw = jnp.ones((b, t), jnp.float32)
+    scores = quest_block_scores(q, km, kn, qw, score_mode=spec.score_mode,
+                                reduction=reduction)
+    pk, pv, ppos = select_and_gather_partial(spec, scores, k, v, length)
+    pos = np.asarray(ppos)
+    L = np.asarray(length)
+    bs_ = spec.block_size
+    for bi in range(b):
+        for hi in range(hk):
+            p = pos[bi, hi]
+            valid = p[p >= 0]
+            # 1. every valid slot points inside the filled region
+            assert (valid < L[bi]).all()
+            # 2. no duplicate tokens
+            assert len(set(valid.tolist())) == len(valid)
+            # 3. sink tokens always present
+            assert set(range(bs_)) <= set(valid.tolist())
+            # 4. local window present: the block-aligned tail
+            last_block = (L[bi] + bs_ - 1) // bs_
+            loc_lo = max(last_block - spec.local_window_blocks, 0) * bs_
+            expect_local = set(range(loc_lo, L[bi]))
+            assert expect_local <= set(valid.tolist())
+            # 5. gathered keys match the cache at their positions
+            kcache = np.asarray(k[bi, :, hi])
+            for slot, p_ in enumerate(p):
+                if p_ >= 0:
+                    np.testing.assert_allclose(
+                        np.asarray(pk[bi, hi, slot]), kcache[p_],
+                        rtol=1e-6)
+
+
+def test_paper_vs_quest_score_modes():
+    """Both score modes run and rank an exact-match block highest."""
+    rng = np.random.default_rng(0)
+    b, s, hk, dh, h, t, bs = 1, 64, 1, 8, 2, 3, 8
+    k = jnp.asarray(rng.standard_normal((b, s, hk, dh)) * 0.1, jnp.float32)
+    # make block 3 contain keys aligned with the query direction
+    q = jnp.asarray(rng.standard_normal((b, t, h, dh)), jnp.float32)
+    qmean = q.mean(axis=(1, 2))
+    k = k.at[:, 24:32].add(qmean[:, None, None] * 3.0)
+    length = jnp.full((b,), s, jnp.int32)
+    km, kn = jax.vmap(lambda kk, ll: ref.block_summary_ref(kk, ll, bs))(
+        k, length)
+    qw = jnp.ones((b, t), jnp.float32)
+    for mode in ("paper", "quest"):
+        sc = quest_block_scores(q, km, kn, qw, score_mode=mode,
+                                reduction="mean")
+        assert int(jnp.argmax(sc[0, 0])) == 3, mode

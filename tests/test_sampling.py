@@ -1,0 +1,80 @@
+"""Statistical losslessness of stochastic tree verification: the first
+emitted token must be distributed exactly as the target distribution,
+regardless of the draft (SpecInfer Thm. 1 / Leviathan correctness)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.tree import TreeSpec
+from repro.core.sampling import tree_speculative_sample
+
+
+@pytest.mark.parametrize("branch", [(1, 1), (2, 1), (3,)])
+def test_first_token_distribution(branch):
+    v = 8
+    tree = TreeSpec.from_branch(branch)
+    t = tree.size
+    rng = np.random.default_rng(0)
+    target_logits = jnp.asarray(rng.standard_normal((1, 1 + t, v)) * 1.5,
+                                jnp.float32)
+    draft_logits = jnp.asarray(rng.standard_normal((1, 1 + t, v)) * 1.5,
+                               jnp.float32)
+    # stochastic mode requires children drawn i.i.d. from the parent's
+    # draft distribution, and the losslessness guarantee is MARGINAL over
+    # draft resampling — so each trial redraws the tree
+    root_slot = jnp.zeros((1,), jnp.int32)
+    node_slots = (1 + jnp.arange(t))[None]
+    parent_rows = jnp.asarray([1 + p if p >= 0 else 0
+                               for p in tree.parents])
+    node_q_logits = draft_logits[0, parent_rows]          # [T, V]
+
+    n_samples = 4000
+    keys = jax.random.split(jax.random.PRNGKey(42), n_samples)
+
+    @jax.jit
+    def draw(key):
+        k1, k2 = jax.random.split(key)
+        toks = jax.random.categorical(k1, node_q_logits, axis=-1)
+        tree_tokens = toks.astype(jnp.int32)[None]
+        path, acc, bonus = tree_speculative_sample(
+            tree, tree_tokens, draft_logits, target_logits, root_slot,
+            node_slots, k2)
+        first = jnp.where(acc[0] > 0,
+                          tree_tokens[0, jnp.maximum(path[0, 0], 0)],
+                          bonus[0])
+        return first
+
+    samples = np.asarray(jax.vmap(draw)(keys))
+    emp = np.bincount(samples, minlength=v) / n_samples
+    expect = np.asarray(jax.nn.softmax(target_logits[0, 0]))
+    # multinomial 3-sigma bound per bucket
+    sigma = np.sqrt(expect * (1 - expect) / n_samples)
+    assert (np.abs(emp - expect) < 4 * sigma + 0.01).all(), \
+        (emp, expect)
+
+
+def test_greedy_limit():
+    """At near-zero temperature the stochastic sampler reduces to the
+    greedy acceptance."""
+    from repro.core.tree import greedy_tree_accept
+    v = 12
+    tree = TreeSpec.from_branch((2, 1))
+    t = tree.size
+    rng = np.random.default_rng(3)
+    target_logits = jnp.asarray(rng.standard_normal((2, 1 + t, v)),
+                                jnp.float32)
+    draft_logits = jnp.asarray(rng.standard_normal((2, 1 + t, v)),
+                               jnp.float32)
+    tree_tokens = jnp.asarray(rng.integers(0, v, (2, t)), jnp.int32)
+    root_slot = jnp.zeros((2,), jnp.int32)
+    node_slots = jnp.broadcast_to(1 + jnp.arange(t)[None], (2, t))
+    path_s, acc_s, bonus_s = tree_speculative_sample(
+        tree, tree_tokens, draft_logits, target_logits, root_slot,
+        node_slots, jax.random.PRNGKey(0), temperature=1e-5)
+    path_g, acc_g, bonus_g, _ = greedy_tree_accept(
+        tree, tree_tokens, target_logits, root_slot, node_slots)
+    # at temperature->0, acceptance happens iff the token is the argmax,
+    # so accept lengths and bonuses agree
+    assert np.array_equal(np.asarray(acc_s), np.asarray(acc_g))
+    assert np.array_equal(np.asarray(bonus_s), np.asarray(bonus_g))

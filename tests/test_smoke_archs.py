@@ -1,0 +1,55 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch, as a
+REDUCED variant of the same family (<=2 layers, d_model<=256, <=4 experts),
+runs one forward/train step on CPU with correct output shapes and no NaNs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, ASSIGNED_ARCHS
+from repro.models import api
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_reduced_train_step(arch, key):
+    cfg = get_config(arch).reduced()
+    assert cfg.num_layers <= 2 or cfg.arch_type == "hybrid"
+    assert cfg.d_model <= 256
+    if cfg.num_experts:
+        assert cfg.num_experts <= 4
+    params = api.init_params(cfg, key)
+    b, s = 2, 24
+    toks = jnp.asarray(np.random.default_rng(1).integers(
+        0, cfg.vocab_size, (b, s)))
+    extra = api.extra_inputs_for(cfg, b, jax.random.PRNGKey(3)) or None
+    loss, metrics = api.train_loss(cfg, params, toks, extra=extra)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch}: non-finite loss"
+    grads = jax.grad(lambda p: api.train_loss(cfg, p, toks, extra=extra)[0]
+                     )(params)
+    gn = sum(float(jnp.sum(jnp.square(g.astype(jnp.float32))))
+             for g in jax.tree_util.tree_leaves(grads))
+    assert np.isfinite(gn) and gn > 0, f"{arch}: bad grads"
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_reduced_prefill_decode(arch, key, small_spec):
+    cfg = get_config(arch).reduced()
+    params = api.init_params(cfg, key)
+    b, s = 2, 20
+    toks = jnp.asarray(np.random.default_rng(2).integers(
+        0, cfg.vocab_size, (b, s + 2)))
+    extra = api.extra_inputs_for(cfg, b, jax.random.PRNGKey(4)) or None
+    cache = api.init_cache(cfg, b, 128, small_spec)
+    logits, feats, cache = api.prefill(cfg, params, toks[:, :s], cache,
+                                       extra=extra, spec=small_spec)
+    assert logits.shape == (b, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    assert feats.low.shape == (b, s, cfg.d_model)
+    # one-token decode
+    pos = cache["length"][:, None]
+    out = api.decode(cfg, params, toks[:, s:s + 1], pos, cache,
+                     spec=small_spec)
+    assert out.logits.shape == (b, 1, cfg.vocab_size)
+    assert bool(jnp.isfinite(out.logits).all()), f"{arch}: NaN decode logits"

@@ -1,0 +1,104 @@
+"""Draft-tree topology + acceptance properties (hypothesis)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tree import TreeSpec, greedy_tree_accept, chain_accept_greedy
+
+
+def test_topology():
+    tree = TreeSpec.from_branch((2, 2, 1))
+    assert tree.size == 2 + 4 + 4
+    assert tree.parents[:2] == (-1, -1)
+    anc = tree.ancestor_mask()
+    # every node is its own ancestor; roots have exactly one ancestor
+    assert anc.diagonal().all()
+    assert anc[0].sum() == 1
+    # leaves at depth 2 have 3 ancestors
+    assert anc[-1].sum() == 3
+
+
+branches = st.sampled_from([(1, 1, 1), (2, 1), (2, 2, 1), (3, 2)])
+
+
+@settings(max_examples=25, deadline=None)
+@given(branches, st.integers(0, 2**31 - 1))
+def test_greedy_accept_is_argmax_path(branch, seed):
+    """Accepted tokens must equal the target argmax chain, and accept_len
+    must equal the longest drafted prefix of that chain."""
+    rng = np.random.default_rng(seed)
+    tree = TreeSpec.from_branch(branch)
+    b, v = 2, 12
+    t = tree.size
+    p = 1  # single pending (x_b) slot
+    s = p + t
+    logits = jnp.asarray(rng.standard_normal((b, s, v)), jnp.float32)
+    tree_tokens = jnp.asarray(rng.integers(0, v, (b, t)), jnp.int32)
+    root_slot = jnp.zeros((b,), jnp.int32)
+    node_slots = jnp.broadcast_to(p + jnp.arange(t)[None], (b, t))
+    path, acc, bonus, bparent = greedy_tree_accept(
+        tree, tree_tokens, logits, root_slot, node_slots)
+    am = np.asarray(jnp.argmax(logits, -1))
+    tt = np.asarray(tree_tokens)
+    pa, ac, bo = np.asarray(path), np.asarray(acc), np.asarray(bonus)
+    for bi in range(b):
+        # brute-force DFS: deepest greedy-consistent path (duplicate sibling
+        # tokens make several equally-valid node paths; token sequences and
+        # depths must agree)
+        def deepest(parent_slot, nodes):
+            best = ([], parent_slot)
+            want = am[bi, parent_slot]
+            for n in nodes:
+                if tt[bi, n] != want:
+                    continue
+                kids = [m for m in range(t) if tree.parents[m] == n]
+                sub, last = deepest(p + n, kids)
+                if 1 + len(sub) > len(best[0]):
+                    best = ([n] + sub, last)
+            return best
+
+        expect, last_slot = deepest(
+            0, [n for n in range(t) if tree.parents[n] == -1])
+        assert ac[bi] == len(expect)
+        got = [x for x in pa[bi] if x >= 0]
+        # node ids may differ under duplicates; token sequences must match
+        assert [tt[bi, x] for x in got] == [tt[bi, x] for x in expect]
+        assert bo[bi] == am[bi, last_slot]
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_chain_accept_prefix(seed):
+    rng = np.random.default_rng(seed)
+    b, t, v = 2, 5, 9
+    s = 1 + t
+    logits = jnp.asarray(rng.standard_normal((b, s, v)), jnp.float32)
+    chain = jnp.asarray(rng.integers(0, v, (b, t)), jnp.int32)
+    root_slot = jnp.zeros((b,), jnp.int32)
+    slots = jnp.broadcast_to(1 + jnp.arange(t)[None], (b, t))
+    acc, bonus, bparent = chain_accept_greedy(chain, logits, root_slot,
+                                              slots)
+    am = np.asarray(jnp.argmax(logits, -1))
+    ch = np.asarray(chain)
+    for bi in range(b):
+        n = 0
+        slot = 0
+        while n < t and ch[bi, n] == am[bi, slot]:
+            slot = 1 + n
+            n += 1
+        assert int(acc[bi]) == n
+        assert int(bonus[bi]) == am[bi, slot]
+
+
+def test_chain_equals_tree_with_branch_one():
+    rng = np.random.default_rng(7)
+    tree = TreeSpec.from_branch((1, 1, 1))
+    b, v, t = 2, 8, 3
+    logits = jnp.asarray(rng.standard_normal((b, 1 + t, v)), jnp.float32)
+    toks = jnp.asarray(rng.integers(0, v, (b, t)), jnp.int32)
+    root = jnp.zeros((b,), jnp.int32)
+    slots = jnp.broadcast_to(1 + jnp.arange(t)[None], (b, t))
+    _, acc_t, bon_t, _ = greedy_tree_accept(tree, toks, logits, root, slots)
+    acc_c, bon_c, _ = chain_accept_greedy(toks, logits, root, slots)
+    assert np.array_equal(np.asarray(acc_t), np.asarray(acc_c))
+    assert np.array_equal(np.asarray(bon_t), np.asarray(bon_c))
