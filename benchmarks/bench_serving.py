@@ -1,0 +1,187 @@
+"""Serving-scheduler A/B: continuous (in-flight) batching vs the wave
+scheduler on a mixed-length Poisson workload.
+
+Requests with mixed context lengths arrive as a Poisson process; both
+schedulers serve the identical request set.  The wave scheduler buckets
+by prompt length and drains whole waves (idling slots whenever lengths
+diverge); the continuous scheduler admits into any free slot as soon as
+one opens.  Reports throughput (tok/s) and p50/p95 request latency
+(completion - arrival), and — unless --no-check — verifies every
+continuous-scheduler output is token-identical to running that request
+alone through ``SpecPVEngine.generate`` (the SpecPV losslessness
+anchor).
+
+Run:  PYTHONPATH=src python benchmarks/bench_serving.py --requests 8
+"""
+import argparse
+import time
+
+import numpy as np
+
+from common import ensure_dir, write_rows, RESULTS_DIR  # noqa: F401
+
+from repro.artifacts import get_trained_pair, corpus_for
+from repro.configs import SpecPVConfig
+from repro.core.engine import SpecPVEngine
+from repro.data import continuation_task
+from repro.serving import Request, ServingEngine, ServingConfig
+from repro.serving.scheduler import trim_output
+
+
+def make_requests(corpus, contexts, n, rate, rng, max_new):
+    """Mixed-length requests with Poisson (exponential-gap) arrival
+    offsets, identical across scheduler runs.  Generation lengths
+    alternate (max_new vs max_new/2): a wave runs every member to the
+    longest request's budget, so divergent max_new idles wave slots the
+    same way divergent prompt lengths do."""
+    reqs = []
+    t = 0.0
+    for i in range(n):
+        ctx = contexts[i % len(contexts)]
+        prompt, _ = continuation_task(corpus, batch=1, context_len=ctx,
+                                      seed=1000 + i)
+        t += rng.exponential(1.0 / rate) if rate > 0 else 0.0
+        reqs.append((t, Request(request_id=f"req-{i}", prompt=prompt[0],
+                                max_new_tokens=(max_new if i % 2
+                                                else max(max_new // 2, 4)))))
+    return reqs
+
+
+def percentiles(xs):
+    return (float(np.percentile(xs, 50)), float(np.percentile(xs, 95)))
+
+
+def run_continuous(srv, reqs):
+    t0 = time.time()
+    for off, r in reqs:
+        r.arrival_s = t0 + off
+        srv.submit(r)
+    outs = srv.run()
+    lat = [o.latency_s for o in outs]
+    return outs, time.time() - t0, lat
+
+
+def run_wave(srv, reqs):
+    """Wave driver with arrival gating: admit what has arrived, run one
+    wave, repeat — per-request latency is completion minus arrival."""
+    t0 = time.time()
+    pending = [(t0 + off, r) for off, r in reqs]
+    lat, outs = [], []
+    while pending or srv.queue:
+        now = time.time()
+        for arr, r in list(pending):
+            if arr <= now:
+                pending.remove((arr, r))
+                r.arrival_s = arr
+                srv.submit(r)
+        if srv.queue:
+            wave_outs = srv.run_one_wave()
+            lat.extend(o.latency_s for o in wave_outs)
+            outs.extend(wave_outs)
+        elif pending:
+            time.sleep(max(min(a for a, _ in pending) - time.time(), 0.0))
+    return outs, time.time() - t0, lat
+
+
+def check_lossless(cfg, spec, dcfg, params, dparams, scfg, reqs, outs):
+    """Every continuous output must equal solo batch-1 generation."""
+    solo = SpecPVEngine(cfg, spec, dcfg, params, dparams, batch=1,
+                        max_len=scfg.max_len,
+                        partial_verification=scfg.partial_verification)
+    by_id = {o.request_id: o for o in outs}
+    for _, r in reqs:
+        toks, _ = solo.generate(r.prompt[None], r.max_new_tokens,
+                                eos_id=r.eos_id,
+                                prefill_chunk=scfg.prefill_chunk)
+        raw = toks[0]
+        row = trim_output([int(x) for x in raw[raw >= 0]],
+                          r.max_new_tokens, r.eos_id)
+        got = by_id[r.request_id].tokens
+        assert np.array_equal(got, row), \
+            f"{r.request_id}: continuous {got[:8]}... != solo {row[:8]}..."
+    return True
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--rate", type=float, default=4.0,
+                    help="Poisson arrival rate (req/s); 0 = all at once")
+    ap.add_argument("--contexts", type=int, nargs="+",
+                    default=[64, 192, 96, 160, 224])
+    ap.add_argument("--no-warmup", action="store_true",
+                    help="include jit compilation in the timed region")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-check", action="store_true",
+                    help="skip the per-request losslessness check")
+    args = ap.parse_args()
+
+    cfg, dcfg, params, dparams = get_trained_pair("tiny-dense")
+    corpus = corpus_for(cfg)
+    spec = SpecPVConfig(block_size=16, num_sink_blocks=1,
+                        retrieval_budget_blocks=4, local_window_blocks=2,
+                        buffer_size=48)
+    rng = np.random.default_rng(args.seed)
+    reqs = make_requests(corpus, args.contexts, args.requests, args.rate,
+                         rng, args.max_new)
+    max_len = max(args.contexts) + args.max_new + 128
+
+    results = {}
+    for sched in ("wave", "continuous"):
+        scfg = ServingConfig(batch=args.batch, max_len=max_len,
+                             prefill_chunk=64, partial_verification=True,
+                             scheduler=sched)
+        srv = ServingEngine(cfg, spec, dcfg, params, dparams, scfg)
+        if not args.no_warmup:
+            # compile the step/prefill/scatter jits outside the timed
+            # region; the longest context exceeds the partial budget, so
+            # the refresh/partial mode jits compile too, not just "full"
+            for j, ctx in enumerate({min(args.contexts),
+                                     max(args.contexts)}):
+                prompt, _ = continuation_task(corpus, batch=1,
+                                              context_len=ctx, seed=1)
+                srv.submit(Request(request_id=f"warm-{j}",
+                                   prompt=prompt[0], max_new_tokens=8))
+            srv.run()
+            srv.stats.clear()
+            srv.outputs.clear()
+        # fresh Request objects so arrival/cancel state doesn't leak
+        run_reqs = [(off, Request(request_id=r.request_id, prompt=r.prompt,
+                                  max_new_tokens=r.max_new_tokens,
+                                  eos_id=r.eos_id))
+                    for off, r in reqs]
+        if sched == "continuous":
+            outs, wall, lat = run_continuous(srv, run_reqs)
+        else:
+            outs, wall, lat = run_wave(srv, run_reqs)
+        toks = sum(len(o.tokens) for o in outs)
+        p50, p95 = percentiles(lat)
+        results[sched] = dict(outs=outs, wall=wall, tput=toks / wall,
+                              p50=p50, p95=p95, reqs=run_reqs)
+        print(f"{sched:>10}: {len(outs)} requests, {toks} tokens in "
+              f"{wall:.1f}s -> {toks / wall:.1f} tok/s, "
+              f"latency p50={p50:.1f}s p95={p95:.1f}s")
+
+    if not args.no_check:
+        scfg = ServingConfig(batch=args.batch, max_len=max_len,
+                             prefill_chunk=64, partial_verification=True)
+        check_lossless(cfg, spec, dcfg, params, dparams, scfg,
+                       results["continuous"]["reqs"],
+                       results["continuous"]["outs"])
+        print("losslessness: continuous outputs token-identical to "
+              "single-request generation")
+
+    speedup = results["continuous"]["tput"] / max(results["wave"]["tput"],
+                                                  1e-9)
+    print(f"continuous/wave throughput: {speedup:.2f}x")
+    out = ensure_dir(RESULTS_DIR)
+    write_rows(f"{out}/bench_serving.csv",
+               ["scheduler", "tok_s", "p50_s", "p95_s"],
+               [[s, f"{results[s]['tput']:.2f}", f"{results[s]['p50']:.2f}",
+                 f"{results[s]['p95']:.2f}"] for s in results])
+
+
+if __name__ == "__main__":
+    main()

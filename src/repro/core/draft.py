@@ -94,10 +94,13 @@ def draft_head(cfg: ModelConfig, dp: Dict, target_params, h):
 
 
 def draft_extend(cfg: ModelConfig, dcfg: DraftConfig, dp: Dict,
-                 target_params, cache: Dict, tokens, fused_feats, valid):
+                 target_params, cache: Dict, tokens, fused_feats, valid,
+                 active=None):
     """Append accepted tokens to the draft KV cache.
 
-    tokens: [B, E]; fused_feats: [B, E, 3d]; valid: [B, E] prefix mask.
+    tokens: [B, E]; fused_feats: [B, E, 3d]; valid: [B, E] prefix mask;
+    active: optional [B] bool — dead batch slots (continuous batching)
+    contribute no cache writes and no length advance.
     Returns (cache, h_last [B, d], logits_last [B, V]) — the hidden/logits
     at the last valid entry (the root-parent for the next tree draft).
     """
@@ -105,6 +108,8 @@ def draft_extend(cfg: ModelConfig, dcfg: DraftConfig, dp: Dict,
     inv_freq = jnp.asarray(cm.rope_inv_freq(mcfg))
     mscale = cm.yarn_mscale(mcfg)
     b, e = tokens.shape
+    if active is not None:
+        valid = valid & active[:, None]
     x = _draft_inputs(cfg, dp, target_params["embed"], tokens, fused_feats)
     nvalid = jnp.sum(valid.astype(jnp.int32), axis=1)
     positions = cache["length"][:, None] + jnp.cumsum(

@@ -32,6 +32,7 @@ from repro.core import draft as dr
 from repro.core import tree as tr
 from repro.core import verify as vf
 from repro.utils import pytree_dataclass
+from repro.kvcache import cache as kvc
 from repro.kvcache.offload import TrafficMeter, full_step_bytes, \
     partial_step_bytes
 
@@ -59,6 +60,51 @@ class StepOutput:
     counts: np.ndarray          # [B] number of valid tokens (= accept+1)
     accept_len: np.ndarray      # [B]
     mode: str
+
+
+# ---------------------------------------------------------------------------
+# per-slot (batch-row) state surgery — continuous batching support.
+#
+# Every EngineState leaf carries the batch on axis 0 except the full-cache
+# dict (axis 1, see kvcache.cache.CACHE_BATCH_AXIS), the pkv arrays
+# (axis 1: [L, B, Hk, P, Dh]) and the PRNG key (shared, batch-free).
+# ---------------------------------------------------------------------------
+
+_PKV_FIELDS = ("pkv_k", "pkv_v", "pkv_pos")       # batch on axis 1
+_ROW_FIELDS = ("buf_len", "pending", "pending_len", "seq_len",
+               "ext_tokens", "ext_feats", "ext_len")  # batch on axis 0
+
+
+def merge_state_rows(mask, new: EngineState, old: EngineState) -> EngineState:
+    """Keep rows of `new` where mask is True, rows of `old` elsewhere.
+    The PRNG key advances with the step (greedy serving never reads it)."""
+    kw = dict(
+        cache=kvc.merge_cache_rows(mask, new.cache, old.cache),
+        dcache={n: kvc.select_rows(mask, new.dcache[n], old.dcache[n], 0)
+                for n in new.dcache},
+        key=new.key)
+    for f in _PKV_FIELDS:
+        nf, of = getattr(new, f), getattr(old, f)
+        kw[f] = kvc.select_rows(mask, nf, of, 1) if nf.ndim > 1 else nf
+    for f in _ROW_FIELDS:
+        kw[f] = kvc.select_rows(mask, getattr(new, f), getattr(old, f), 0)
+    return EngineState(**kw)
+
+
+def write_state_slot(st: EngineState, sub: EngineState, slot) -> EngineState:
+    """Write a batch-1 state `sub` into batch row `slot` of `st` (request
+    admission after chunked prefill-into-slot, or slot reset)."""
+    kw = dict(
+        cache=kvc.write_cache_slot(st.cache, sub.cache, slot),
+        dcache={n: kvc.write_row(st.dcache[n], sub.dcache[n], slot, 0)
+                for n in st.dcache},
+        key=st.key)
+    for f in _PKV_FIELDS:
+        sf, bf = getattr(sub, f), getattr(st, f)
+        kw[f] = kvc.write_row(bf, sf, slot, 1) if bf.ndim > 1 else bf
+    for f in _ROW_FIELDS:
+        kw[f] = kvc.write_row(getattr(st, f), getattr(sub, f), slot, 0)
+    return EngineState(**kw)
 
 
 class SpecPVEngine:
@@ -89,7 +135,12 @@ class SpecPVEngine:
         self.emax = self.tree.max_path          # max draft-extend per step
         self.traffic = TrafficMeter()
         self._pkv_active = False
+        self._pkv_active_rows = np.zeros((batch,), bool)   # per-slot automaton
         self._build_jits()
+        # the destination state dies at the call site (callers rebind), so
+        # donate it instead of materialising a second copy of the caches
+        self._write_slot = jax.jit(write_state_slot, donate_argnums=(0,))
+        self._neutral_sub: Optional[EngineState] = None
 
     # ------------------------------------------------------------------
     def _build_jits(self):
@@ -113,12 +164,13 @@ class SpecPVEngine:
 
         sample = self.temperature > 0.0
 
-        def _draft_phase(params, dparams, st: EngineState, draft_key=None):
+        def _draft_phase(params, dparams, st: EngineState, active,
+                         draft_key=None):
             ext_valid = (jnp.arange(self.emax)[None]
                          < st.ext_len[:, None])
             dcache, h_root, logits_root = dr.draft_extend(
                 cfg, dcfg, dparams, params, st.dcache, st.ext_tokens,
-                st.ext_feats, ext_valid)
+                st.ext_feats, ext_valid, active=active)
             last_tok = jnp.take_along_axis(
                 st.ext_tokens, jnp.maximum(st.ext_len - 1, 0)[:, None],
                 axis=1)[:, 0]
@@ -157,13 +209,14 @@ class SpecPVEngine:
             seq_len = st.seq_len + acc + 1
             return newtoks, ext_feats, ext_len, seq_len
 
-        def _step_attn(params, dparams, st: EngineState, *, mode: str):
+        def _step_attn(params, dparams, st: EngineState, active, *,
+                       mode: str):
             b = self.batch
             key_draft = key_accept = key_next = st.key
             if sample:
                 key_draft, key_accept, key_next = jax.random.split(st.key, 3)
             dcache, tree_tokens, aux = _draft_phase(
-                params, dparams, st, key_draft if sample else None)
+                params, dparams, st, active, key_draft if sample else None)
 
             if mode == "partial_verify":
                 xb = jnp.take_along_axis(
@@ -176,7 +229,7 @@ class SpecPVEngine:
                 pend_in, plen_in = st.pending[:, :1], jnp.ones((b,), jnp.int32)
 
             vin = vf.build_verify_inputs(tree, pend_in, plen_in, tree_tokens,
-                                         st.seq_len)
+                                         st.seq_len, active=active)
             want_refresh = mode in ("refresh", "init_partial")
             out = api.decode(
                 cfg, params, vin["tokens"], vin["positions"], st.cache,
@@ -252,17 +305,17 @@ class SpecPVEngine:
                 key=key_next)
             return st2, (newtoks, acc + 1, acc)
 
-        def _step_state(params, dparams, st: EngineState):
+        def _step_state(params, dparams, st: EngineState, active):
             b = self.batch
             key_draft = key_accept = key_next = st.key
             if sample:
                 key_draft, key_accept, key_next = jax.random.split(st.key, 3)
             dcache, tree_tokens, aux = _draft_phase(
-                params, dparams, st, key_draft if sample else None)
+                params, dparams, st, active, key_draft if sample else None)
             pend_in = st.pending[:, :1]
             plen_in = jnp.ones((b,), jnp.int32)
             vin = vf.build_verify_inputs(tree, pend_in, plen_in, tree_tokens,
-                                         st.seq_len)
+                                         st.seq_len, active=active)
             out = api.decode(cfg, params, vin["tokens"], vin["positions"],
                              st.cache, self_mask=vin["self_mask"], spec=spec)
             if sample:
@@ -284,7 +337,7 @@ class SpecPVEngine:
                                                jnp.maximum(path, 0), axis=1),
                 0)], axis=1)
             adv_valid = (jnp.arange(1 + tree.depth)[None]
-                         < (1 + acc)[:, None])
+                         < (1 + acc)[:, None]) & active[:, None]
             cache = api.advance(cfg, params, adv_toks, st.cache, adv_valid)
             pending = jnp.zeros_like(st.pending)
             pending = pending.at[:, 0].set(bonus)
@@ -296,6 +349,16 @@ class SpecPVEngine:
                 key=key_next)
             return st2, (newtoks, acc + 1, acc)
 
+        def _masked(step_fn, **kw):
+            """Masked-step variant for continuous batching: the row merge
+            runs inside the jit and the input state is donated, so
+            untouched rows are preserved without materialising a second
+            copy of the caches."""
+            def fn(params, dparams, st, active):
+                st2, out = step_fn(params, dparams, st, active, **kw)
+                return merge_state_rows(active, st2, st), out
+            return jax.jit(fn, donate_argnums=(2,))
+
         if self.is_attn:
             self._step_full = jax.jit(functools.partial(_step_attn,
                                                         mode="full"))
@@ -303,15 +366,42 @@ class SpecPVEngine:
                                                            mode="refresh"))
             self._step_partial = jax.jit(
                 functools.partial(_step_attn, mode="partial_verify"))
+            self._step_full_m = _masked(_step_attn, mode="full")
+            self._step_refresh_m = _masked(_step_attn, mode="refresh")
+            self._step_partial_m = _masked(_step_attn, mode="partial_verify")
         else:
+            # no masked variant: continuous batching is attention-only
+            # (merge_state_rows assumes the attention cache layout)
             self._step_state = jax.jit(_step_state)
 
     # ------------------------------------------------------------------
+    def _init_pkv(self, b: int):
+        cfg, spec = self.cfg, self.spec
+        hk, dh = cfg.num_kv_heads, cfg.head_dim_
+        if not self.is_attn:
+            z = jnp.zeros((0,))
+            return z, z, z
+        from repro.models.dense import attn_layer_count
+        l_attn = attn_layer_count(cfg.layer_kinds())
+        p_slots = spec.partial_budget_tokens + spec.buffer_size
+        pkv_k = jnp.zeros((l_attn, b, hk, p_slots, dh), cm.dt(cfg.dtype))
+        pkv_v = jnp.zeros_like(pkv_k)
+        pkv_pos = jnp.full((l_attn, b, hk, p_slots), -1, jnp.int32)
+        return pkv_k, pkv_v, pkv_pos
+
     def prefill(self, prompt: np.ndarray, chunk: int = 256,
                 extra: Optional[Dict] = None) -> EngineState:
+        assert prompt.shape[0] == self.batch
+        self._pkv_active = False
+        self._pkv_active_rows[:] = False
+        return self._prefill_state(prompt, chunk, extra)
+
+    def _prefill_state(self, prompt: np.ndarray, chunk: int = 256,
+                       extra: Optional[Dict] = None) -> EngineState:
+        """Chunked prefill for an arbitrary batch (the continuous scheduler
+        prefills batch-1 sub-states and scatters them into slots)."""
         cfg, spec = self.cfg, self.spec
         b, s0 = prompt.shape
-        assert b == self.batch
         cache = api.init_cache(cfg, b, self.max_len, spec)
         dcache = dr.init_draft_cache(cfg, b, self.max_len)
         prev_feat = jnp.zeros((b, 3 * cfg.d_model), cm.dt(cfg.dtype))
@@ -332,77 +422,168 @@ class SpecPVEngine:
         ext_tokens = jnp.zeros((b, self.emax), jnp.int32).at[:, 0].set(bonus0)
         ext_feats = jnp.zeros((b, self.emax, 3 * cfg.d_model),
                               cm.dt(cfg.dtype)).at[:, 0].set(prev_feat)
-        hk, dh = cfg.num_kv_heads, cfg.head_dim_
-        if self.is_attn:
-            from repro.models.dense import attn_layer_count
-            l_attn = attn_layer_count(cfg.layer_kinds())
-            p_slots = spec.partial_budget_tokens + spec.buffer_size
-            pkv_k = jnp.zeros((l_attn, b, hk, p_slots, dh), cm.dt(cfg.dtype))
-            pkv_v = jnp.zeros_like(pkv_k)
-            pkv_pos = jnp.full((l_attn, b, hk, p_slots), -1, jnp.int32)
-        else:
-            pkv_k = pkv_v = pkv_pos = jnp.zeros((0,))
-        self._pkv_active = False
-        ones = jnp.ones((b,), jnp.int32)
+        pkv_k, pkv_v, pkv_pos = self._init_pkv(b)
+        # distinct buffers per field: the state may be donated wholesale
+        # (slot writes), and donation rejects pytrees with aliased leaves
         return EngineState(
             cache=cache, dcache=dcache, pkv_k=pkv_k, pkv_v=pkv_v,
-            pkv_pos=pkv_pos, buf_len=0 * ones, pending=pend,
-            pending_len=ones, seq_len=(s0 + 1) * ones,
-            ext_tokens=ext_tokens, ext_feats=ext_feats, ext_len=ones,
+            pkv_pos=pkv_pos, buf_len=jnp.zeros((b,), jnp.int32),
+            pending=pend, pending_len=jnp.ones((b,), jnp.int32),
+            seq_len=jnp.full((b,), s0 + 1, jnp.int32),
+            ext_tokens=ext_tokens, ext_feats=ext_feats,
+            ext_len=jnp.ones((b,), jnp.int32),
             key=jax.random.PRNGKey(17))
 
     # ------------------------------------------------------------------
-    def select_mode(self, pending_len_max: int, seq_len_min: int) -> str:
+    # per-slot state management (continuous batching)
+    # ------------------------------------------------------------------
+    def _neutral_state(self, b: int) -> EngineState:
+        """An all-dead state: every row holds one placeholder token so no
+        index underflows, and the caches are empty."""
+        cfg, spec = self.cfg, self.spec
+        cache = api.init_cache(cfg, b, self.max_len, spec)
+        dcache = dr.init_draft_cache(cfg, b, self.max_len)
+        pkv_k, pkv_v, pkv_pos = self._init_pkv(b)
+        # distinct buffers per field (donation-safe, see _prefill_state)
+        return EngineState(
+            cache=cache, dcache=dcache, pkv_k=pkv_k, pkv_v=pkv_v,
+            pkv_pos=pkv_pos, buf_len=jnp.zeros((b,), jnp.int32),
+            pending=jnp.zeros((b, self.pmax), jnp.int32),
+            pending_len=jnp.ones((b,), jnp.int32),
+            seq_len=jnp.ones((b,), jnp.int32),
+            ext_tokens=jnp.zeros((b, self.emax), jnp.int32),
+            ext_feats=jnp.zeros((b, self.emax, 3 * cfg.d_model),
+                                cm.dt(cfg.dtype)),
+            ext_len=jnp.ones((b,), jnp.int32),
+            key=jax.random.PRNGKey(17))
+
+    def empty_state(self) -> EngineState:
+        """Batched state with every slot dead (continuous-scheduler boot)."""
+        self._pkv_active_rows[:] = False
+        return self._neutral_state(self.batch)
+
+    def reset_slot(self, st: EngineState, slot: int) -> EngineState:
+        """Evict a request: zero the slot's cache rows and automaton.
+        Consumes `st` (buffers donated) — callers must rebind."""
+        if self._neutral_sub is None:
+            self._neutral_sub = self._neutral_state(1)
+        self._pkv_active_rows[slot] = False
+        return self._write_slot(st, self._neutral_sub, jnp.int32(slot))
+
+    def prefill_into_slot(self, st: EngineState, slot: int,
+                          prompt: np.ndarray, chunk: int = 256,
+                          extra: Optional[Dict] = None
+                          ) -> Tuple[EngineState, int]:
+        """Admit a request: chunked batch-1 prefill, then scatter the
+        sub-state into batch row `slot`.  Returns (state, first token).
+        Consumes `st` (buffers donated) — callers must rebind."""
+        sub = self._prefill_state(np.asarray(prompt)[None, :], chunk, extra)
+        self._pkv_active_rows[slot] = False
+        st = self._write_slot(st, sub, jnp.int32(slot))
+        return st, int(np.asarray(sub.pending[0, 0]))
+
+    # ------------------------------------------------------------------
+    def mode_for(self, pending_len: int, seq_len: int,
+                 pkv_active: bool) -> str:
+        """One slot's mode automaton (Full -> Refresh -> Partial* -> ...)."""
         if not self.is_attn:
             return "state"
         if not self.partial_enabled:
             return "full"
-        if seq_len_min <= self.spec.partial_budget_tokens:
+        if seq_len <= self.spec.partial_budget_tokens:
             return "full"
-        if not self._pkv_active:
+        if not pkv_active:
             return "refresh"
-        if (pending_len_max - 1 + self.tree.max_path
+        if (pending_len - 1 + self.tree.max_path
                 + self.spec.refresh_margin // 4 > self.spec.buffer_size):
             return "refresh"
         return "partial"
 
+    def select_mode(self, pending_len_max: int, seq_len_min: int) -> str:
+        """Lock-step automaton over the whole batch (generate() path)."""
+        return self.mode_for(pending_len_max, seq_len_min, self._pkv_active)
+
+    def select_mode_rows(self, st: EngineState,
+                         rows: np.ndarray) -> Dict[str, np.ndarray]:
+        """Per-slot automaton: group the active rows by the mode each slot
+        wants this step.  Returns {mode: [B] bool mask}."""
+        pl = np.asarray(st.pending_len)
+        sl = np.asarray(st.seq_len)
+        out: Dict[str, np.ndarray] = {}
+        for i in np.nonzero(rows)[0]:
+            m = self.mode_for(int(pl[i]), int(sl[i]),
+                              bool(self._pkv_active_rows[i]))
+            out.setdefault(m, np.zeros(self.batch, bool))[i] = True
+        return out
+
+    def _step_fn(self, mode: str, masked: bool = False):
+        sfx = "_m" if masked else ""
+        return getattr(self, {"state": "_step_state",
+                              "full": "_step_full",
+                              "refresh": "_step_refresh",
+                              "partial": "_step_partial"}[mode] + sfx, None)
+
     def step(self, st: EngineState, mode: str) -> Tuple[EngineState,
                                                         StepOutput]:
-        if mode == "state":
-            st, (toks, counts, acc) = self._step_state(self.params,
-                                                       self.dparams, st)
-        elif mode == "full":
-            st, (toks, counts, acc) = self._step_full(self.params,
-                                                      self.dparams, st)
-        elif mode == "refresh":
-            st, (toks, counts, acc) = self._step_refresh(self.params,
-                                                         self.dparams, st)
-            self._pkv_active = True
-        elif mode == "partial":
-            st, (toks, counts, acc) = self._step_partial(self.params,
-                                                         self.dparams, st)
-        else:
+        fn = self._step_fn(mode)
+        if fn is None:
             raise ValueError(mode)
+        ones = jnp.ones((self.batch,), bool)
+        st, (toks, counts, acc) = fn(self.params, self.dparams, st, ones)
+        if mode == "refresh":
+            self._pkv_active = True
+            self._pkv_active_rows[:] = True
         self._record_traffic(mode, st)
         return st, StepOutput(tokens=np.asarray(toks),
                               counts=np.asarray(counts),
                               accept_len=np.asarray(acc), mode=mode)
 
-    def _record_traffic(self, mode: str, st: EngineState):
+    def step_rows(self, st: EngineState, mode: str,
+                  rows: np.ndarray) -> Tuple[EngineState, StepOutput]:
+        """Step only the slots where `rows` is True in `mode`; every other
+        slot's state is preserved bit-for-bit (rows are computationally
+        independent, so a stepped row's result equals what it would get if
+        stepped alone — the losslessness anchor for continuous batching).
+        Consumes `st` (buffers donated in the merge) — callers must
+        rebind."""
+        fn = self._step_fn(mode, masked=True)
+        if fn is None:
+            raise ValueError(mode)
+        mask = jnp.asarray(rows)
+        st, (toks, counts, acc) = fn(self.params, self.dparams, st, mask)
+        if mode == "refresh":
+            self._pkv_active_rows |= rows
+        self._record_traffic(mode, st, rows)
+        counts = np.where(rows, np.asarray(counts), 0)
+        return st, StepOutput(tokens=np.asarray(toks), counts=counts,
+                              accept_len=np.where(rows, np.asarray(acc), 0),
+                              mode=mode)
+
+    def _record_traffic(self, mode: str, st: EngineState,
+                        rows: Optional[np.ndarray] = None):
+        """rows: which batch rows actually stepped (masked continuous
+        steps); None = the whole batch (lock-step path)."""
         cfg, spec = self.cfg, self.spec
         if not self.is_attn:
             return
         from repro.models.dense import attn_layer_count
         l_attn = attn_layer_count(cfg.layer_kinds())
         itemsize = 2 if cfg.dtype == "bfloat16" else 4
-        seq = int(np.max(np.asarray(st.seq_len)))
+        seq_len = np.asarray(st.seq_len)
+        if rows is None:
+            nrows, seq = self.batch, int(np.max(seq_len))
+        else:
+            nrows = int(np.sum(rows))
+            if nrows == 0:
+                return
+            seq = int(np.max(seq_len[rows]))
         if mode == "partial":
             nbytes = partial_step_bytes(
-                l_attn, self.batch,
+                l_attn, nrows,
                 spec.partial_budget_tokens + spec.buffer_size,
                 cfg.num_kv_heads, cfg.head_dim_, itemsize)
         else:
-            nbytes = full_step_bytes(l_attn, self.batch, seq,
+            nbytes = full_step_bytes(l_attn, nrows, seq,
                                      cfg.num_kv_heads, cfg.head_dim_,
                                      itemsize)
         self.traffic.record(mode, nbytes)

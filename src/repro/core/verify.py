@@ -29,12 +29,16 @@ from repro.kvcache.cache import update_layer_summaries
 # ---------------------------------------------------------------------------
 
 def build_verify_inputs(tree: TreeSpec, pending, pending_len, tree_tokens,
-                        seq_len):
+                        seq_len, active=None):
     """Assemble the verify input for a step.
 
     pending: [B, P] left-aligned tokens (P = 1 for full/partial steps);
     pending_len: [B] valid count (>= 1); tree_tokens: [B, T];
-    seq_len: [B] total accepted tokens so far (prompt + generated).
+    seq_len: [B] total accepted tokens so far (prompt + generated);
+    active: optional [B] bool — dead batch slots (continuous batching).
+    Dead rows get an all-False self mask and empty pending validity, so
+    nothing they compute can be committed and no garbage positions leak
+    into attention.
 
     Returns dict with tokens [B,S], positions [B,S], self_mask [B,S,S],
     q_valid [B,S], root_slot [B], node_slots [B,T].
@@ -45,8 +49,12 @@ def build_verify_inputs(tree: TreeSpec, pending, pending_len, tree_tokens,
     tokens = jnp.concatenate([pending, tree_tokens], axis=1)
 
     pend_valid = jnp.arange(p)[None] < pending_len[:, None]       # [B, P]
+    if active is not None:
+        pend_valid = pend_valid & active[:, None]
     valid = jnp.concatenate([pend_valid,
                              jnp.ones((b, t), bool)], axis=1)     # [B, S]
+    if active is not None:
+        valid = valid & active[:, None]
 
     # positions: pending token i sits at seq_len - pending_len + i;
     # tree node n sits at seq_len + depth(n)
@@ -64,6 +72,8 @@ def build_verify_inputs(tree: TreeSpec, pending, pending_len, tree_tokens,
                             & pend_valid[:, :, None])
     m = m.at[:, p:, :p].set(pend_valid[:, None, :])               # tree->pend
     m = m.at[:, p:, p:].set(jnp.broadcast_to(anc[None], (b, t, t)))
+    if active is not None:
+        m = m & active[:, None, None]
 
     root_slot = pending_len - 1                                   # [B]
     node_slots = jnp.broadcast_to(p + jnp.arange(t)[None], (b, t))

@@ -145,3 +145,47 @@ def partial_valid_mask(pkv: PartialKV, layer=None) -> jax.Array:
     """[B, Hk, P] bool — slots holding real tokens (partial body + buffer)."""
     pos = pkv.pos if layer is None else pkv.pos[layer]
     return pos >= 0
+
+
+# ---------------------------------------------------------------------------
+# per-slot (batch-row) surgery — continuous batching support
+#
+# The blocked layout makes slot == batch row everywhere, so per-slot cache
+# reset / admission is a row write at a dynamic batch index.  The full-cache
+# dict keys carry the batch on axis 1 (leading layer axis) except `length`;
+# draft-cache and engine per-slot scalars carry it on axis 0.
+# ---------------------------------------------------------------------------
+
+CACHE_BATCH_AXIS = {"k": 1, "v": 1, "kmax": 1, "kmin": 1,
+                    "cross_k": 1, "cross_v": 1, "length": 0}
+
+
+def write_row(dst: jax.Array, src: jax.Array, slot, axis: int) -> jax.Array:
+    """Write `src` (one row, with a size-1 batch dim at `axis`) into
+    `dst` at batch index `slot` (dynamic scalar)."""
+    start = [0] * dst.ndim
+    start[axis] = slot
+    return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype), start)
+
+
+def select_rows(mask: jax.Array, new: jax.Array, old: jax.Array,
+                axis: int) -> jax.Array:
+    """Per-row select: rows where mask is True come from `new`."""
+    shape = [1] * new.ndim
+    shape[axis] = mask.shape[0]
+    return jnp.where(mask.reshape(shape), new, old)
+
+
+def write_cache_slot(dst: dict, src: dict, slot) -> dict:
+    """Copy the single batch row of a batch-1 cache dict `src` into row
+    `slot` of `dst` (chunked prefill-into-slot commit)."""
+    return {name: write_row(dst[name], src[name], slot,
+                            CACHE_BATCH_AXIS.get(name, 0))
+            for name in dst}
+
+
+def merge_cache_rows(mask: jax.Array, new: dict, old: dict) -> dict:
+    """Per-row merge of two full-cache dicts (masked engine steps)."""
+    return {name: select_rows(mask, new[name], old[name],
+                              CACHE_BATCH_AXIS.get(name, 0))
+            for name in new}

@@ -12,6 +12,19 @@ from __future__ import annotations
 import jax
 
 
+def use_mesh(mesh):
+    """Version-portable mesh context manager.
+
+    ``jax.set_mesh`` only exists on jax >= 0.6; on the pinned 0.4.x the
+    ``Mesh`` object itself is a context manager installing the thread-local
+    physical mesh, which is what ``repro.models.common.current_mesh`` falls
+    back to."""
+    setter = getattr(jax, "set_mesh", None)
+    if setter is not None:
+        return setter(mesh)
+    return mesh
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

@@ -127,13 +127,37 @@ def cdiv_(a: int, b: int) -> int:
     return -(-a // b)
 
 
+def current_mesh():
+    """The ambient mesh, or None outside any mesh context.
+
+    ``jax.sharding.get_abstract_mesh`` only exists in jax >= 0.5; on the
+    pinned 0.4.x we fall back to the thread-local physical mesh that
+    ``with mesh:`` / ``jax.sharding.use_mesh`` installs.  Both objects
+    expose ``axis_names`` and a ``shape`` mapping, which is all callers
+    use."""
+    get_abstract = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_abstract is not None:
+        try:
+            m = get_abstract()
+        except Exception:
+            m = None
+        if m is not None and m.axis_names:
+            return m
+    try:
+        from jax.interpreters import pxla
+        m = pxla.thread_resources.env.physical_mesh
+    except Exception:
+        return None
+    return m if m.axis_names else None
+
+
 def constrain_batch(x, extra_spec=()):
     """Constrain the leading (batch) dim of an activation onto the data
     axes of the ambient mesh, plus optional per-dim extra axes (each
     silently dropped when the dim doesn't divide or the axis is absent).
     A no-op when no mesh is set (single-device CPU paths)."""
     from jax.sharding import PartitionSpec as P
-    m = jax.sharding.get_abstract_mesh()
+    m = current_mesh()
     if m is None or not m.axis_names:
         return x
 

@@ -1,14 +1,23 @@
-"""Batched SpecPV serving engine.
+"""Batched SpecPV serving engine with two schedulers.
 
-Wave scheduler: pending requests are bucketed by prompt length (SpecPV's
-lock-step batch needs equal prefixes) and executed as fixed-size waves
-through one shared ``SpecPVEngine``.  Each wave runs chunked prefill,
-then draft/verify steps with the mode automaton (Full -> Refresh ->
-Partial* -> Refresh ...), streaming accepted tokens back per request.
+``ServingConfig.scheduler`` selects how batch slots are filled:
 
-Continuous (in-flight) batching is an extension point: it needs per-slot
-cache eviction in the engine state, which the blocked cache layout
-already permits (slot = batch row).
+* ``"continuous"`` (default) — in-flight batching
+  (``repro.serving.scheduler.ContinuousScheduler``): the engine's batch
+  rows are independent slots; a request is admitted the moment a slot
+  frees up (chunked batch-1 prefill scattered into the slot row), the
+  SpecPV mode automaton (Full -> Refresh -> Partial* -> Refresh) runs
+  *per slot*, and eviction is per-slot — mixed request lengths never
+  drain-idle the batch.  Greedy outputs are token-identical to running
+  each request alone through ``SpecPVEngine.generate``.  Supports
+  priorities, deadlines and cancellation (see ``serving.request``).
+
+* ``"wave"`` — the original lock-step scheduler, kept for A/B
+  comparison (``benchmarks/bench_serving.py``): pending requests are
+  bucketed by prompt length, executed as fixed-size waves through one
+  shared ``SpecPVEngine``, and a whole wave drains before the next is
+  admitted.  Slots idle whenever request lengths diverge, which is
+  exactly what continuous batching removes.
 """
 from __future__ import annotations
 
@@ -22,6 +31,7 @@ import numpy as np
 from repro.configs.base import ModelConfig, SpecPVConfig, DraftConfig
 from repro.core.engine import SpecPVEngine
 from repro.serving.request import Request, RequestOutput
+from repro.serving.scheduler import ContinuousScheduler, trim_output
 
 
 @dataclass
@@ -31,6 +41,10 @@ class ServingConfig:
     prefill_chunk: int = 256
     partial_verification: bool = True
     pad_id: int = 0
+    # "continuous" | "wave".  Continuous batching drives the per-slot
+    # attention automaton; state archs (ssm/hybrid) run chain
+    # verification and automatically fall back to the wave path.
+    scheduler: str = "continuous"
 
 
 class ServingEngine:
@@ -46,11 +60,25 @@ class ServingEngine:
         self.queue: List[Request] = []
         self.outputs: Dict[str, RequestOutput] = {}
         self._engines: Dict[int, SpecPVEngine] = {}
+        self._continuous: Optional[ContinuousScheduler] = None
         self._wave_id = 0
         self.stats = defaultdict(float)
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
+
+    def cancel(self, request_id: str) -> bool:
+        """Cancel a queued or (continuous scheduler) in-flight request.
+        The wave path honours cancellation at wave boundaries only — a
+        request already inside a running wave completes (lock-step
+        generation cannot evict mid-wave)."""
+        for r in self.queue:
+            if r.request_id == request_id:
+                r.cancel()
+                return True
+        if self._continuous is not None:
+            return self._continuous.cancel(request_id)
+        return False
 
     def _engine_for(self, batch: int) -> SpecPVEngine:
         if batch not in self._engines:
@@ -60,6 +88,27 @@ class ServingEngine:
                 partial_verification=self.scfg.partial_verification)
         return self._engines[batch]
 
+    # ------------------------------------------------------------------
+    # continuous (in-flight) scheduler
+    # ------------------------------------------------------------------
+    def _run_continuous(self) -> List[RequestOutput]:
+        sched = self._continuous
+        if sched is None:
+            sched = ContinuousScheduler(
+                self._engine_for(self.scfg.batch),
+                prefill_chunk=self.scfg.prefill_chunk)
+            self._continuous = sched
+        while self.queue:
+            sched.submit(self.queue.pop(0))
+        done = sched.run()
+        self.outputs.update({o.request_id: o for o in done})
+        for k in ("tokens", "wall_s", "steps", "admissions"):
+            self.stats[k] += sched.stats.pop(k, 0.0)
+        return done
+
+    # ------------------------------------------------------------------
+    # wave scheduler (A/B baseline)
+    # ------------------------------------------------------------------
     def _next_wave(self) -> Optional[List[Request]]:
         if not self.queue:
             return None
@@ -77,45 +126,77 @@ class ServingEngine:
             wave.append(wave[-1])
         return wave
 
-    def run(self) -> List[RequestOutput]:
-        """Drain the queue; returns outputs in completion order."""
+    def run_one_wave(self) -> List[RequestOutput]:
+        """Execute a single wave from the queue (benchmark driver hook:
+        lets callers interleave arrivals between waves).  Returns that
+        wave's outputs ([] when the queue is empty)."""
         done: List[RequestOutput] = []
-        while self.queue:
-            wave = self._next_wave()
-            if wave is None:
-                break
-            t0 = time.time()
-            engine = self._engine_for(len(wave))
-            prompts = np.stack([r.prompt for r in wave])
-            max_new = max(r.max_new_tokens for r in wave)
-            eos = wave[0].eos_id
-            toks, stats = engine.generate(
-                prompts, max_new, eos_id=eos,
-                prefill_chunk=self.scfg.prefill_chunk)
-            dt = time.time() - t0
-            seen = set()
-            for i, r in enumerate(wave):
-                if r.request_id in seen:
-                    continue
-                seen.add(r.request_id)
-                row = toks[i]
-                row = row[row >= 0][: r.max_new_tokens]
-                if r.eos_id >= 0 and (row == r.eos_id).any():
-                    row = row[: int(np.argmax(row == r.eos_id)) + 1]
+        now = time.time()
+        for r in list(self.queue):        # honour pre-wave cancellations
+            if r.cancelled:
+                self.queue.remove(r)
                 out = RequestOutput(
-                    request_id=r.request_id, tokens=row,
-                    prompt_len=len(r.prompt), finished=True,
-                    wave_id=self._wave_id, latency_s=dt,
-                    mean_accept=stats["mean_accept"],
-                    tokens_per_step=stats["tokens_per_step"])
+                    request_id=r.request_id,
+                    tokens=np.zeros((0,), np.int64),
+                    prompt_len=len(r.prompt), finished=False,
+                    finish_reason="cancelled",
+                    latency_s=now - r.arrival_s)
                 self.outputs[r.request_id] = out
                 done.append(out)
-            self.stats["waves"] += 1
-            self.stats["wall_s"] += dt
-            self.stats["tokens"] += sum(len(o.tokens) for o in done
-                                        if o.wave_id == self._wave_id)
-            self._wave_id += 1
+        wave = self._next_wave()
+        if wave is None:
+            return done
+        t0 = time.time()
+        engine = self._engine_for(len(wave))
+        prompts = np.stack([r.prompt for r in wave])
+        max_new = max(r.max_new_tokens for r in wave)
+        eos = wave[0].eos_id
+        toks, stats = engine.generate(
+            prompts, max_new, eos_id=eos,
+            prefill_chunk=self.scfg.prefill_chunk)
+        t_done = time.time()
+        dt = t_done - t0
+        seen = set()
+        for i, r in enumerate(wave):
+            if r.request_id in seen:
+                continue
+            seen.add(r.request_id)
+            raw = toks[i]
+            row = trim_output([int(x) for x in raw[raw >= 0]],
+                              r.max_new_tokens, r.eos_id)
+            reason = ("stop" if r.eos_id >= 0 and row.size
+                      and row[-1] == r.eos_id else "length")
+            out = RequestOutput(
+                request_id=r.request_id, tokens=row,
+                prompt_len=len(r.prompt), finished=True,
+                wave_id=self._wave_id, finish_reason=reason,
+                latency_s=t_done - r.arrival_s,
+                mean_accept=stats["mean_accept"],
+                tokens_per_step=stats["tokens_per_step"])
+            self.outputs[r.request_id] = out
+            done.append(out)
+        self.stats["waves"] += 1
+        self.stats["wall_s"] += dt
+        self.stats["tokens"] += sum(len(o.tokens) for o in done)
+        self._wave_id += 1
         return done
+
+    def _run_wave(self) -> List[RequestOutput]:
+        done: List[RequestOutput] = []
+        while self.queue:
+            done.extend(self.run_one_wave())
+        return done
+
+    # ------------------------------------------------------------------
+    def run(self) -> List[RequestOutput]:
+        """Drain the queue; returns outputs in completion order."""
+        if self.scfg.scheduler == "continuous":
+            if self.cfg.is_attention_arch:
+                return self._run_continuous()
+            return self._run_wave()        # state archs: lock-step only
+        if self.scfg.scheduler == "wave":
+            return self._run_wave()
+        raise ValueError(f"unknown scheduler {self.scfg.scheduler!r}")
 
     def throughput_tok_s(self) -> float:
         return self.stats["tokens"] / max(self.stats["wall_s"], 1e-9)

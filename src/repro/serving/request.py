@@ -15,6 +15,24 @@ class Request:
     max_new_tokens: int = 128
     eos_id: int = -1
     arrival_s: float = field(default_factory=time.time)
+    priority: int = 0                   # higher admitted first
+    deadline_s: Optional[float] = None  # absolute; waiting requests past it
+                                        # are dropped (finish_reason
+                                        # "deadline")
+    cancelled: bool = False
+
+    def cancel(self) -> None:
+        """Mark for cancellation; the scheduler evicts the request at its
+        next tick (mid-generation) or drops it from the wait queue."""
+        self.cancelled = True
+
+    def admission_key(self):
+        """Sort key for admission: priority desc, then earliest deadline,
+        then arrival order."""
+        return (-self.priority,
+                self.deadline_s if self.deadline_s is not None else
+                float("inf"),
+                self.arrival_s)
 
 
 @dataclass
@@ -23,7 +41,11 @@ class RequestOutput:
     tokens: np.ndarray                  # generated ids
     prompt_len: int
     finished: bool
-    wave_id: int = -1
-    latency_s: float = 0.0
+    wave_id: int = -1                   # wave scheduler only
+    slot: int = -1                      # continuous scheduler only
+    # stop | length | cancelled | deadline | rejected (prompt + budget
+    # exceeds the engine's max_len)
+    finish_reason: str = ""
+    latency_s: float = 0.0              # completion - arrival
     mean_accept: float = 0.0
     tokens_per_step: float = 0.0

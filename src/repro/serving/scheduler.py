@@ -1,0 +1,210 @@
+"""Continuous (in-flight) batching over one shared ``SpecPVEngine``.
+
+Slot-based scheduling: the engine's batch rows are B independent slots.
+A request is admitted into any free slot as soon as one opens (chunked
+batch-1 prefill scattered into the slot row), runs the SpecPV mode
+automaton (Full -> Refresh -> Partial* -> Refresh) *per slot*, and is
+evicted the moment it finishes, cancels, or misses its deadline — the
+next waiting request takes the slot immediately, so divergent request
+lengths never idle the batch the way wave draining does.
+
+Each tick groups the active slots by the mode their automaton wants and
+runs one masked engine step per distinct mode; rows are computationally
+independent, so every request's output is token-identical to running it
+alone through ``SpecPVEngine.generate`` (greedy).  Admission order is
+priority desc, then earliest deadline, then arrival.
+"""
+from __future__ import annotations
+
+import time
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.engine import SpecPVEngine
+from repro.serving.request import Request, RequestOutput
+
+
+def trim_output(tokens: List[int], max_new: int, eos_id: int) -> np.ndarray:
+    """Clip a generated-token list to the request contract: at most
+    ``max_new`` tokens, truncated just after the first EOS."""
+    row = np.asarray(tokens[:max_new], np.int64)
+    if eos_id >= 0 and (row == eos_id).any():
+        row = row[: int(np.argmax(row == eos_id)) + 1]
+    return row
+
+
+@dataclass
+class _Slot:
+    req: Request
+    admit_s: float
+    tokens: List[int] = field(default_factory=list)
+    accepts: List[int] = field(default_factory=list)
+    steps: int = 0
+
+    def done_reason(self) -> Optional[str]:
+        if (self.req.eos_id >= 0
+                and self.req.eos_id in self.tokens[: self.req.max_new_tokens]):
+            return "stop"
+        if len(self.tokens) >= self.req.max_new_tokens:
+            return "length"
+        return None
+
+
+class ContinuousScheduler:
+    def __init__(self, engine: SpecPVEngine, *, prefill_chunk: int = 256,
+                 clock: Callable[[], float] = time.time):
+        assert engine.is_attn, \
+            "continuous batching drives the per-slot SpecPV automaton " \
+            "(attention archs); state archs use the wave scheduler"
+        assert engine.temperature == 0.0, \
+            "continuous batching is greedy (per-slot losslessness)"
+        self.engine = engine
+        self.prefill_chunk = prefill_chunk
+        self.clock = clock
+        self.st = engine.empty_state()
+        self.slots: List[Optional[_Slot]] = [None] * engine.batch
+        self._dirty: set = set()        # evicted, not yet reset/refilled
+        self.waiting: List[Request] = []
+        self.outputs: Dict[str, RequestOutput] = {}
+        self.done_order: List[RequestOutput] = []
+        self.trace: List[tuple] = []        # (event, request_id, slot)
+        self.stats = defaultdict(float)
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.waiting.append(req)
+
+    def cancel(self, request_id: str) -> bool:
+        """Mark a waiting or in-flight request cancelled (takes effect at
+        the next tick).  Returns False for unknown/finished requests."""
+        for r in self.waiting:
+            if r.request_id == request_id:
+                r.cancel()
+                return True
+        for s in self.slots:
+            if s is not None and s.req.request_id == request_id:
+                s.req.cancel()
+                return True
+        return False
+
+    @property
+    def num_active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    def has_work(self) -> bool:
+        return bool(self.waiting) or self.num_active > 0
+
+    # ------------------------------------------------------------------
+    def _emit(self, req: Request, slot: int, tokens: List[int],
+              finished: bool, reason: str, *, accepts=(), steps=0) -> None:
+        out = RequestOutput(
+            request_id=req.request_id,
+            tokens=trim_output(tokens, req.max_new_tokens, req.eos_id),
+            prompt_len=len(req.prompt), finished=finished, slot=slot,
+            finish_reason=reason,
+            latency_s=self.clock() - req.arrival_s,
+            mean_accept=float(np.mean(accepts)) if len(accepts) else 0.0,
+            tokens_per_step=(len(tokens) / steps if steps else 0.0))
+        self.outputs[req.request_id] = out
+        self.done_order.append(out)
+        self.stats["tokens"] += len(out.tokens)
+        self.trace.append(("finish:" + reason, req.request_id, slot))
+
+    def _evict(self, i: int, reason: str) -> None:
+        s = self.slots[i]
+        self._emit(s.req, i, s.tokens, finished=(reason in ("stop", "length")),
+                   reason=reason, accepts=s.accepts, steps=s.steps)
+        self.slots[i] = None
+        # state reset is deferred to after admission: a same-tick refill
+        # overwrites the whole row during prefill-into-slot anyway
+        self._dirty.add(i)
+
+    # ------------------------------------------------------------------
+    def _admissible(self, now: float) -> List[Request]:
+        ready = [r for r in self.waiting if r.arrival_s <= now]
+        return sorted(ready, key=Request.admission_key)
+
+    def _admit(self) -> None:
+        now = self.clock()
+        # drop cancelled / expired waiters first
+        for r in list(self.waiting):
+            if r.cancelled:
+                self.waiting.remove(r)
+                self._emit(r, -1, [], finished=False, reason="cancelled")
+            elif r.deadline_s is not None and r.deadline_s < now:
+                self.waiting.remove(r)
+                self._emit(r, -1, [], finished=False, reason="deadline")
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        for req in self._admissible(now):
+            if not free:
+                break
+            need = len(req.prompt) + req.max_new_tokens + self.engine.pmax
+            if need > self.engine.max_len:
+                self.waiting.remove(req)
+                self._emit(req, -1, [], finished=False, reason="rejected")
+                continue
+            i = free.pop(0)
+            self.waiting.remove(req)
+            self.st, first = self.engine.prefill_into_slot(
+                self.st, i, req.prompt, chunk=self.prefill_chunk)
+            self._dirty.discard(i)
+            self.slots[i] = _Slot(req=req, admit_s=now, tokens=[first])
+            self.stats["admissions"] += 1
+            self.trace.append(("admit", req.request_id, i))
+        # slots that stayed free get their rows zeroed once
+        for i in sorted(self._dirty):
+            self.st = self.engine.reset_slot(self.st, i)
+        self._dirty.clear()
+
+    # ------------------------------------------------------------------
+    def tick(self) -> bool:
+        """One scheduler round: evict, admit, step.  Returns True when a
+        decode step ran (False = idle; nothing active right now)."""
+        # evictions: cancellation first, then natural completion (a slot
+        # can satisfy its stop condition during the previous tick's step)
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            if s.req.cancelled:
+                self._evict(i, "cancelled")
+            elif s.done_reason():
+                self._evict(i, s.done_reason())
+        self._admit()
+
+        active = np.array([s is not None for s in self.slots], bool)
+        if not active.any():
+            return False
+        groups = self.engine.select_mode_rows(self.st, active)
+        for mode in sorted(groups):
+            mask = groups[mode]
+            self.st, so = self.engine.step_rows(self.st, mode, mask)
+            self.stats["steps"] += 1
+            for i in np.nonzero(mask)[0]:
+                s = self.slots[i]
+                s.tokens.extend(int(x) for x in so.tokens[i, : so.counts[i]])
+                s.accepts.append(int(so.accept_len[i]))
+                s.steps += 1
+        return True
+
+    def run(self) -> List[RequestOutput]:
+        """Drive ticks until the queue and all slots drain.  Returns this
+        call's outputs in completion order.
+
+        Assumes ``clock`` advances with wall time (it gates admission and
+        stamps latency); a frozen/simulated clock must drive ``tick()``
+        directly instead of using ``run``, which real-sleeps while waiting
+        for future arrivals."""
+        t0 = self.clock()
+        start = len(self.done_order)
+        while self.has_work():
+            progressed = self.tick()
+            if not progressed and self.waiting:
+                # all slots idle; next request hasn't arrived yet
+                delay = min(r.arrival_s for r in self.waiting) - self.clock()
+                if delay > 0:
+                    time.sleep(min(delay, 0.02))
+        self.stats["wall_s"] += self.clock() - t0
+        return self.done_order[start:]

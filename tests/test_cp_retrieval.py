@@ -9,6 +9,7 @@ import numpy as np
 from repro.configs import SpecPVConfig
 from repro.distributed.cp_retrieval import cp_partial_verify_attention
 from repro.kernels import ref
+from repro.launch.mesh import use_mesh
 from repro.models import common as cm
 
 
@@ -23,7 +24,7 @@ def test_cp_retrieval_single_shard_matches_global():
     km, kn = jax.vmap(lambda kk, ll: ref.block_summary_ref(kk, ll, 16))(
         k, length)
     budget = 4
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         out = cp_partial_verify_attention(mesh, "model", spec, budget,
                                           q, k, v, km, kn, length)
     nb = s // 16

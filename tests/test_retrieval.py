@@ -1,9 +1,16 @@
 """Property tests for the Quest-style retrieval (hypothesis) and partial
-cache selection invariants (DESIGN.md §7)."""
+cache selection invariants (DESIGN.md §7).
+
+``hypothesis`` is an optional dev dependency (see tests/README.md); the
+property tests here are skipped when it isn't installed.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs import SpecPVConfig
 from repro.models.dense import (quest_block_scores,

@@ -13,6 +13,10 @@ from repro.models import api
 from repro.core import SpecPVEngine, autoregressive_generate
 from repro.core.draft import init_draft_params
 
+# engine-building tests are marked slow individually; the pure-numpy
+# verify-input property tests below stay in the quick (-m "not slow") loop
+slow = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def tiny(key, small_dcfg):
@@ -22,6 +26,7 @@ def tiny(key, small_dcfg):
     return cfg, params, dparams
 
 
+@slow
 def test_full_verification_lossless(tiny, small_spec, small_dcfg):
     """Invariant 1 (DESIGN.md): greedy SpecPV with full verification emits
     exactly the autoregressive greedy sequence — even with an untrained
@@ -38,6 +43,7 @@ def test_full_verification_lossless(tiny, small_spec, small_dcfg):
     assert stats["steps"] >= 1
 
 
+@slow
 def test_partial_verification_modes_and_bookkeeping(tiny, small_spec,
                                                     small_dcfg):
     """Partial path: mode automaton fires Full/Refresh/Partial, pending and
@@ -74,6 +80,7 @@ def test_partial_verification_modes_and_bookkeeping(tiny, small_spec,
     assert "partial" in modes
 
 
+@slow
 def test_state_arch_chain_lossless(key, small_spec, small_dcfg):
     cfg = get_config("rwkv6-3b").reduced()
     params = api.init_params(cfg, key)
@@ -87,6 +94,7 @@ def test_state_arch_chain_lossless(key, small_spec, small_dcfg):
     assert np.array_equal(toks, ar)
 
 
+@slow
 def test_moe_engine_runs(key, small_spec, small_dcfg):
     """SpecPV engine on an MoE target: tree verify + commits run; outputs
     finite and well-formed (bit-losslessness doesn't apply: capacity-based
@@ -104,6 +112,86 @@ def test_moe_engine_runs(key, small_spec, small_dcfg):
     assert stats["steps"] >= 1
 
 
+def _check_verify_inputs(tree, pending_len, seq_len, rng):
+    """One randomized instance of the build_verify_inputs invariants."""
+    from repro.core.verify import build_verify_inputs
+    b = len(pending_len)
+    p = int(np.max(pending_len))
+    t = tree.size
+    pending = jnp.asarray(rng.integers(0, 64, (b, p)), jnp.int32)
+    tree_tokens = jnp.asarray(rng.integers(0, 64, (b, t)), jnp.int32)
+    vin = build_verify_inputs(tree, pending, jnp.asarray(pending_len),
+                              tree_tokens, jnp.asarray(seq_len))
+    pos = np.asarray(vin["positions"])
+    m = np.asarray(vin["self_mask"])
+    anc = tree.ancestor_mask()
+    for i in range(b):
+        pl, sl = int(pending_len[i]), int(seq_len[i])
+        # pending positions: contiguous run ending at seq_len - 1
+        for j in range(pl):
+            assert pos[i, j] == sl - pl + j
+        # tree node n sits at seq_len + depth(n); the root parent (last
+        # valid pending, position sl - 1) is exactly one step shallower
+        # than level-0 nodes, and every child is parent + 1 -> positions
+        # are strictly monotone along every root->leaf path
+        for n in range(t):
+            assert pos[i, p + n] == sl + tree.depths[n]
+            par = tree.parents[n]
+            parent_pos = pos[i, p + par] if par >= 0 else sl - 1
+            assert pos[i, p + n] == parent_pos + 1
+        # self-mask: tree->tree is exactly the ancestor structure
+        assert np.array_equal(m[i, p:, p:], anc)
+        # tree->pending: full causal visibility of the valid prefix only
+        for j in range(p):
+            assert m[i, p:, j].all() == (j < pl)
+            if j >= pl:
+                assert not m[i, :, j].any()
+        # pending->pending: causal within the valid prefix
+        for qi in range(p):
+            for kj in range(p):
+                assert m[i, qi, kj] == (kj <= qi and qi < pl and kj < pl)
+    assert np.array_equal(np.asarray(vin["root_slot"]), pending_len - 1)
+
+
+def test_build_verify_inputs_properties():
+    """Positions monotone along every tree path; self-mask respects
+    ancestor structure and pending-prefix causality — randomized over
+    tree shapes, pending lengths and sequence lengths."""
+    from repro.core import tree as tr
+    rng = np.random.default_rng(0)
+    for branch in [(1, 1, 1), (2, 1), (2, 2, 1), (3, 2), (2,), (1,)]:
+        tree = tr.TreeSpec.from_branch(branch)
+        for _ in range(4):
+            b = 3
+            pmax = int(rng.integers(1, 7))
+            pending_len = rng.integers(1, pmax + 1, (b,)).astype(np.int32)
+            seq_len = (pending_len
+                       + rng.integers(0, 40, (b,))).astype(np.int32)
+            _check_verify_inputs(tree, pending_len, seq_len, rng)
+
+
+def test_build_verify_inputs_dead_slot_masking():
+    """active=False rows (continuous batching) expose no queries/keys:
+    the whole self-mask row block is False and pend_valid is empty."""
+    from repro.core import tree as tr
+    from repro.core.verify import build_verify_inputs
+    tree = tr.TreeSpec.from_branch((2, 2, 1))
+    rng = np.random.default_rng(1)
+    b, p = 3, 4
+    vin = build_verify_inputs(
+        tree, jnp.asarray(rng.integers(0, 64, (b, p)), jnp.int32),
+        jnp.asarray([2, 3, 1], jnp.int32),
+        jnp.asarray(rng.integers(0, 64, (b, tree.size)), jnp.int32),
+        jnp.asarray([10, 20, 30], jnp.int32),
+        active=jnp.asarray([True, False, True]))
+    m = np.asarray(vin["self_mask"])
+    pv = np.asarray(vin["pend_valid"])
+    assert not m[1].any() and not pv[1].any()
+    assert m[0].any() and m[2].any()
+    assert pv[0, :2].all() and pv[2, :1].all()
+
+
+@slow
 def test_traffic_meter_partial_smaller_than_full(tiny, small_spec,
                                                  small_dcfg):
     """Offload-analogue (paper Fig. 4): per-step partial traffic must be

@@ -1,7 +1,14 @@
-"""Draft-tree topology + acceptance properties (hypothesis)."""
+"""Draft-tree topology + acceptance properties (hypothesis).
+
+``hypothesis`` is an optional dev dependency (see tests/README.md); the
+property tests here are skipped when it isn't installed.
+"""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.tree import TreeSpec, greedy_tree_accept, chain_accept_greedy
 
