@@ -11,7 +11,16 @@ continuous-scheduler output is token-identical to running that request
 alone through ``SpecPVEngine.generate`` (the SpecPV losslessness
 anchor).
 
+``--paged`` backs the continuous scheduler with the paged full-KV cache
+(shared block pool + per-slot page tables): the pool defaults to ~60% of
+the contiguous batch x max_len reservation, admission is gated on free
+pages, and the run reports the resident-page high-water mark — i.e. the
+engine serves the same request set (still token-identical) while holding
+less than batch rows' worth of max_len memory.  ``--num-pages`` overrides
+the pool size (incl. the reserved null page).
+
 Run:  PYTHONPATH=src python benchmarks/bench_serving.py --requests 8
+      PYTHONPATH=src python benchmarks/bench_serving.py --requests 8 --paged
 """
 import argparse
 import time
@@ -22,7 +31,8 @@ from common import ensure_dir, write_rows, RESULTS_DIR  # noqa: F401
 
 from repro.artifacts import get_trained_pair, corpus_for
 from repro.configs import SpecPVConfig
-from repro.core.engine import SpecPVEngine
+from repro.core.engine import SpecPVEngine, request_token_need
+from repro.core.tree import TreeSpec
 from repro.data import continuation_task
 from repro.serving import Request, ServingEngine, ServingConfig
 from repro.serving.scheduler import trim_output
@@ -116,6 +126,12 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-check", action="store_true",
                     help="skip the per-request losslessness check")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged full-KV cache for the continuous scheduler "
+                         "(block pool + page-gated admission)")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="pool size incl. the null page (0 = ~60%% of the "
+                         "contiguous batch x max_len reservation)")
     args = ap.parse_args()
 
     cfg, dcfg, params, dparams = get_trained_pair("tiny-dense")
@@ -128,11 +144,31 @@ def main():
                          rng, args.max_new)
     max_len = max(args.contexts) + args.max_new + 128
 
+    nb_seq = -(-max_len // spec.block_size)
+    num_pages = None
+    if args.paged:
+        # pool under memory pressure: well below the contiguous
+        # batch x nb_seq reservation, but with headroom for the largest
+        # single request (otherwise it would be rejected outright) —
+        # sized by the engine's own token-need formula
+        emax = TreeSpec.from_branch(
+            dcfg.tree_branch[: dcfg.tree_depth]).max_path
+        need_max = -(-request_token_need(max(args.contexts), args.max_new,
+                                         spec.buffer_size, emax)
+                     // spec.block_size)
+        num_pages = (args.num_pages
+                     or max((args.batch * nb_seq * 3) // 5, need_max + 1) + 1)
+        print(f"paged pool: {num_pages - 1} usable pages of "
+              f"{spec.block_size} tokens (contiguous would reserve "
+              f"{args.batch * nb_seq})")
+
     results = {}
     for sched in ("wave", "continuous"):
         scfg = ServingConfig(batch=args.batch, max_len=max_len,
                              prefill_chunk=64, partial_verification=True,
-                             scheduler=sched)
+                             scheduler=sched,
+                             paged_kv=args.paged and sched == "continuous",
+                             num_pages=num_pages)
         srv = ServingEngine(cfg, spec, dcfg, params, dparams, scfg)
         if not args.no_warmup:
             # compile the step/prefill/scatter jits outside the timed
@@ -147,6 +183,8 @@ def main():
             srv.run()
             srv.stats.clear()
             srv.outputs.clear()
+            if scfg.paged_kv:  # count the high-water mark from the timed run
+                srv.reset_page_high_water()
         # fresh Request objects so arrival/cancel state doesn't leak
         run_reqs = [(off, Request(request_id=r.request_id, prompt=r.prompt,
                                   max_new_tokens=r.max_new_tokens,
@@ -163,6 +201,15 @@ def main():
         print(f"{sched:>10}: {len(outs)} requests, {toks} tokens in "
               f"{wall:.1f}s -> {toks / wall:.1f} tok/s, "
               f"latency p50={p50:.1f}s p95={p95:.1f}s")
+        if sched == "continuous" and args.paged:
+            ps = srv.page_stats()
+            print(f"{'':>10}  resident pages high-water: "
+                  f"{ps['high_water']}/{ps['capacity']} "
+                  f"({ps['high_water'] * ps['block_size']} tokens; "
+                  f"contiguous layout reserves "
+                  f"{ps['contiguous_pages'] * ps['block_size']}), "
+                  f"admission page-stalls: "
+                  f"{int(srv.stats.get('page_stalls', 0))}")
 
     if not args.no_check:
         scfg = ServingConfig(batch=args.batch, max_len=max_len,

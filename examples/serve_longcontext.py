@@ -61,10 +61,11 @@ def main():
               f"new={len(o.tokens)} {where} "
               f"latency={o.latency_s:.1f}s tau={o.mean_accept:.2f} "
               f"tok/step={o.tokens_per_step:.2f} [{o.finish_reason}]")
-    for bucket, eng in srv._engines.items():
+    for (bucket, paged), eng in srv._engines.items():
         tm = eng.traffic
         if tm.bytes_by_mode:
-            print(f"  cache traffic (batch={bucket}): "
+            tag = f"batch={bucket}" + (", paged" if paged else "")
+            print(f"  cache traffic ({tag}): "
                   f"{ {k: f'{v/2**20:.1f}MiB' for k, v in tm.bytes_by_mode.items()} }")
 
 

@@ -18,7 +18,7 @@ State architectures (ssm/hybrid) run chain speculation with native
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
+from dataclasses import dataclass, replace as dc_replace
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -31,7 +31,7 @@ from repro.models import common as cm
 from repro.core import draft as dr
 from repro.core import tree as tr
 from repro.core import verify as vf
-from repro.utils import pytree_dataclass
+from repro.utils import pytree_dataclass, cdiv
 from repro.kvcache import cache as kvc
 from repro.kvcache.offload import TrafficMeter, full_step_bytes, \
     partial_step_bytes
@@ -52,6 +52,16 @@ class EngineState:
     ext_feats: jax.Array        # [B, E, 3d]
     ext_len: jax.Array          # [B]
     key: jax.Array              # PRNG key (stochastic mode)
+
+
+def request_token_need(prompt_len: int, max_new_tokens: int,
+                       buffer_size: int, emax: int) -> int:
+    """Tokens of full-cache capacity a request needs end to end: prompt
+    + first token + generation budget + the commit overshoot margin (a
+    refresh can write buffer_size + tree-path entries past the current
+    length).  Single source of truth for page sizing — the engine's
+    ``pages_needed`` and the benchmarks both derive from it."""
+    return prompt_len + 1 + max_new_tokens + buffer_size + 2 * emax + 2
 
 
 @dataclass
@@ -113,7 +123,17 @@ class SpecPVEngine:
                  batch: int, max_len: int,
                  partial_verification: Optional[bool] = None,
                  draft_chain: Optional[bool] = None,
-                 temperature: float = 0.0):
+                 temperature: float = 0.0,
+                 paged: bool = False,
+                 num_pages: Optional[int] = None):
+        """``paged=True`` (attention archs only) backs the full KV cache
+        with a shared block pool + per-slot page tables: resident memory
+        scales with tokens actually held instead of batch x max_len, and
+        the serving scheduler gates admission on free pages.  Greedy
+        outputs are token-identical to the contiguous layout (the
+        default, kept for A/B).  ``num_pages`` sizes the pool; the
+        default (batch * max_len/block + 1, incl. the reserved null
+        page) matches contiguous capacity so ``generate`` always fits."""
         self.cfg = cfg
         self.spec = spec
         self.dcfg = dcfg
@@ -123,6 +143,14 @@ class SpecPVEngine:
         self.max_len = max_len
         self.temperature = temperature
         self.is_attn = cfg.is_attention_arch
+        assert not (paged and not self.is_attn), \
+            "paged KV is attention-only (state archs keep O(1) state)"
+        self.paged = bool(paged)
+        self._nb_seq = cdiv(max_len, spec.block_size)
+        self.num_pages = (num_pages if num_pages is not None
+                          else batch * self._nb_seq + 1)
+        self._page_alloc = (kvc.PageAllocator(self.num_pages)
+                            if self.paged else None)
         if partial_verification is None:
             partial_verification = self.is_attn
         self.partial_enabled = partial_verification and self.is_attn
@@ -146,7 +174,10 @@ class SpecPVEngine:
     def _build_jits(self):
         cfg, spec, dcfg, tree = self.cfg, self.spec, self.dcfg, self.tree
 
-        @jax.jit
+        # cache/dcache die at the call site (the chunk loop rebinds), so
+        # donate them — for paged engines this keeps the shared pool from
+        # being copied once per prefill chunk
+        @functools.partial(jax.jit, donate_argnums=(2, 3))
         def _prefill_chunk(params, dparams, cache, dcache, tokens,
                            prev_feat, extra):
             logits, feats, cache = api.prefill(cfg, params, tokens, cache,
@@ -389,6 +420,29 @@ class SpecPVEngine:
         pkv_pos = jnp.full((l_attn, b, hk, p_slots), -1, jnp.int32)
         return pkv_k, pkv_v, pkv_pos
 
+    def _init_cache(self, b: int, *, full_alloc: bool = False) -> Dict:
+        """Fresh cache dict.  Paged with ``full_alloc``: every row gets
+        its whole max_len worth of pages up front (lock-step
+        ``generate`` — memory parity with the contiguous layout; the
+        serving path allocates per request instead)."""
+        if not self.paged:
+            return api.init_cache(self.cfg, b, self.max_len, self.spec)
+        cache = api.init_cache(self.cfg, b, self.max_len, self.spec,
+                               paged=True, num_pages=self.num_pages)
+        if full_alloc:
+            al = self._page_alloc
+            al.reset()
+            if b * self._nb_seq > al.capacity:
+                raise ValueError(
+                    f"paged generate needs {b * self._nb_seq} pages but the "
+                    f"pool holds {al.capacity}; raise num_pages or use the "
+                    "continuous scheduler (per-request allocation)")
+            pt = np.zeros((b, self._nb_seq), np.int32)
+            for i in range(b):
+                pt[i] = al.alloc(i, self._nb_seq)
+            cache["page_table"] = jnp.asarray(pt)
+        return cache
+
     def prefill(self, prompt: np.ndarray, chunk: int = 256,
                 extra: Optional[Dict] = None) -> EngineState:
         assert prompt.shape[0] == self.batch
@@ -397,17 +451,27 @@ class SpecPVEngine:
         return self._prefill_state(prompt, chunk, extra)
 
     def _prefill_state(self, prompt: np.ndarray, chunk: int = 256,
-                       extra: Optional[Dict] = None) -> EngineState:
+                       extra: Optional[Dict] = None, *,
+                       cache: Optional[Dict] = None,
+                       grow=None) -> EngineState:
         """Chunked prefill for an arbitrary batch (the continuous scheduler
-        prefills batch-1 sub-states and scatters them into slots)."""
+        prefills batch-1 sub-states and scatters them into slots).
+
+        cache: pre-built cache to prefill into (paged slot admission
+        passes the shared pool + the slot's table row); grow(cache, upto)
+        is called before each chunk so paged admission can allocate pages
+        chunk by chunk."""
         cfg, spec = self.cfg, self.spec
         b, s0 = prompt.shape
-        cache = api.init_cache(cfg, b, self.max_len, spec)
+        if cache is None:
+            cache = self._init_cache(b, full_alloc=self.paged)
         dcache = dr.init_draft_cache(cfg, b, self.max_len)
         prev_feat = jnp.zeros((b, 3 * cfg.d_model), cm.dt(cfg.dtype))
         logits_last = None
         for off in range(0, s0, chunk):
             toks = jnp.asarray(prompt[:, off: off + chunk])
+            if grow is not None:
+                cache = grow(cache, off + toks.shape[1])
             cache, dcache, logits_last, prev_feat = self._prefill_chunk(
                 self.params, self.dparams, cache, dcache, toks, prev_feat,
                 extra)
@@ -437,11 +501,20 @@ class SpecPVEngine:
     # ------------------------------------------------------------------
     # per-slot state management (continuous batching)
     # ------------------------------------------------------------------
-    def _neutral_state(self, b: int) -> EngineState:
+    def _neutral_state(self, b: int, *, row_cache: bool = False
+                       ) -> EngineState:
         """An all-dead state: every row holds one placeholder token so no
-        index underflows, and the caches are empty."""
+        index underflows, and the caches are empty.  ``row_cache`` (paged
+        reset sub-state) carries only the per-row cache keys — the shared
+        pool stays with the batched state."""
         cfg, spec = self.cfg, self.spec
-        cache = api.init_cache(cfg, b, self.max_len, spec)
+        if row_cache:
+            assert self.paged and b == 1
+            cache: Dict = {"page_table": jnp.zeros((1, self._nb_seq),
+                                                   jnp.int32),
+                           "length": jnp.zeros((1,), jnp.int32)}
+        else:
+            cache = self._init_cache(b)
         dcache = dr.init_draft_cache(cfg, b, self.max_len)
         pkv_k, pkv_v, pkv_pos = self._init_pkv(b)
         # distinct buffers per field (donation-safe, see _prefill_state)
@@ -460,26 +533,113 @@ class SpecPVEngine:
     def empty_state(self) -> EngineState:
         """Batched state with every slot dead (continuous-scheduler boot)."""
         self._pkv_active_rows[:] = False
+        if self.paged:
+            self._page_alloc.reset()
         return self._neutral_state(self.batch)
 
     def reset_slot(self, st: EngineState, slot: int) -> EngineState:
-        """Evict a request: zero the slot's cache rows and automaton.
-        Consumes `st` (buffers donated) — callers must rebind."""
+        """Evict a request: zero the slot's cache rows and automaton
+        (paged: clear the slot's page-table row and return its pages to
+        the free list — pool contents are left stale, they are never read
+        once unmapped).  Consumes `st` (buffers donated) — callers must
+        rebind."""
         if self._neutral_sub is None:
-            self._neutral_sub = self._neutral_state(1)
+            self._neutral_sub = self._neutral_state(1, row_cache=self.paged)
+        if self.paged:
+            self._page_alloc.free_slot(slot)
         self._pkv_active_rows[slot] = False
         return self._write_slot(st, self._neutral_sub, jnp.int32(slot))
 
+    # ---- page accounting (host side; no-ops when not paged) ----------
+    def pages_needed(self, prompt_len: int, max_new_tokens: int) -> int:
+        """Pages a request needs end to end (see request_token_need)."""
+        toks = request_token_need(prompt_len, max_new_tokens, self.pmax,
+                                  self.emax)
+        return min(cdiv(toks, self.spec.block_size), self._nb_seq)
+
+    def free_pages(self) -> int:
+        return self._page_alloc.free if self.paged else 1 << 30
+
+    def page_capacity(self) -> int:
+        return self._page_alloc.capacity if self.paged else 1 << 30
+
+    def release_slot_pages(self, slot: int) -> None:
+        """Return an evicted slot's pages to the free list ahead of the
+        deferred row reset, so same-tick admission sees them."""
+        if self.paged:
+            self._page_alloc.free_slot(slot)
+
+    def page_stats(self) -> Dict[str, int]:
+        al = self._page_alloc
+        if al is None:
+            return {}
+        return dict(num_pages=self.num_pages, capacity=al.capacity,
+                    in_use=al.in_use, high_water=al.high_water,
+                    contiguous_pages=self.batch * self._nb_seq,
+                    block_size=self.spec.block_size)
+
     def prefill_into_slot(self, st: EngineState, slot: int,
                           prompt: np.ndarray, chunk: int = 256,
-                          extra: Optional[Dict] = None
+                          extra: Optional[Dict] = None,
+                          max_new_tokens: Optional[int] = None
                           ) -> Tuple[EngineState, int]:
         """Admit a request: chunked batch-1 prefill, then scatter the
         sub-state into batch row `slot`.  Returns (state, first token).
-        Consumes `st` (buffers donated) — callers must rebind."""
-        sub = self._prefill_state(np.asarray(prompt)[None, :], chunk, extra)
+        Consumes `st` (buffers donated) — callers must rebind.
+
+        Paged engines prefill straight into the shared pool through a
+        fresh table row for `slot`, allocating pages chunk by chunk plus
+        a decode reserve sized by ``max_new_tokens`` (defaults to the
+        remaining max_len budget).  Raises RuntimeError when the pool
+        cannot cover the request — callers should gate admission on
+        ``free_pages()``/``pages_needed()`` first."""
+        prompt = np.asarray(prompt)
+        if not self.paged:
+            sub = self._prefill_state(prompt[None, :], chunk, extra)
+            self._pkv_active_rows[slot] = False
+            st = self._write_slot(st, sub, jnp.int32(slot))
+            return st, int(np.asarray(sub.pending[0, 0]))
+
+        al = self._page_alloc
+        al.free_slot(slot)                      # stale pages, if any
+        bs = self.spec.block_size
+        budget = (max_new_tokens if max_new_tokens is not None
+                  else max(self.max_len - len(prompt), 0))
+        total_pages = self.pages_needed(len(prompt), budget)
+        if total_pages > al.free:
+            raise RuntimeError(
+                f"slot {slot}: request needs {total_pages} pages, "
+                f"{al.free} free of {al.capacity}")
+        pt_host = np.zeros((self._nb_seq,), np.int32)
+
+        def grow(cache: Dict, upto: int) -> Dict:
+            need = min(cdiv(upto, bs), self._nb_seq)
+            cur = al.count(slot)
+            if need > cur:
+                pt_host[cur:need] = al.alloc(slot, need - cur)
+            return dict(cache, page_table=jnp.asarray(pt_host)[None])
+
+        sub_cache: Dict = {n: st.cache[n] for n in kvc.PAGED_POOL_KEYS}
+        for n in ("cross_k", "cross_v"):
+            if n in st.cache:
+                sub_cache[n] = st.cache[n][:, slot: slot + 1]
+        sub_cache["page_table"] = jnp.asarray(pt_host)[None]
+        sub_cache["length"] = jnp.zeros((1,), jnp.int32)
+        sub = self._prefill_state(prompt[None, :], chunk, extra,
+                                  cache=sub_cache, grow=grow)
+        cur = al.count(slot)
+        if total_pages > cur:                   # decode reserve
+            pt_host[cur:total_pages] = al.alloc(slot, total_pages - cur)
         self._pkv_active_rows[slot] = False
-        st = self._write_slot(st, sub, jnp.int32(slot))
+        # the pool was written in place (batch-1 view); rebind it into the
+        # batched state, then row-write the per-slot keys
+        pool = {n: sub.cache[n] for n in kvc.PAGED_POOL_KEYS}
+        st = dc_replace(st, cache=dict(st.cache, **pool))
+        row_cache = {n: v for n, v in sub.cache.items()
+                     if n not in kvc.PAGED_POOL_KEYS}
+        row_cache["page_table"] = jnp.asarray(pt_host)[None]
+        sub_row = dc_replace(sub, cache=row_cache)
+        st = self._write_slot(st, sub_row, jnp.int32(slot))
         return st, int(np.asarray(sub.pending[0, 0]))
 
     # ------------------------------------------------------------------

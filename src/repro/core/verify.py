@@ -20,8 +20,10 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, SpecPVConfig
 from repro.core.tree import TreeSpec
-from repro.models.dense import quest_block_scores, select_and_gather_partial
-from repro.kvcache.cache import update_layer_summaries
+from repro.models.dense import (quest_block_scores, select_and_gather_partial,
+                                select_and_gather_partial_paged)
+from repro.kvcache.cache import (update_layer_summaries, paged_write_tokens,
+                                 paged_update_summaries)
 
 
 # ---------------------------------------------------------------------------
@@ -121,7 +123,11 @@ def gather_new_kv(new_kv, slots, slot_valid):
 def append_full_cache(cache: Dict, ck, cv, count, spec: SpecPVConfig):
     """Append compacted committed KV to the full cache + summaries.
 
-    ck/cv: [L, B, W, Hk, Dh]; count: [B] valid entries (prefix)."""
+    ck/cv: [L, B, W, Hk, Dh]; count: [B] valid entries (prefix).
+    Paged caches scatter the W tokens through the page table and
+    recompute only the touched pages' summaries."""
+    if "page_table" in cache:
+        return _append_paged_cache(cache, ck, cv, count)
     length = cache["length"]
 
     def write_one(buf, new, off):        # [S,Hk,Dh], [W,Hk,Dh]
@@ -138,6 +144,34 @@ def append_full_cache(cache: Dict, ck, cv, count, spec: SpecPVConfig):
     nkmax, nkmin = jax.vmap(
         lambda kx, kn, kl: update_layer_summaries(kx, kn, kl, length,
                                                   new_len, spec.block_size)
+    )(cache["kmax"], cache["kmin"], cache["k"])
+    cache["kmax"] = nkmax
+    cache["kmin"] = nkmin
+    cache["length"] = new_len
+    return cache
+
+
+def _append_paged_cache(cache: Dict, ck, cv, count):
+    """Paged commit: per-layer token scatter through the page table plus
+    a targeted physical-page summary refresh.  Entries beyond `count`
+    are written (and later overwritten) exactly as in the contiguous
+    path; rows whose table maps them nowhere land in the null page."""
+    pt = cache["page_table"]
+    length = cache["length"]
+    w = ck.shape[2]
+    blk = cache["k"].shape[2]
+    new_len = length + count
+    cache = dict(cache)
+    cache["k"] = jax.vmap(
+        lambda pool_l, new_l: paged_write_tokens(pool_l, pt, length, new_l)
+    )(cache["k"], ck)
+    cache["v"] = jax.vmap(
+        lambda pool_l, new_l: paged_write_tokens(pool_l, pt, length, new_l)
+    )(cache["v"], cv)
+    n_touch = -(-w // blk) + 1
+    nkmax, nkmin = jax.vmap(
+        lambda kx, kn, pool_l: paged_update_summaries(
+            kx, kn, pool_l, pt, length, new_len, n_touch)
     )(cache["kmax"], cache["kmin"], cache["k"])
     cache["kmax"] = nkmax
     cache["kmin"] = nkmin
@@ -183,19 +217,34 @@ def refresh_partial_from_queries(cfg: ModelConfig, spec: SpecPVConfig,
     and re-materialise the partial body (sink + retrieval + local).
 
     queries: [L, B, T, H, Dh]; q_weight: [B, T].
-    Returns (pk, pv, ppos): [L, B, Hk, P_body(+pad), Dh]."""
+    Returns (pk, pv, ppos): [L, B, Hk, P_body(+pad), Dh].
+
+    Paged caches score from gathered physical-page summaries (a small
+    [B, NB, Hk, Dh] gather) and pull the selected blocks straight from
+    the pool — Quest retrieval over physical blocks."""
     use_kernel = (spec.use_pallas and spec.score_mode == "paper"
                   and spec.reduction == "mean")
+    paged = "page_table" in cache
 
-    def per_layer(q_l, kmax_l, kmin_l, k_l, v_l):
+    def _scores(q_l, kmax_l, kmin_l):
         if use_kernel:
             from repro.kernels import ops as kops
-            scores = kops.retrieval_scores(q_l, kmax_l, kmin_l, q_weight)
-        else:
-            scores = quest_block_scores(q_l, kmax_l, kmin_l, q_weight,
-                                        score_mode=spec.score_mode,
-                                        reduction=spec.reduction)
-        return select_and_gather_partial(spec, scores, k_l, v_l,
-                                         cache["length"])
+            return kops.retrieval_scores(q_l, kmax_l, kmin_l, q_weight)
+        return quest_block_scores(q_l, kmax_l, kmin_l, q_weight,
+                                  score_mode=spec.score_mode,
+                                  reduction=spec.reduction)
+
+    if paged:
+        pt = cache["page_table"]
+
+        def per_layer(q_l, kmax_p, kmin_p, k_p, v_p):
+            scores = _scores(q_l, kmax_p[pt], kmin_p[pt])
+            return select_and_gather_partial_paged(spec, scores, k_p, v_p,
+                                                   pt, cache["length"])
+    else:
+        def per_layer(q_l, kmax_l, kmin_l, k_l, v_l):
+            scores = _scores(q_l, kmax_l, kmin_l)
+            return select_and_gather_partial(spec, scores, k_l, v_l,
+                                             cache["length"])
     return jax.vmap(per_layer)(queries, cache["kmax"], cache["kmin"],
                                cache["k"], cache["v"])

@@ -56,3 +56,35 @@ def sparse_verify_attention(q, k_cache, v_cache, block_idx, block_valid_len,
           functools.partial(ref.sparse_verify_attention_ref,
                             block_size=block_size))
     return jax.vmap(fn)(q, k_cache, v_cache, block_idx, block_valid_len)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def paged_verify_attention(q, pool_k, pool_v, page_table, length,
+                           use_pallas: bool = True):
+    """Paged dense/refresh verification attention over the shared block
+    pool (softmax partials).
+
+    Reuses the block-sparse kernel's scalar-prefetch index_map: the
+    slot's page table IS the block-id table, so the pipeline streams
+    exactly the resident pages HBM->VMEM — the contiguous [B, S, ...]
+    view is never materialised.  Per-block valid lengths are derived
+    from `length`, so pages past the filled region contribute nothing.
+
+    q: [B, T, H, Dh]; pool_k/pool_v: [NP, block, Hk, Dh] (one layer's
+    pool); page_table: [B, NB] int32; length: [B].
+    Returns (m [B, H, T], l [B, H, T], acc [B, H, T, Dh]) fp32 —
+    combinable with the tree self-segment via
+    ``models.common.combine_attn_parts``."""
+    np_, bs, hk, dh = pool_k.shape
+    b, nb = page_table.shape
+    k_flat = pool_k.reshape(np_ * bs, hk, dh)
+    v_flat = pool_v.reshape(np_ * bs, hk, dh)
+    vlen = jnp.clip(length[:, None] - jnp.arange(nb)[None] * bs, 0, bs)
+    idx = jnp.broadcast_to(page_table[:, None], (b, hk, nb)).astype(jnp.int32)
+    vlen_h = jnp.broadcast_to(vlen[:, None], (b, hk, nb)).astype(jnp.int32)
+    fn = (functools.partial(sparse_verify_attention_pallas, block_size=bs,
+                            interpret=_interpret())
+          if use_pallas else
+          functools.partial(ref.sparse_verify_attention_ref, block_size=bs))
+    return jax.vmap(fn, in_axes=(0, None, None, 0, 0))(q, k_flat, v_flat,
+                                                       idx, vlen_h)

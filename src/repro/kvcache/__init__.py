@@ -1,4 +1,6 @@
-from repro.kvcache.cache import KVCache, BlockSummaries, PartialKV
+from repro.kvcache.cache import (KVCache, BlockSummaries, PartialKV,
+                                 PageAllocator)
 from repro.kvcache.offload import TrafficMeter
 
-__all__ = ["KVCache", "BlockSummaries", "PartialKV", "TrafficMeter"]
+__all__ = ["KVCache", "BlockSummaries", "PartialKV", "PageAllocator",
+           "TrafficMeter"]

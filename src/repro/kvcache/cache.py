@@ -9,10 +9,25 @@
 * ``PartialKV`` — the *materialised* partial cache (sink + retrieval +
   local + buffer), per layer and per kv-head (retrieval is query-aware per
   head).  Token order is preserved; the buffer occupies the tail slots.
+
+Paged variant (``page_table`` key present in the cache dict):
+
+* the full cache is a *shared block pool* ``k/v: [L, NumPages, block, Hk,
+  Dh]`` with per-slot page tables ``[B, S_max/block] int32`` mapping
+  logical blocks to physical pages, so resident memory scales with the
+  tokens actually held, not ``B x S_max``;
+* summaries are keyed by *physical* page: ``kmax/kmin: [L, NumPages, Hk,
+  Dh]``;
+* page 0 is the reserved null page — unallocated table entries point at
+  it, stray writes are routed into it, and it is never read unmasked;
+* page ownership (which slot holds which page) lives host-side in
+  ``PageAllocator``; the device only ever sees the tables.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import List, Tuple
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -148,16 +163,160 @@ def partial_valid_mask(pkv: PartialKV, layer=None) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# paged block pool
+# ---------------------------------------------------------------------------
+
+PAGED_POOL_KEYS = ("k", "v", "kmax", "kmin")   # no batch axis when paged
+
+
+class PageAllocator:
+    """Host-side free-list allocator over the shared block pool.
+
+    Page 0 is the reserved null page: unallocated page-table entries point
+    at it and it is never handed out, so ``capacity == num_pages - 1``.
+    The allocator is pure host state (the device only sees page tables);
+    it never touches pool contents, so an over-draw raises instead of
+    corrupting pages.
+    """
+
+    def __init__(self, num_pages: int):
+        assert num_pages >= 2, "need at least one allocatable page"
+        self.num_pages = num_pages
+        self.high_water = 0
+        self.reset()
+
+    def reset(self) -> None:
+        # LIFO free list: freshly freed pages are reused first (warm HBM)
+        self._free: List[int] = list(range(self.num_pages - 1, 0, -1))
+        self._slot_pages: dict = {}
+
+    @property
+    def capacity(self) -> int:
+        return self.num_pages - 1
+
+    @property
+    def free(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self.capacity - len(self._free)
+
+    def count(self, slot: int) -> int:
+        """Pages currently held by `slot`."""
+        return len(self._slot_pages.get(slot, ()))
+
+    def pages_of(self, slot: int) -> List[int]:
+        return list(self._slot_pages.get(slot, ()))
+
+    def alloc(self, slot: int, n: int) -> np.ndarray:
+        """Hand `n` pages to `slot`.  Raises on over-draw (state
+        unchanged), so exhaustion can never hand out a page twice."""
+        if n > len(self._free):
+            raise RuntimeError(
+                f"page pool exhausted: want {n}, have {len(self._free)} "
+                f"free of {self.capacity}")
+        pages = [self._free.pop() for _ in range(n)]
+        self._slot_pages.setdefault(slot, []).extend(pages)
+        self.high_water = max(self.high_water, self.in_use)
+        return np.asarray(pages, np.int32)
+
+    def free_slot(self, slot: int) -> List[int]:
+        """Return all of `slot`'s pages to the free list (idempotent)."""
+        pages = self._slot_pages.pop(slot, [])
+        self._free.extend(pages)
+        return pages
+
+
+def init_paged_pool(num_layers: int, num_pages: int, block: int,
+                    num_kv_heads: int, head_dim: int, dtype) -> dict:
+    """Shared pool + physical-page summaries (no page tables)."""
+    kv_shape = (num_layers, num_pages, block, num_kv_heads, head_dim)
+    sm_shape = (num_layers, num_pages, num_kv_heads, head_dim)
+    return {"k": jnp.zeros(kv_shape, dtype), "v": jnp.zeros(kv_shape, dtype),
+            "kmax": jnp.zeros(sm_shape, jnp.float32),
+            "kmin": jnp.zeros(sm_shape, jnp.float32)}
+
+
+def gather_page_view(pool_l: jax.Array, page_table: jax.Array) -> jax.Array:
+    """One layer's logical contiguous view through the page table.
+
+    pool_l: [NP, block, Hk, Dh]; page_table: [B, NB] ->
+    [B, NB*block, Hk, Dh].  Entries mapping to the null page read
+    whatever it holds — callers mask by position validity."""
+    b, nb = page_table.shape
+    v = pool_l[page_table]                       # [B, NB, block, ...]
+    return v.reshape((b, nb * pool_l.shape[1]) + pool_l.shape[2:])
+
+
+def paged_write_tokens(pool_l: jax.Array, page_table: jax.Array, start,
+                       new: jax.Array) -> jax.Array:
+    """Scatter `new` tokens at per-row logical offsets through the table.
+
+    pool_l: [NP, block, Hk, Dh]; page_table: [B, NB]; start: [B];
+    new: [B, T, Hk, Dh].  Positions beyond the table span are clamped
+    into the last logical block (an upstream admission error); positions
+    whose table entry is unallocated land in the null page and are never
+    read unmasked."""
+    np_, blk = pool_l.shape[:2]
+    b, nb = page_table.shape
+    t = new.shape[1]
+    idx = start[:, None] + jnp.arange(t)[None]               # [B, T] logical
+    idx = jnp.minimum(idx, nb * blk - 1)
+    pg = jnp.take_along_axis(page_table, idx // blk, axis=1)
+    flat = (pg * blk + idx % blk).reshape(-1)
+    pool_flat = pool_l.reshape((np_ * blk,) + pool_l.shape[2:])
+    pool_flat = pool_flat.at[flat].set(
+        new.astype(pool_l.dtype).reshape((b * t,) + pool_l.shape[2:]))
+    return pool_flat.reshape(pool_l.shape)
+
+
+def paged_update_summaries(kmax_p, kmin_p, pool_l, page_table, start, end,
+                           n_touch: int):
+    """Recompute physical-page summaries for the logical blocks covering
+    [start, end) of each row (paged counterpart of
+    ``update_layer_summaries``; same masked max/min, keyed by page).
+
+    kmax_p/kmin_p: [NP, Hk, Dh]; pool_l: [NP, block, Hk, Dh];
+    page_table: [B, NB]; start/end: [B]; n_touch: static upper bound on
+    touched blocks per row (cdiv(T, block) + 1)."""
+    np_, blk, hk, dh = pool_l.shape
+    b, nb = page_table.shape
+    blk_lo = start // blk
+    tb = blk_lo[:, None] + jnp.arange(n_touch)[None]         # [B, NT] logical
+    in_range = (tb < (end[:, None] + blk - 1) // blk) & (tb < nb)
+    tbc = jnp.minimum(tb, nb - 1)
+    pg = jnp.take_along_axis(page_table, tbc, axis=1)        # [B, NT]
+    keys = pool_l[pg].astype(jnp.float32)                    # [B,NT,blk,Hk,Dh]
+    pos = tbc[:, :, None] * blk + jnp.arange(blk)[None, None]
+    valid = (pos < end[:, None, None])[..., None, None]
+    kmax_new = jnp.max(jnp.where(valid, keys, -1e30), axis=2)
+    kmin_new = jnp.min(jnp.where(valid, keys, 1e30), axis=2)
+    tgt = jnp.where(in_range & (pg > 0), pg, 0).reshape(-1)
+    kmax_p = kmax_p.at[tgt].set(kmax_new.reshape(-1, hk, dh))
+    kmin_p = kmin_p.at[tgt].set(kmin_new.reshape(-1, hk, dh))
+    # the null page collects every routed-away write; keep it neutral so
+    # gathered views of unallocated entries read all-zero summaries
+    # (bit-identical to the contiguous layout's unwritten blocks)
+    kmax_p = kmax_p.at[0].set(0.0)
+    kmin_p = kmin_p.at[0].set(0.0)
+    return kmax_p, kmin_p
+
+
+# ---------------------------------------------------------------------------
 # per-slot (batch-row) surgery — continuous batching support
 #
 # The blocked layout makes slot == batch row everywhere, so per-slot cache
 # reset / admission is a row write at a dynamic batch index.  The full-cache
 # dict keys carry the batch on axis 1 (leading layer axis) except `length`;
-# draft-cache and engine per-slot scalars carry it on axis 0.
+# draft-cache and engine per-slot scalars carry it on axis 0.  Paged caches
+# carry the batch only on `page_table`/`length` (axis 0) — the pool keys
+# are shared and merged at page granularity instead.
 # ---------------------------------------------------------------------------
 
 CACHE_BATCH_AXIS = {"k": 1, "v": 1, "kmax": 1, "kmin": 1,
-                    "cross_k": 1, "cross_v": 1, "length": 0}
+                    "cross_k": 1, "cross_v": 1,
+                    "page_table": 0, "length": 0}
 
 
 def write_row(dst: jax.Array, src: jax.Array, slot, axis: int) -> jax.Array:
@@ -178,14 +337,50 @@ def select_rows(mask: jax.Array, new: jax.Array, old: jax.Array,
 
 def write_cache_slot(dst: dict, src: dict, slot) -> dict:
     """Copy the single batch row of a batch-1 cache dict `src` into row
-    `slot` of `dst` (chunked prefill-into-slot commit)."""
+    `slot` of `dst` (chunked prefill-into-slot commit).
+
+    Paged: `src` carries only per-row keys (page_table/length + any cross
+    arrays); the pool keys are shared and pass through from `dst` — a
+    paged slot prefill already wrote the slot's pages in place."""
+    if "page_table" in dst:
+        out = dict(dst)
+        for name in src:
+            if name in PAGED_POOL_KEYS:
+                continue
+            out[name] = write_row(dst[name], src[name], slot,
+                                  CACHE_BATCH_AXIS.get(name, 0))
+        return out
     return {name: write_row(dst[name], src[name], slot,
                             CACHE_BATCH_AXIS.get(name, 0))
             for name in dst}
 
 
 def merge_cache_rows(mask: jax.Array, new: dict, old: dict) -> dict:
-    """Per-row merge of two full-cache dicts (masked engine steps)."""
+    """Per-row merge of two full-cache dicts (masked engine steps).
+
+    Paged: pool keys have no batch axis, so rows are merged at *page*
+    granularity — a page takes the stepped (`new`) value iff it belongs
+    to an active row's table.  Pages of inactive rows, free pages and
+    the null page revert to `old`, which keeps untouched slots
+    bit-identical exactly as the row merge does for contiguous caches."""
+    if "page_table" in new:
+        pt = old["page_table"]                       # tables don't step
+        b, nb = pt.shape
+        num_pages = new["k"].shape[1]
+        row_on = jnp.repeat(mask, nb)
+        tgt = jnp.where(row_on, pt.reshape(-1), 0)
+        page_on = (jnp.zeros((num_pages,), bool).at[tgt].set(True)
+                   .at[0].set(False))
+        out = {}
+        for name in new:
+            if name in PAGED_POOL_KEYS:
+                m = page_on.reshape((1, num_pages)
+                                    + (1,) * (new[name].ndim - 2))
+                out[name] = jnp.where(m, new[name], old[name])
+            else:
+                out[name] = select_rows(mask, new[name], old[name],
+                                        CACHE_BATCH_AXIS.get(name, 0))
+        return out
     return {name: select_rows(mask, new[name], old[name],
                               CACHE_BATCH_AXIS.get(name, 0))
             for name in new}

@@ -62,11 +62,20 @@ def init_params(cfg: ModelConfig, key):
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
-               spec: Optional[SpecPVConfig] = None) -> Dict:
+               spec: Optional[SpecPVConfig] = None, *,
+               paged: bool = False,
+               num_pages: Optional[int] = None) -> Dict:
+    """Cache dict.  ``paged=True`` (attention archs only) replaces the
+    per-row [L, B, S_max, ...] layout with a shared block pool
+    [L, NumPages, block, ...] plus per-slot page tables — page 0 is the
+    reserved null page, so ``num_pages`` defaults to one more than the
+    contiguous capacity ``batch * S_max/block``."""
     dtype = cm.dt(cfg.dtype)
     if cfg.arch_type == "ssm":
+        assert not paged, "paged KV is attention-only"
         return rw.init_state(cfg, batch, dtype)
     if cfg.arch_type == "hybrid":
+        assert not paged, "paged KV is attention-only"
         return gf.init_state(cfg, batch, dtype)
     kinds = cfg.layer_kinds()
     l_attn = dn.attn_layer_count(kinds)
@@ -74,13 +83,20 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     hk, dh = cfg.num_kv_heads, cfg.head_dim_
     block = spec.block_size if spec else 128
     nb = cdiv(max_len, block)
-    cache: Dict[str, Any] = {
-        "k": jnp.zeros((l_attn, batch, max_len, hk, dh), dtype),
-        "v": jnp.zeros((l_attn, batch, max_len, hk, dh), dtype),
-        "kmax": jnp.zeros((l_attn, batch, nb, hk, dh), jnp.float32),
-        "kmin": jnp.zeros((l_attn, batch, nb, hk, dh), jnp.float32),
-        "length": jnp.zeros((batch,), jnp.int32),
-    }
+    if paged:
+        from repro.kvcache.cache import init_paged_pool
+        np_total = num_pages if num_pages is not None else batch * nb + 1
+        cache = init_paged_pool(l_attn, np_total, block, hk, dh, dtype)
+        cache["page_table"] = jnp.zeros((batch, nb), jnp.int32)
+        cache["length"] = jnp.zeros((batch,), jnp.int32)
+    else:
+        cache = {
+            "k": jnp.zeros((l_attn, batch, max_len, hk, dh), dtype),
+            "v": jnp.zeros((l_attn, batch, max_len, hk, dh), dtype),
+            "kmax": jnp.zeros((l_attn, batch, nb, hk, dh), jnp.float32),
+            "kmin": jnp.zeros((l_attn, batch, nb, hk, dh), jnp.float32),
+            "length": jnp.zeros((batch,), jnp.int32),
+        }
     if l_cross:
         te = (cfg.num_image_tokens if cfg.arch_type == "vlm"
               else cfg.num_audio_frames)

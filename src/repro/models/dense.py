@@ -182,21 +182,14 @@ def quest_block_scores(q, kmax, kmin, q_weight, *, score_mode: str,
     return s                                              # [B, Hk, NB]
 
 
-def select_and_gather_partial(spec: SpecPVConfig, scores, k_layer, v_layer,
-                              length):
-    """Select sink + top-K retrieval + local blocks and gather them.
+def _select_block_ids(spec: SpecPVConfig, scores, length):
+    """Sink + top-K retrieval + local block selection (shared by the
+    contiguous and paged gathers).
 
-    scores: [B, Hk, NB]; k_layer/v_layer: [B, S, Hk, Dh]; length: [B].
-    Returns (pk, pv, ppos): [B, Hk, P, Dh] x2 and [B, Hk, P] with P =
-    spec.partial_budget_tokens.  Invalid slots have pos = -1.
-    """
-    b, s, hk, dh = k_layer.shape
+    scores: [B, Hk, NB]; length: [B].  Returns (idx [B, Hk, NS] logical
+    block ids, slot_ok [B, Hk, NS] — False for padded retrieval ranks)."""
+    b, hk, nb = scores.shape
     bs = spec.block_size
-    nb = scores.shape[-1]
-    if s < nb * bs:  # cache not block-aligned: pad the gather view
-        pad_w = ((0, 0), (0, nb * bs - s), (0, 0), (0, 0))
-        k_layer = jnp.pad(k_layer, pad_w)
-        v_layer = jnp.pad(v_layer, pad_w)
     n_sink, n_ret, n_loc = (spec.num_sink_blocks, spec.retrieval_budget_blocks,
                             spec.local_window_blocks)
 
@@ -220,6 +213,28 @@ def select_and_gather_partial(spec: SpecPVConfig, scores, k_layer, v_layer,
     loc_idx = loc_lo[:, None, None] + jnp.arange(n_loc)[None, None]
     loc_idx = jnp.broadcast_to(loc_idx, (b, hk, n_loc))
     idx = jnp.concatenate([sink_idx, ret_idx, loc_idx], axis=-1)  # [B,Hk,NS]
+    slot_ok = jnp.concatenate(
+        [jnp.ones((b, hk, n_sink), bool), ret_rank_ok,
+         jnp.ones((b, hk, n_loc), bool)], axis=-1)
+    return idx, slot_ok
+
+
+def select_and_gather_partial(spec: SpecPVConfig, scores, k_layer, v_layer,
+                              length):
+    """Select sink + top-K retrieval + local blocks and gather them.
+
+    scores: [B, Hk, NB]; k_layer/v_layer: [B, S, Hk, Dh]; length: [B].
+    Returns (pk, pv, ppos): [B, Hk, P, Dh] x2 and [B, Hk, P] with P =
+    spec.partial_budget_tokens.  Invalid slots have pos = -1.
+    """
+    b, s, hk, dh = k_layer.shape
+    bs = spec.block_size
+    nb = scores.shape[-1]
+    if s < nb * bs:  # cache not block-aligned: pad the gather view
+        pad_w = ((0, 0), (0, nb * bs - s), (0, 0), (0, 0))
+        k_layer = jnp.pad(k_layer, pad_w)
+        v_layer = jnp.pad(v_layer, pad_w)
+    idx, slot_ok = _select_block_ids(spec, scores, length)
     ns = idx.shape[-1]
 
     kb = k_layer[:, : nb * bs].reshape(b, nb, bs, hk, dh)
@@ -233,10 +248,38 @@ def select_and_gather_partial(spec: SpecPVConfig, scores, k_layer, v_layer,
     pos = idx[..., None] * bs + jnp.arange(bs)[None, None, None]  # [B,Hk,NS,bs]
     valid = pos < length[:, None, None, None]
     # invalidate slots coming from masked-out retrieval ranks
-    slot_ok = jnp.concatenate(
-        [jnp.ones((b, hk, n_sink), bool), ret_rank_ok,
-         jnp.ones((b, hk, n_loc), bool)], axis=-1)
     valid = valid & slot_ok[..., None]
+    pos = jnp.where(valid, pos, -1)
+    p = ns * bs
+    return (pk.reshape(b, hk, p, dh), pv.reshape(b, hk, p, dh),
+            pos.reshape(b, hk, p))
+
+
+def select_and_gather_partial_paged(spec: SpecPVConfig, scores, pool_k,
+                                    pool_v, page_table, length):
+    """Paged retrieval: translate the selected logical blocks through the
+    page table and gather straight from the shared physical pool — the
+    contiguous [B, S, ...] view is never materialised.
+
+    scores: [B, Hk, NB]; pool_k/pool_v: [NP, block, Hk, Dh];
+    page_table: [B, NB]; length: [B].  Same contract as
+    ``select_and_gather_partial``."""
+    np_, bs, hk, dh = pool_k.shape
+    b, nb = page_table.shape
+    idx, slot_ok = _select_block_ids(spec, scores, length)
+    ns = idx.shape[-1]
+    idxc = jnp.minimum(idx, nb - 1)
+    pg = jnp.take_along_axis(
+        jnp.broadcast_to(page_table[:, None], (b, hk, nb)), idxc, axis=2)
+    pool_kh = jnp.moveaxis(pool_k, 2, 0)                  # [Hk, NP, bs, Dh]
+    pool_vh = jnp.moveaxis(pool_v, 2, 0)
+    hsel = jnp.arange(hk)[None, :, None]
+    pk = pool_kh[hsel, pg]                                # [B, Hk, NS, bs, Dh]
+    pv = pool_vh[hsel, pg]
+    # positions from the *unclamped* logical ids, matching the contiguous
+    # gather: an out-of-table id yields pos >= length and masks itself
+    pos = idx[..., None] * bs + jnp.arange(bs)[None, None, None]
+    valid = (pos < length[:, None, None, None]) & slot_ok[..., None]
     pos = jnp.where(valid, pos, -1)
     p = ns * bs
     return (pk.reshape(b, hk, p, dh), pv.reshape(b, hk, p, dh),
@@ -249,10 +292,13 @@ def select_and_gather_partial(spec: SpecPVConfig, scores, k_layer, v_layer,
 
 def _self_attention(cfg: ModelConfig, mode: str,
                     lp: Dict, h, positions, self_mask, cache_kv, pkv,
-                    length, inv_freq, mscale):
+                    length, inv_freq, mscale, page_table=None):
     """One self-attention sublayer under the given mode.
 
-    cache_kv: (k_layer, v_layer) for prefill/decode_full or None
+    cache_kv: (k_layer, v_layer) for prefill/decode_full or None; with
+              page_table set these are the layer's *pool* slices
+              [NP, block, Hk, Dh] read (and, for prefill, written)
+              through the table
     pkv:      (pk, pv, ppos) per-kv-head slots for decode_partial or None
     Returns (attn_out, updates_dict).
     """
@@ -273,10 +319,23 @@ def _self_attention(cfg: ModelConfig, mode: str,
                                  kv_positions=positions, causal=False,
                                  chunk=min(512, max(128, t)))
     elif mode == "prefill":
-        k_layer, v_layer = cache_kv[:2]  # (int8 caches are decode-only)
-        from repro.kvcache.cache import append_layer_kv
-        k_layer, v_layer = append_layer_kv(k_layer, v_layer, k_new, v_new,
-                                           length)
+        if page_table is not None:
+            from repro.kvcache.cache import (paged_write_tokens,
+                                             gather_page_view)
+            pool_k, pool_v = cache_kv[:2]     # [NP, block, Hk, Dh]
+            pool_k = paged_write_tokens(pool_k, page_table, length, k_new)
+            pool_v = paged_write_tokens(pool_v, page_table, length, v_new)
+            k_layer = gather_page_view(pool_k, page_table)
+            v_layer = gather_page_view(pool_v, page_table)
+            upd["k_layer"] = pool_k
+            upd["v_layer"] = pool_v
+        else:
+            k_layer, v_layer = cache_kv[:2]  # (int8 caches are decode-only)
+            from repro.kvcache.cache import append_layer_kv
+            k_layer, v_layer = append_layer_kv(k_layer, v_layer, k_new,
+                                               v_new, length)
+            upd["k_layer"] = k_layer
+            upd["v_layer"] = v_layer
         s = k_layer.shape[1]
         kv_pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
         kv_valid = kv_pos < (length + t)[:, None]
@@ -284,12 +343,16 @@ def _self_attention(cfg: ModelConfig, mode: str,
                                  kv_positions=kv_pos, causal=True,
                                  window=cfg.window_size,
                                  kv_valid=kv_valid, chunk=512)
-        upd["k_layer"] = k_layer
-        upd["v_layer"] = v_layer
     elif mode in ("decode_full",):
-        k_layer, v_layer = cache_kv[:2]
-        ksc, vsc = (cache_kv[2], cache_kv[3]) if len(cache_kv) > 2 \
-            else (None, None)
+        if page_table is not None:
+            from repro.kvcache.cache import gather_page_view
+            k_layer = gather_page_view(cache_kv[0], page_table)
+            v_layer = gather_page_view(cache_kv[1], page_table)
+            ksc = vsc = None                  # int8 caches stay contiguous
+        else:
+            k_layer, v_layer = cache_kv[:2]
+            ksc, vsc = (cache_kv[2], cache_kv[3]) if len(cache_kv) > 2 \
+                else (None, None)
         s = k_layer.shape[1]
         kv_pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
         kv_valid = kv_pos < length[:, None]
@@ -420,6 +483,8 @@ def trunk_fwd(cfg: ModelConfig, stack_params: Dict, h, positions, *,
     mscale = cm.yarn_mscale(cfg)
     b, t = positions.shape
     length = cache["length"] if cache is not None else jnp.zeros((b,), jnp.int32)
+    paged = cache is not None and "page_table" in cache
+    page_table = cache["page_table"] if paged else None
     if q_weight is None:
         q_weight = jnp.ones((b, t), jnp.float32)
 
@@ -524,13 +589,21 @@ def trunk_fwd(cfg: ModelConfig, stack_params: Dict, h, positions, *,
                     pkv_l = None
                 att, upd, q = _self_attention(
                     cfg, mode, lp, h, positions, self_mask, cache_kv, pkv_l,
-                    length, inv_freq, mscale)
+                    length, inv_freq, mscale, page_table=page_table)
                 h = h + att
                 if mode == "prefill":
-                    from repro.kvcache.cache import update_layer_summaries
-                    nkmax, nkmin = update_layer_summaries(
-                        x["kmax"][a_i], x["kmin"][a_i], upd["k_layer"],
-                        length, length + t, spec.block_size)
+                    if paged:
+                        from repro.kvcache.cache import paged_update_summaries
+                        blk = upd["k_layer"].shape[1]
+                        nkmax, nkmin = paged_update_summaries(
+                            x["kmax"][a_i], x["kmin"][a_i], upd["k_layer"],
+                            page_table, length, length + t,
+                            n_touch=cdiv(t, blk) + 1)
+                    else:
+                        from repro.kvcache.cache import update_layer_summaries
+                        nkmax, nkmin = update_layer_summaries(
+                            x["kmax"][a_i], x["kmin"][a_i], upd["k_layer"],
+                            length, length + t, spec.block_size)
                     ys["uk"].append(upd["k_layer"])
                     ys["uv"].append(upd["v_layer"])
                     ys["ukmax"].append(nkmax)
@@ -541,11 +614,22 @@ def trunk_fwd(cfg: ModelConfig, stack_params: Dict, h, positions, *,
                 if emit_queries:
                     ys["q"].append(q)
                 if select_partial:
+                    if paged:
+                        kmax_log = x["kmax"][a_i][page_table]  # [B,NB,Hk,Dh]
+                        kmin_log = x["kmin"][a_i][page_table]
+                    else:
+                        kmax_log = x["kmax"][a_i]
+                        kmin_log = x["kmin"][a_i]
                     scores = quest_block_scores(
-                        q, x["kmax"][a_i], x["kmin"][a_i], q_weight,
+                        q, kmax_log, kmin_log, q_weight,
                         score_mode=spec.score_mode, reduction=spec.reduction)
-                    ppk, ppv, pppos = select_and_gather_partial(
-                        spec, scores, x["ck"][a_i], x["cv"][a_i], length)
+                    if paged:
+                        ppk, ppv, pppos = select_and_gather_partial_paged(
+                            spec, scores, x["ck"][a_i], x["cv"][a_i],
+                            page_table, length)
+                    else:
+                        ppk, ppv, pppos = select_and_gather_partial(
+                            spec, scores, x["ck"][a_i], x["cv"][a_i], length)
                     ys["ppk"].append(ppk)
                     ys["ppv"].append(ppv)
                     ys["pppos"].append(pppos)

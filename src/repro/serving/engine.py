@@ -45,6 +45,13 @@ class ServingConfig:
     # attention automaton; state archs (ssm/hybrid) run chain
     # verification and automatically fall back to the wave path.
     scheduler: str = "continuous"
+    # paged full-KV cache (continuous scheduler only): back the engine's
+    # batch rows with a shared block pool + per-slot page tables and gate
+    # admission on free pages.  num_pages=None sizes the pool at
+    # contiguous parity (batch * max_len/block + 1); smaller pools trade
+    # concurrency for memory.  The wave path always runs contiguous.
+    paged_kv: bool = False
+    num_pages: Optional[int] = None
 
 
 class ServingEngine:
@@ -59,7 +66,7 @@ class ServingEngine:
         self.dparams = draft_params
         self.queue: List[Request] = []
         self.outputs: Dict[str, RequestOutput] = {}
-        self._engines: Dict[int, SpecPVEngine] = {}
+        self._engines: Dict[tuple, SpecPVEngine] = {}
         self._continuous: Optional[ContinuousScheduler] = None
         self._wave_id = 0
         self.stats = defaultdict(float)
@@ -80,13 +87,28 @@ class ServingEngine:
             return self._continuous.cancel(request_id)
         return False
 
-    def _engine_for(self, batch: int) -> SpecPVEngine:
-        if batch not in self._engines:
-            self._engines[batch] = SpecPVEngine(
+    def _engine_for(self, batch: int, *, paged: bool = False) -> SpecPVEngine:
+        key = (batch, paged)
+        if key not in self._engines:
+            self._engines[key] = SpecPVEngine(
                 self.cfg, self.spec, self.dcfg, self.params, self.dparams,
                 batch=batch, max_len=self.scfg.max_len,
-                partial_verification=self.scfg.partial_verification)
-        return self._engines[batch]
+                partial_verification=self.scfg.partial_verification,
+                paged=paged, num_pages=self.scfg.num_pages)
+        return self._engines[key]
+
+    def page_stats(self) -> Dict[str, int]:
+        """Resident-page accounting of the continuous engine ({} when not
+        paged)."""
+        key = (self.scfg.batch, True)
+        return self._engines[key].page_stats() if key in self._engines else {}
+
+    def reset_page_high_water(self) -> None:
+        """Zero the resident-page high-water mark (e.g. after a warmup
+        run, so it reflects only the timed region)."""
+        key = (self.scfg.batch, True)
+        if key in self._engines:
+            self._engines[key]._page_alloc.high_water = 0
 
     # ------------------------------------------------------------------
     # continuous (in-flight) scheduler
@@ -95,14 +117,14 @@ class ServingEngine:
         sched = self._continuous
         if sched is None:
             sched = ContinuousScheduler(
-                self._engine_for(self.scfg.batch),
+                self._engine_for(self.scfg.batch, paged=self.scfg.paged_kv),
                 prefill_chunk=self.scfg.prefill_chunk)
             self._continuous = sched
         while self.queue:
             sched.submit(self.queue.pop(0))
         done = sched.run()
         self.outputs.update({o.request_id: o for o in done})
-        for k in ("tokens", "wall_s", "steps", "admissions"):
+        for k in ("tokens", "wall_s", "steps", "admissions", "page_stalls"):
             self.stats[k] += sched.stats.pop(k, 0.0)
         return done
 

@@ -13,6 +13,13 @@ runs one masked engine step per distinct mode; rows are computationally
 independent, so every request's output is token-identical to running it
 alone through ``SpecPVEngine.generate`` (greedy).  Admission order is
 priority desc, then earliest deadline, then arrival.
+
+With a paged engine (``SpecPVEngine(paged=True)``) admission is
+additionally gated on free *pages*: a request is only admitted when the
+shared block pool can hold its prompt + generation budget, so short
+requests stop paying for max_len-sized rows and the pool can be sized
+well below batch x max_len.  A request that does not fit right now stays
+queued (``stats["page_stalls"]``) while smaller waiters may proceed.
 """
 from __future__ import annotations
 
@@ -43,10 +50,19 @@ class _Slot:
     tokens: List[int] = field(default_factory=list)
     accepts: List[int] = field(default_factory=list)
     steps: int = 0
+    eos_at: Optional[int] = None    # index of the first EOS, tracked as
+                                    # tokens append (done_reason is O(1))
+
+    def append(self, toks: List[int]) -> None:
+        if self.req.eos_id >= 0 and self.eos_at is None:
+            for j, t in enumerate(toks):
+                if t == self.req.eos_id:
+                    self.eos_at = len(self.tokens) + j
+                    break
+        self.tokens.extend(toks)
 
     def done_reason(self) -> Optional[str]:
-        if (self.req.eos_id >= 0
-                and self.req.eos_id in self.tokens[: self.req.max_new_tokens]):
+        if self.eos_at is not None and self.eos_at < self.req.max_new_tokens:
             return "stop"
         if len(self.tokens) >= self.req.max_new_tokens:
             return "length"
@@ -105,7 +121,9 @@ class ContinuousScheduler:
             tokens=trim_output(tokens, req.max_new_tokens, req.eos_id),
             prompt_len=len(req.prompt), finished=finished, slot=slot,
             finish_reason=reason,
-            latency_s=self.clock() - req.arrival_s,
+            # clamp: a request cancelled/expired before its (future)
+            # arrival offset would otherwise report a negative latency
+            latency_s=max(0.0, self.clock() - req.arrival_s),
             mean_accept=float(np.mean(accepts)) if len(accepts) else 0.0,
             tokens_per_step=(len(tokens) / steps if steps else 0.0))
         self.outputs[req.request_id] = out
@@ -118,6 +136,9 @@ class ContinuousScheduler:
         self._emit(s.req, i, s.tokens, finished=(reason in ("stop", "length")),
                    reason=reason, accepts=s.accepts, steps=s.steps)
         self.slots[i] = None
+        # pages go back to the free list immediately so same-tick
+        # admission sees them; the device-row reset stays deferred
+        self.engine.release_slot_pages(i)
         # state reset is deferred to after admission: a same-tick refill
         # overwrites the whole row during prefill-into-slot anyway
         self._dirty.add(i)
@@ -142,16 +163,27 @@ class ContinuousScheduler:
             if not free:
                 break
             need = len(req.prompt) + req.max_new_tokens + self.engine.pmax
-            if need > self.engine.max_len:
+            need_pages = self.engine.pages_needed(len(req.prompt),
+                                                  req.max_new_tokens)
+            if (need > self.engine.max_len
+                    or need_pages > self.engine.page_capacity()):
                 self.waiting.remove(req)
                 self._emit(req, -1, [], finished=False, reason="rejected")
+                continue
+            if self.engine.paged and need_pages > self.engine.free_pages():
+                # admission is gated on free *pages*, not just free slots:
+                # the request stays queued; smaller waiters may still fit
+                self.stats["page_stalls"] += 1
                 continue
             i = free.pop(0)
             self.waiting.remove(req)
             self.st, first = self.engine.prefill_into_slot(
-                self.st, i, req.prompt, chunk=self.prefill_chunk)
+                self.st, i, req.prompt, chunk=self.prefill_chunk,
+                max_new_tokens=req.max_new_tokens)
             self._dirty.discard(i)
-            self.slots[i] = _Slot(req=req, admit_s=now, tokens=[first])
+            slot = _Slot(req=req, admit_s=now)
+            slot.append([first])
+            self.slots[i] = slot
             self.stats["admissions"] += 1
             self.trace.append(("admit", req.request_id, i))
         # slots that stayed free get their rows zeroed once
@@ -164,7 +196,10 @@ class ContinuousScheduler:
         """One scheduler round: evict, admit, step.  Returns True when a
         decode step ran (False = idle; nothing active right now)."""
         # evictions: cancellation first, then natural completion (a slot
-        # can satisfy its stop condition during the previous tick's step)
+        # can satisfy its stop condition during the previous tick's step),
+        # then deadline misses — an in-flight request past its deadline_s
+        # is evicted with its partial tokens, same as an expired waiter
+        now = self.clock()
         for i, s in enumerate(self.slots):
             if s is None:
                 continue
@@ -172,6 +207,8 @@ class ContinuousScheduler:
                 self._evict(i, "cancelled")
             elif s.done_reason():
                 self._evict(i, s.done_reason())
+            elif s.req.deadline_s is not None and s.req.deadline_s < now:
+                self._evict(i, "deadline")
         self._admit()
 
         active = np.array([s is not None for s in self.slots], bool)
@@ -184,7 +221,7 @@ class ContinuousScheduler:
             self.stats["steps"] += 1
             for i in np.nonzero(mask)[0]:
                 s = self.slots[i]
-                s.tokens.extend(int(x) for x in so.tokens[i, : so.counts[i]])
+                s.append([int(x) for x in so.tokens[i, : so.counts[i]]])
                 s.accepts.append(int(so.accept_len[i]))
                 s.steps += 1
         return True

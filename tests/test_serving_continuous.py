@@ -157,3 +157,60 @@ def test_cancellation_and_deadline(tiny, engine2):
     after_admit = next(s for ev, rid, s in sched.trace
                        if ev == "admit" and rid == "after")
     assert after_admit == cancelled_slot
+
+
+def test_inflight_deadline_evicts_with_partial_tokens(tiny, engine2):
+    """A running request whose deadline passes mid-generation is evicted
+    at the next tick with reason "deadline" and its partial tokens —
+    not just expired while waiting (frozen clock drives tick())."""
+    cfg, _, _ = tiny
+    now = {"t": 100.0}
+    sched = ContinuousScheduler(engine2, prefill_chunk=64,
+                                clock=lambda: now["t"])
+    req = _mk_req(cfg, "dl", 32, 64, seed=50, deadline_s=100.5)
+    req.arrival_s = 100.0
+    sched.submit(req)
+    assert sched.tick()                     # admitted + stepped, in budget
+    assert "dl" not in sched.outputs
+    now["t"] = 101.0                        # past the deadline, mid-flight
+    sched.tick()
+    out = sched.outputs["dl"]
+    assert out.finish_reason == "deadline" and not out.finished
+    assert out.slot >= 0                    # evicted from a live slot
+    assert len(out.tokens) > 0              # partial tokens returned
+    assert out.latency_s == pytest.approx(1.0)
+    assert sched.num_active == 0            # slot freed for reuse
+
+
+def test_cancel_before_arrival_clamps_latency(tiny, engine2):
+    """A request cancelled before its (future) arrival offset reports
+    latency 0, not a negative completion - arrival."""
+    cfg, _, _ = tiny
+    now = {"t": 10.0}
+    sched = ContinuousScheduler(engine2, prefill_chunk=64,
+                                clock=lambda: now["t"])
+    req = _mk_req(cfg, "early-cancel", 32, 8, seed=60)
+    req.arrival_s = 1000.0                  # far in the future
+    sched.submit(req)
+    req.cancel()
+    sched.tick()                            # drops the cancelled waiter
+    out = sched.outputs["early-cancel"]
+    assert out.finish_reason == "cancelled" and not out.finished
+    assert out.latency_s == 0.0
+
+
+def test_first_eos_tracked_incrementally(tiny, engine2):
+    """done_reason() keys off the incrementally tracked first-EOS index
+    (no O(n^2) rescans): EOS beyond max_new must not count as a stop."""
+    from repro.serving.scheduler import _Slot
+    r = _mk_req(cfg=tiny[0], rid="x", length=8, max_new=4, seed=70)
+    r.eos_id = 7
+    s = _Slot(req=r, admit_s=0.0)
+    s.append([1, 2])
+    assert s.eos_at is None and s.done_reason() is None
+    s.append([3, 7, 7, 5])                  # first EOS at index 3 < max_new
+    assert s.eos_at == 3 and s.done_reason() == "stop"
+    # EOS only past the budget: length, not stop
+    s2 = _Slot(req=r, admit_s=0.0)
+    s2.append([1, 2, 3, 4, 7])              # EOS at index 4 >= max_new (4)
+    assert s2.eos_at == 4 and s2.done_reason() == "length"
