@@ -19,8 +19,19 @@ engine serves the same request set (still token-identical) while holding
 less than batch rows' worth of max_len memory.  ``--num-pages`` overrides
 the pool size (incl. the reserved null page).
 
+``--prefix-share`` switches to a templated-prompt workload (Poisson
+arrivals drawing from a small set of shared system prompts, each with a
+unique user tail) and A/Bs the paged continuous scheduler with the
+copy-on-write prefix cache on vs off: matched leading blocks attach by
+refcounted page-table reference, so the run reports the prefix-cache hit
+rate, pages saved by sharing, and prefill tokens skipped, alongside the
+resident-page high-water mark of both runs (sharing holds one physical
+copy of each hot prefix; the baseline re-stores it per request).
+
 Run:  PYTHONPATH=src python benchmarks/bench_serving.py --requests 8
       PYTHONPATH=src python benchmarks/bench_serving.py --requests 8 --paged
+      PYTHONPATH=src python benchmarks/bench_serving.py --requests 8 \
+          --prefix-share
 """
 import argparse
 import time
@@ -54,6 +65,28 @@ def make_requests(corpus, contexts, n, rate, rng, max_new):
         reqs.append((t, Request(request_id=f"req-{i}", prompt=prompt[0],
                                 max_new_tokens=(max_new if i % 2
                                                 else max(max_new // 2, 4)))))
+    return reqs
+
+
+def make_prefix_share_requests(corpus, n, rate, rng, max_new, *,
+                               n_sys, sys_len, tail_len):
+    """Templated-prompt workload: every request is one of `n_sys` shared
+    system prompts plus a unique user tail — the multi-turn /
+    shared-system-prompt traffic shape where prefix caching pays.
+    Requests arrive in same-system pairs (two users hitting one template
+    back to back), so in-flight neighbours share live prefixes *and*
+    later arrivals re-hit prefixes cached from drained ones."""
+    systems = [continuation_task(corpus, batch=1, context_len=sys_len,
+                                 seed=7000 + s)[0][0] for s in range(n_sys)]
+    reqs, t = [], 0.0
+    for i in range(n):
+        tail, _ = continuation_task(corpus, batch=1, context_len=tail_len,
+                                    seed=8000 + i)
+        prompt = np.concatenate([systems[(i // 2) % n_sys],
+                                 tail[0]]).astype(np.int32)
+        t += rng.exponential(1.0 / rate) if rate > 0 else 0.0
+        reqs.append((t, Request(request_id=f"req-{i}", prompt=prompt,
+                                max_new_tokens=max_new)))
     return reqs
 
 
@@ -112,6 +145,85 @@ def check_lossless(cfg, spec, dcfg, params, dparams, scfg, reqs, outs):
     return True
 
 
+def run_prefix_share(args, cfg, dcfg, params, dparams, corpus, spec):
+    """Shared-system-prompt workload: paged continuous scheduler with the
+    copy-on-write prefix cache on vs off (identical request set)."""
+    rng = np.random.default_rng(args.seed)
+    reqs = make_prefix_share_requests(
+        corpus, args.requests, args.rate, rng, args.max_new,
+        n_sys=args.num_sys, sys_len=args.sys_len, tail_len=args.tail_len)
+    max_len = args.sys_len + args.tail_len + args.max_new + 128
+    bs = spec.block_size
+    print(f"prefix-share workload: {args.requests} requests over "
+          f"{args.num_sys} system prompts of {args.sys_len} tokens "
+          f"({args.sys_len // bs} full blocks of {bs})")
+
+    results = {}
+    for share in (False, True):
+        scfg = ServingConfig(batch=args.batch, max_len=max_len,
+                             prefill_chunk=64, partial_verification=True,
+                             paged_kv=True, num_pages=args.num_pages or None,
+                             prefix_cache=share)
+        srv = ServingEngine(cfg, spec, dcfg, params, dparams, scfg)
+        if not args.no_warmup:
+            prompt, _ = continuation_task(corpus, batch=1,
+                                          context_len=args.sys_len, seed=1)
+            srv.submit(Request(request_id="warm", prompt=prompt[0],
+                               max_new_tokens=8))
+            srv.run()
+            # warmup must not seed the cache, the hit counters, or the
+            # high-water marks — only the jit compiles should survive
+            srv.reset_warm()
+        run_reqs = [(off, Request(request_id=r.request_id, prompt=r.prompt,
+                                  max_new_tokens=r.max_new_tokens,
+                                  eos_id=r.eos_id))
+                    for off, r in reqs]
+        outs, wall, lat = run_continuous(srv, run_reqs)
+        toks = sum(len(o.tokens) for o in outs)
+        p50, p95 = percentiles(lat)
+        ps, pf = srv.page_stats(), srv.prefix_stats()
+        name = "share" if share else "no-share"
+        results[name] = dict(outs=outs, reqs=run_reqs, tput=toks / wall,
+                             p50=p50, p95=p95, hw=ps["high_water"],
+                             rhw=ps["resident_high_water"], pf=pf,
+                             cap=ps["capacity"], blk=ps["block_size"])
+        print(f"{name:>10}: {toks} tokens in {wall:.1f}s -> "
+              f"{toks / wall:.1f} tok/s, latency p50={p50:.1f}s "
+              f"p95={p95:.1f}s, committed pages high-water "
+              f"{ps['high_water']}/{ps['capacity']} (resident incl. idle "
+              f"cached: {ps['resident_high_water']})")
+        if share:
+            hit = pf["blocks_matched"] / max(pf["blocks_seen"], 1)
+            # working-set saving: peak pages live requests could not do
+            # without (idle cached pages are reclaimable, reported above)
+            saved = results["no-share"]["hw"] - ps["high_water"]
+            print(f"{'':>10}  prefix-cache hit rate: {hit:.0%} "
+                  f"({pf['blocks_matched']}/{pf['blocks_seen']} blocks), "
+                  f"prefill tokens skipped: "
+                  f"{pf['prefill_tokens_skipped']}, committed pages "
+                  f"saved by sharing: {saved} "
+                  f"({saved * ps['block_size']} tokens)")
+
+    if not args.no_check:
+        scfg = ServingConfig(batch=args.batch, max_len=max_len,
+                             prefill_chunk=64, partial_verification=True)
+        check_lossless(cfg, spec, dcfg, params, dparams, scfg,
+                       results["share"]["reqs"], results["share"]["outs"])
+        print("losslessness: shared-prefix outputs token-identical to "
+              "single-request generation")
+    out = ensure_dir(RESULTS_DIR)
+    write_rows(f"{out}/bench_serving_prefix.csv",
+               ["mode", "tok_s", "p50_s", "p95_s",
+                "committed_high_water_pages", "resident_high_water_pages",
+                "blocks_matched", "blocks_seen", "prefill_tokens_skipped"],
+               [[m, f"{r['tput']:.2f}", f"{r['p50']:.2f}",
+                 f"{r['p95']:.2f}", r["hw"], r["rhw"],
+                 r["pf"].get("blocks_matched", 0),
+                 r["pf"].get("blocks_seen", 0),
+                 r["pf"].get("prefill_tokens_skipped", 0)]
+                for m, r in results.items()])
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=8)
@@ -132,6 +244,22 @@ def main():
     ap.add_argument("--num-pages", type=int, default=0,
                     help="pool size incl. the null page (0 = ~60%% of the "
                          "contiguous batch x max_len reservation)")
+    ap.add_argument("--prefix-share", action="store_true",
+                    help="shared-system-prompt workload: A/B the paged "
+                         "continuous scheduler with the copy-on-write "
+                         "prefix cache on vs off")
+    ap.add_argument("--num-sys", type=int, default=1,
+                    help="prefix-share: distinct shared system prompts "
+                         "(1 = one hot template, the canonical case; "
+                         ">1 mixes templates — peak-residency savings "
+                         "then need same-template requests in flight "
+                         "together, though hit rate and skipped prefill "
+                         "still accrue across templates)")
+    ap.add_argument("--sys-len", type=int, default=96,
+                    help="prefix-share: system-prompt tokens (block-"
+                         "aligned prefixes share; 16-token blocks)")
+    ap.add_argument("--tail-len", type=int, default=48,
+                    help="prefix-share: unique user-tail tokens")
     args = ap.parse_args()
 
     cfg, dcfg, params, dparams = get_trained_pair("tiny-dense")
@@ -139,6 +267,9 @@ def main():
     spec = SpecPVConfig(block_size=16, num_sink_blocks=1,
                         retrieval_budget_blocks=4, local_window_blocks=2,
                         buffer_size=48)
+    if args.prefix_share:
+        run_prefix_share(args, cfg, dcfg, params, dparams, corpus, spec)
+        return
     rng = np.random.default_rng(args.seed)
     reqs = make_requests(corpus, args.contexts, args.requests, args.rate,
                          rng, args.max_new)
@@ -203,11 +334,12 @@ def main():
               f"latency p50={p50:.1f}s p95={p95:.1f}s")
         if sched == "continuous" and args.paged:
             ps = srv.page_stats()
-            print(f"{'':>10}  resident pages high-water: "
+            print(f"{'':>10}  committed pages high-water: "
                   f"{ps['high_water']}/{ps['capacity']} "
                   f"({ps['high_water'] * ps['block_size']} tokens; "
-                  f"contiguous layout reserves "
-                  f"{ps['contiguous_pages'] * ps['block_size']}), "
+                  f"resident incl. idle cached: "
+                  f"{ps['resident_high_water']}; contiguous layout "
+                  f"reserves {ps['contiguous_pages'] * ps['block_size']}), "
                   f"admission page-stalls: "
                   f"{int(srv.stats.get('page_stalls', 0))}")
 

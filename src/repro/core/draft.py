@@ -11,6 +11,15 @@ During tree drafting, node K/V live in scratch slots appended after the
 context and are discarded after the step; node inputs at levels > 0 use
 the *draft layer's own hidden state* as the feature (training-time-test
 semantics).
+
+The cache comes in two layouts, switched by the presence of a
+``page_table`` key (mirroring the trunk): the contiguous per-slot
+``[B, S_max, Hk, Dh]`` buffers, or a paged layout over a second, smaller
+shared pool ``[NumPagesD, block, Hk, Dh]`` + per-slot page tables, so
+draft residency also scales with live tokens and prompt-prefix pages can
+be shared copy-on-write between requests.  Reads go through the logical
+gathered view and writes through the page table
+(``models.common.layer_ctx_view`` / ``layer_cache_append``).
 """
 from __future__ import annotations
 
@@ -54,6 +63,20 @@ def init_draft_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
     hk, dh = cfg.num_kv_heads, cfg.head_dim_
     return {"k": jnp.zeros((batch, max_len, hk, dh), dtype),
             "v": jnp.zeros((batch, max_len, hk, dh), dtype),
+            "length": jnp.zeros((batch,), jnp.int32)}
+
+
+def init_paged_draft_cache(cfg: ModelConfig, batch: int, max_len: int,
+                           block: int, num_pages: int) -> Dict:
+    """Paged draft cache: shared single-layer pool + per-slot page tables
+    (page 0 reserved as the null page, exactly like the trunk pool)."""
+    from repro.utils import cdiv
+    dtype = cm.dt(cfg.dtype)
+    hk, dh = cfg.num_kv_heads, cfg.head_dim_
+    return {"k": jnp.zeros((num_pages, block, hk, dh), dtype),
+            "v": jnp.zeros((num_pages, block, hk, dh), dtype),
+            "page_table": jnp.zeros((batch, cdiv(max_len, block)),
+                                    jnp.int32),
             "length": jnp.zeros((batch,), jnp.int32)}
 
 
@@ -115,21 +138,17 @@ def draft_extend(cfg: ModelConfig, dcfg: DraftConfig, dp: Dict,
     positions = cache["length"][:, None] + jnp.cumsum(
         valid.astype(jnp.int32), axis=1) - 1
     positions = jnp.maximum(positions, 0)
-    s = cache["k"].shape[1]
+    ctx_k, ctx_v, s = cm.layer_ctx_view(cache)
     ctx_pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
     ctx_valid = ctx_pos < cache["length"][:, None]
     self_mask = (jnp.tril(jnp.ones((e, e), bool))[None]
                  & valid[:, None, :] & valid[:, :, None])
-    h, k_new, v_new = _layer_fwd(cfg, mcfg, dp, x, positions, cache["k"],
-                                 cache["v"], ctx_valid, self_mask, inv_freq,
+    h, k_new, v_new = _layer_fwd(cfg, mcfg, dp, x, positions, ctx_k,
+                                 ctx_v, ctx_valid, self_mask, inv_freq,
                                  mscale)
-    # write valid entries into the cache at per-batch offsets
-    def wr(buf, new, off, v):
-        new = jnp.where(v[:, None, None], new.astype(buf.dtype), 0)
-        return jax.lax.dynamic_update_slice(buf, new, (off, 0, 0))
-    cache = dict(cache)
-    cache["k"] = jax.vmap(wr)(cache["k"], k_new, cache["length"], valid)
-    cache["v"] = jax.vmap(wr)(cache["v"], v_new, cache["length"], valid)
+    # write valid entries into the cache at per-batch offsets (paged
+    # caches scatter through the slot's page table instead)
+    cache = cm.layer_cache_append(cache, k_new, v_new, valid)
     cache["length"] = cache["length"] + nvalid
     last = jnp.maximum(nvalid - 1, 0)
     h_last = jnp.take_along_axis(h, last[:, None, None], axis=1)[:, 0]
@@ -158,7 +177,7 @@ def tree_draft(cfg: ModelConfig, dcfg: DraftConfig, dp: Dict, target_params,
     t = tree.size
     d = cfg.d_model
     dt = cm.dt(cfg.dtype)
-    s = cache["k"].shape[1]
+    ctx_k, ctx_v, s = cm.layer_ctx_view(cache)
     ctx_pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
     ctx_valid = ctx_pos < cache["length"][:, None]
     anc = jnp.asarray(tree.ancestor_mask())
@@ -219,7 +238,7 @@ def tree_draft(cfg: ModelConfig, dcfg: DraftConfig, dp: Dict, target_params,
         q = bk.project_q(mcfg, lp["attn"], xn, positions, inv_freq, mscale)
         k_new, v_new = bk.project_kv(mcfg, lp["attn"], xn, positions,
                                      inv_freq, mscale)
-        parts = [cm.dense_attn_part(q, cache["k"], cache["v"],
+        parts = [cm.dense_attn_part(q, ctx_k, ctx_v,
                                     mask=ctx_valid[:, None, None, :]),
                  cm.dense_attn_part(q, node_k, node_v, mask=prev_mask[:, None]),
                  cm.dense_attn_part(q, k_new, v_new,

@@ -90,8 +90,7 @@ def merge_state_rows(mask, new: EngineState, old: EngineState) -> EngineState:
     The PRNG key advances with the step (greedy serving never reads it)."""
     kw = dict(
         cache=kvc.merge_cache_rows(mask, new.cache, old.cache),
-        dcache={n: kvc.select_rows(mask, new.dcache[n], old.dcache[n], 0)
-                for n in new.dcache},
+        dcache=kvc.merge_draft_rows(mask, new.dcache, old.dcache),
         key=new.key)
     for f in _PKV_FIELDS:
         nf, of = getattr(new, f), getattr(old, f)
@@ -106,8 +105,7 @@ def write_state_slot(st: EngineState, sub: EngineState, slot) -> EngineState:
     admission after chunked prefill-into-slot, or slot reset)."""
     kw = dict(
         cache=kvc.write_cache_slot(st.cache, sub.cache, slot),
-        dcache={n: kvc.write_row(st.dcache[n], sub.dcache[n], slot, 0)
-                for n in st.dcache},
+        dcache=kvc.write_draft_slot(st.dcache, sub.dcache, slot),
         key=st.key)
     for f in _PKV_FIELDS:
         sf, bf = getattr(sub, f), getattr(st, f)
@@ -125,7 +123,8 @@ class SpecPVEngine:
                  draft_chain: Optional[bool] = None,
                  temperature: float = 0.0,
                  paged: bool = False,
-                 num_pages: Optional[int] = None):
+                 num_pages: Optional[int] = None,
+                 prefix_cache: bool = True):
         """``paged=True`` (attention archs only) backs the full KV cache
         with a shared block pool + per-slot page tables: resident memory
         scales with tokens actually held instead of batch x max_len, and
@@ -133,7 +132,17 @@ class SpecPVEngine:
         outputs are token-identical to the contiguous layout (the
         default, kept for A/B).  ``num_pages`` sizes the pool; the
         default (batch * max_len/block + 1, incl. the reserved null
-        page) matches contiguous capacity so ``generate`` always fits."""
+        page) matches contiguous capacity so ``generate`` always fits.
+
+        Paged engines also page the *draft* cache over a second,
+        same-page-count pool (1 layer vs L, so ~1/L the bytes), and —
+        unless ``prefix_cache=False`` — share block-aligned prompt
+        prefixes copy-on-write across requests: ``prefill_into_slot``
+        attaches cached leading blocks by page-table reference (zero
+        prefill FLOPs for the shared prefix) and registers freshly
+        prefilled blocks back; pages are refcounted, freed only when the
+        last holder releases them, and idle cached prefixes are evicted
+        LRU under pool pressure."""
         self.cfg = cfg
         self.spec = spec
         self.dcfg = dcfg
@@ -151,6 +160,16 @@ class SpecPVEngine:
                           else batch * self._nb_seq + 1)
         self._page_alloc = (kvc.PageAllocator(self.num_pages)
                             if self.paged else None)
+        self._draft_alloc = (kvc.PageAllocator(self.num_pages)
+                             if self.paged else None)
+        self._prefix = (kvc.PrefixCache(spec.block_size)
+                        if self.paged and prefix_cache else None)
+        # slots with fork-derived sharing still alive: only these can
+        # hold a shared page inside a write window (prefix sharing alone
+        # never does), so pre-step CoW scans exactly this set — empty
+        # set, zero cost
+        self._forked_slots: set = set()
+        self._prefill_skipped_tokens = 0
         if partial_verification is None:
             partial_verification = self.is_attn
         self.partial_enabled = partial_verification and self.is_attn
@@ -189,7 +208,10 @@ class SpecPVEngine:
             valid = jnp.ones((b, t), bool)
             dcache, h_last, dlogits = dr.draft_extend(
                 cfg, dcfg, dparams, params, dcache, tokens, shifted, valid)
-            return (cache, dcache, logits, fused[:, -1])
+            # the full fused chunk is returned (not just the last column)
+            # so the host loop can harvest block-boundary features for
+            # prefix-cache registration; prev_feat is fused[:, -1]
+            return (cache, dcache, logits, fused)
 
         self._prefill_chunk = _prefill_chunk
 
@@ -431,6 +453,7 @@ class SpecPVEngine:
                                paged=True, num_pages=self.num_pages)
         if full_alloc:
             al = self._page_alloc
+            self._clear_prefix()        # a reset pool invalidates entries
             al.reset()
             if b * self._nb_seq > al.capacity:
                 raise ValueError(
@@ -443,6 +466,24 @@ class SpecPVEngine:
             cache["page_table"] = jnp.asarray(pt)
         return cache
 
+    def _init_dcache(self, b: int, *, full_alloc: bool = False) -> Dict:
+        """Fresh draft cache; paged engines page it over the second pool
+        (same page count as the trunk — one draft layer, so ~1/L the
+        bytes of the trunk pool)."""
+        if not self.paged:
+            return dr.init_draft_cache(self.cfg, b, self.max_len)
+        dcache = dr.init_paged_draft_cache(self.cfg, b, self.max_len,
+                                           self.spec.block_size,
+                                           self.num_pages)
+        if full_alloc:
+            al = self._draft_alloc
+            al.reset()
+            pt = np.zeros((b, self._nb_seq), np.int32)
+            for i in range(b):
+                pt[i] = al.alloc(i, self._nb_seq)
+            dcache["page_table"] = jnp.asarray(pt)
+        return dcache
+
     def prefill(self, prompt: np.ndarray, chunk: int = 256,
                 extra: Optional[Dict] = None) -> EngineState:
         assert prompt.shape[0] == self.batch
@@ -453,28 +494,47 @@ class SpecPVEngine:
     def _prefill_state(self, prompt: np.ndarray, chunk: int = 256,
                        extra: Optional[Dict] = None, *,
                        cache: Optional[Dict] = None,
-                       grow=None) -> EngineState:
+                       dcache: Optional[Dict] = None,
+                       grow=None, start_len: int = 0,
+                       prev_feat: Optional[jax.Array] = None,
+                       on_chunk=None) -> EngineState:
         """Chunked prefill for an arbitrary batch (the continuous scheduler
         prefills batch-1 sub-states and scatters them into slots).
 
-        cache: pre-built cache to prefill into (paged slot admission
-        passes the shared pool + the slot's table row); grow(cache, upto)
-        is called before each chunk so paged admission can allocate pages
-        chunk by chunk."""
+        cache/dcache: pre-built caches to prefill into (paged slot
+        admission passes the shared pools + the slot's table rows);
+        grow(cache, dcache, upto) is called before each chunk so paged
+        admission can allocate pages chunk by chunk.
+
+        start_len: tokens already resident (prefix-cache hit) — prefill
+        resumes there with `prev_feat` as the boundary fused feature, and
+        chunk boundaries stay aligned to absolute multiples of `chunk` so
+        a resumed prefill runs the identical chunk schedule as a cold one
+        past the first partial chunk.  on_chunk(off, end, fused) sees
+        each chunk's fused features (prefix-block registration)."""
         cfg, spec = self.cfg, self.spec
         b, s0 = prompt.shape
+        assert start_len < s0, "prefix match must leave a non-empty tail"
         if cache is None:
             cache = self._init_cache(b, full_alloc=self.paged)
-        dcache = dr.init_draft_cache(cfg, b, self.max_len)
-        prev_feat = jnp.zeros((b, 3 * cfg.d_model), cm.dt(cfg.dtype))
+        if dcache is None:
+            dcache = self._init_dcache(b, full_alloc=self.paged)
+        if prev_feat is None:
+            prev_feat = jnp.zeros((b, 3 * cfg.d_model), cm.dt(cfg.dtype))
         logits_last = None
-        for off in range(0, s0, chunk):
-            toks = jnp.asarray(prompt[:, off: off + chunk])
+        off = start_len
+        while off < s0:
+            end = min(s0, (off // chunk + 1) * chunk)
+            toks = jnp.asarray(prompt[:, off: end])
             if grow is not None:
-                cache = grow(cache, off + toks.shape[1])
-            cache, dcache, logits_last, prev_feat = self._prefill_chunk(
+                cache, dcache = grow(cache, dcache, end)
+            cache, dcache, logits_last, fused = self._prefill_chunk(
                 self.params, self.dparams, cache, dcache, toks, prev_feat,
                 extra)
+            if on_chunk is not None:
+                on_chunk(off, end, fused)
+            prev_feat = fused[:, -1]
+            off = end
         if self.temperature > 0:
             bonus0 = jax.random.categorical(
                 jax.random.PRNGKey(11),
@@ -513,9 +573,12 @@ class SpecPVEngine:
             cache: Dict = {"page_table": jnp.zeros((1, self._nb_seq),
                                                    jnp.int32),
                            "length": jnp.zeros((1,), jnp.int32)}
+            dcache: Dict = {"page_table": jnp.zeros((1, self._nb_seq),
+                                                    jnp.int32),
+                            "length": jnp.zeros((1,), jnp.int32)}
         else:
             cache = self._init_cache(b)
-        dcache = dr.init_draft_cache(cfg, b, self.max_len)
+            dcache = self._init_dcache(b)
         pkv_k, pkv_v, pkv_pos = self._init_pkv(b)
         # distinct buffers per field (donation-safe, see _prefill_state)
         return EngineState(
@@ -534,49 +597,124 @@ class SpecPVEngine:
         """Batched state with every slot dead (continuous-scheduler boot)."""
         self._pkv_active_rows[:] = False
         if self.paged:
+            self._clear_prefix()
             self._page_alloc.reset()
+            self._draft_alloc.reset()
+            self._forked_slots.clear()
         return self._neutral_state(self.batch)
+
+    def _clear_prefix(self) -> None:
+        if self._prefix is not None:
+            self._prefix.clear(self._page_alloc, self._draft_alloc)
 
     def reset_slot(self, st: EngineState, slot: int) -> EngineState:
         """Evict a request: zero the slot's cache rows and automaton
-        (paged: clear the slot's page-table row and return its pages to
-        the free list — pool contents are left stale, they are never read
-        once unmapped).  Consumes `st` (buffers donated) — callers must
-        rebind."""
+        (paged: clear the slot's page-table rows and release its page
+        references — only pages whose refcount drops to zero return to
+        the free list; pages still shared with another slot or pinned by
+        the prefix cache stay resident.  Pool contents are left stale,
+        they are never read once unmapped).  Consumes `st` (buffers
+        donated) — callers must rebind."""
         if self._neutral_sub is None:
             self._neutral_sub = self._neutral_state(1, row_cache=self.paged)
         if self.paged:
             self._page_alloc.free_slot(slot)
+            self._draft_alloc.free_slot(slot)
+            self._forked_slots.discard(slot)
         self._pkv_active_rows[slot] = False
         return self._write_slot(st, self._neutral_sub, jnp.int32(slot))
 
     # ---- page accounting (host side; no-ops when not paged) ----------
     def pages_needed(self, prompt_len: int, max_new_tokens: int) -> int:
-        """Pages a request needs end to end (see request_token_need)."""
+        """Pages a request needs end to end (see request_token_need),
+        assuming a cold prefix cache."""
         toks = request_token_need(prompt_len, max_new_tokens, self.pmax,
                                   self.emax)
         return min(cdiv(toks, self.spec.block_size), self._nb_seq)
 
+    def prefix_match_blocks(self, prompt: np.ndarray,
+                            touch: bool = False) -> int:
+        """Probe: leading full blocks of `prompt` the prefix cache can
+        currently serve (capped one block short of the prompt so the
+        tail prefill is never empty).  ``touch`` re-stamps the chain MRU
+        — admission gating uses it so a same-tick LRU eviction cannot
+        reclaim the blocks it just counted on."""
+        if self._prefix is None:
+            return 0
+        bs = self.spec.block_size
+        return len(self._prefix.match(np.asarray(prompt),
+                                      (len(prompt) - 1) // bs,
+                                      touch=touch, count=False))
+
+    def pages_needed_shared(self, prompt: np.ndarray, max_new_tokens: int,
+                            touch: bool = False) -> int:
+        """Sharing-aware admission accounting: fresh pages the request
+        would need right now — the cold-count minus the blocks the
+        prefix cache already holds (those attach by reference)."""
+        need = self.pages_needed(len(prompt), max_new_tokens)
+        return max(need - self.prefix_match_blocks(prompt, touch=touch), 0)
+
     def free_pages(self) -> int:
-        return self._page_alloc.free if self.paged else 1 << 30
+        """Fresh pages available for admission (paged engines are gated
+        on the tighter of the trunk and draft pools)."""
+        if not self.paged:
+            return 1 << 30
+        return min(self._page_alloc.free, self._draft_alloc.free)
 
     def page_capacity(self) -> int:
         return self._page_alloc.capacity if self.paged else 1 << 30
 
+    def reclaim_pages(self, n: int) -> int:
+        """LRU-evict idle cached prefixes until `n` pages are freed (or
+        no unreferenced entry remains).  Returns trunk pages freed."""
+        if self._prefix is None or n <= 0:
+            return 0
+        return self._prefix.evict_lru(self._page_alloc, self._draft_alloc, n)
+
     def release_slot_pages(self, slot: int) -> None:
-        """Return an evicted slot's pages to the free list ahead of the
-        deferred row reset, so same-tick admission sees them."""
+        """Release an evicted slot's page references ahead of the
+        deferred row reset, so same-tick admission sees any pages whose
+        refcount dropped to zero."""
         if self.paged:
             self._page_alloc.free_slot(slot)
+            self._draft_alloc.free_slot(slot)
+            self._forked_slots.discard(slot)
+
+    def reset_high_water(self) -> None:
+        """Zero the page high-water marks (benchmark warmup)."""
+        if self.paged:
+            for al in (self._page_alloc, self._draft_alloc):
+                al.high_water = 0
+                al.resident_high_water = 0
+
+    def reset_prefix_stats(self) -> None:
+        """Zero the prefix-cache hit/reuse counters (benchmark warmup);
+        cached entries themselves are untouched."""
+        self._prefill_skipped_tokens = 0
+        if self._prefix is not None:
+            self._prefix.reset_stats()
 
     def page_stats(self) -> Dict[str, int]:
         al = self._page_alloc
         if al is None:
             return {}
         return dict(num_pages=self.num_pages, capacity=al.capacity,
-                    in_use=al.in_use, high_water=al.high_water,
+                    in_use=al.in_use, idle=al.idle, committed=al.committed,
+                    high_water=al.high_water,
+                    resident_high_water=al.resident_high_water,
+                    draft_in_use=self._draft_alloc.in_use,
+                    draft_high_water=self._draft_alloc.high_water,
                     contiguous_pages=self.batch * self._nb_seq,
                     block_size=self.spec.block_size)
+
+    def prefix_stats(self) -> Dict[str, int]:
+        """Prefix-cache counters ({} when sharing is off): hit/seen
+        blocks, tokens whose prefill was skipped, entries resident."""
+        if self._prefix is None:
+            return {}
+        out = self._prefix.stats()
+        out["prefill_tokens_skipped"] = self._prefill_skipped_tokens
+        return out
 
     def prefill_into_slot(self, st: EngineState, slot: int,
                           prompt: np.ndarray, chunk: int = 256,
@@ -587,12 +725,16 @@ class SpecPVEngine:
         sub-state into batch row `slot`.  Returns (state, first token).
         Consumes `st` (buffers donated) — callers must rebind.
 
-        Paged engines prefill straight into the shared pool through a
-        fresh table row for `slot`, allocating pages chunk by chunk plus
+        Paged engines prefill straight into the shared pools through
+        fresh table rows for `slot`, allocating pages chunk by chunk plus
         a decode reserve sized by ``max_new_tokens`` (defaults to the
-        remaining max_len budget).  Raises RuntimeError when the pool
-        cannot cover the request — callers should gate admission on
-        ``free_pages()``/``pages_needed()`` first."""
+        remaining max_len budget).  With prefix caching, matched leading
+        blocks are attached by page-table reference (their prefill is
+        skipped entirely) and freshly completed prompt blocks are
+        registered back into the cache.  Raises RuntimeError when the
+        pools cannot cover the request even after LRU prefix eviction —
+        callers should gate admission on
+        ``free_pages()``/``pages_needed_shared()`` first."""
         prompt = np.asarray(prompt)
         if not self.paged:
             sub = self._prefill_state(prompt[None, :], chunk, extra)
@@ -600,47 +742,231 @@ class SpecPVEngine:
             st = self._write_slot(st, sub, jnp.int32(slot))
             return st, int(np.asarray(sub.pending[0, 0]))
 
-        al = self._page_alloc
+        al, dal = self._page_alloc, self._draft_alloc
         al.free_slot(slot)                      # stale pages, if any
+        dal.free_slot(slot)
+        self._forked_slots.discard(slot)        # fresh request, no fork
         bs = self.spec.block_size
         budget = (max_new_tokens if max_new_tokens is not None
                   else max(self.max_len - len(prompt), 0))
         total_pages = self.pages_needed(len(prompt), budget)
-        if total_pages > al.free:
-            raise RuntimeError(
-                f"slot {slot}: request needs {total_pages} pages, "
-                f"{al.free} free of {al.capacity}")
-        pt_host = np.zeros((self._nb_seq,), np.int32)
 
-        def grow(cache: Dict, upto: int) -> Dict:
+        # ---- prefix-cache consult: attach matched leading blocks ------
+        # the chain hash keys on prompt tokens only, but with modality
+        # conditioning (`extra`) the trunk KV past a cross-attention
+        # layer depends on the encoder states too — sharing would attach
+        # KV computed under another request's conditioning
+        assert extra is None or self._prefix is None, \
+            "prefix sharing cannot key per-request `extra` conditioning; " \
+            "build the engine with prefix_cache=False"
+        # attach BEFORE any reclaim: slot-referenced pages are never LRU
+        # eviction candidates, so reclaiming for the fresh remainder
+        # cannot cannibalise the chain this admission just matched
+        entries = (self._prefix.match(prompt, (len(prompt) - 1) // bs)
+                   if self._prefix is not None else [])
+        n_match = len(entries)
+        pt_host = np.zeros((self._nb_seq,), np.int32)
+        dpt_host = np.zeros((self._nb_seq,), np.int32)
+        prev0 = None
+        if n_match:
+            al.attach(slot, [e.page for e in entries])
+            dal.attach(slot, [e.draft_page for e in entries])
+            pt_host[:n_match] = [e.page for e in entries]
+            dpt_host[:n_match] = [e.draft_page for e in entries]
+            prev0 = jnp.asarray(entries[-1].feat)[None]
+        fresh = total_pages - n_match
+        if fresh > min(al.free, dal.free):
+            self.reclaim_pages(fresh - min(al.free, dal.free))
+        if fresh > min(al.free, dal.free):
+            al.free_slot(slot)              # roll the attach back
+            dal.free_slot(slot)
+            raise RuntimeError(
+                f"slot {slot}: request needs {fresh} fresh pages "
+                f"({n_match} shared), {al.free}/{dal.free} free "
+                f"(trunk/draft) of {al.capacity}")
+        if n_match:
+            self._prefill_skipped_tokens += n_match * bs
+        start_len = n_match * bs
+
+        def grow(cache: Dict, dcache: Dict, upto: int):
             need = min(cdiv(upto, bs), self._nb_seq)
             cur = al.count(slot)
             if need > cur:
                 pt_host[cur:need] = al.alloc(slot, need - cur)
-            return dict(cache, page_table=jnp.asarray(pt_host)[None])
+                dpt_host[cur:need] = dal.alloc(slot, need - cur)
+            return (dict(cache, page_table=jnp.asarray(pt_host)[None]),
+                    dict(dcache, page_table=jnp.asarray(dpt_host)[None]))
+
+        # fused boundary features of freshly prefilled full blocks, for
+        # registration (dict: block index -> np [3d])
+        n_full = len(prompt) // bs
+        feats: Dict[int, np.ndarray] = {}
+
+        def on_chunk(off: int, end: int, fused) -> None:
+            if self._prefix is None:
+                return
+            for j in range(n_match, min(end // bs, n_full)):
+                p = (j + 1) * bs - 1        # block j's boundary token
+                if p >= off:                # earlier boundaries are done
+                    feats[j] = np.asarray(fused[0, p - off])
 
         sub_cache: Dict = {n: st.cache[n] for n in kvc.PAGED_POOL_KEYS}
         for n in ("cross_k", "cross_v"):
             if n in st.cache:
                 sub_cache[n] = st.cache[n][:, slot: slot + 1]
         sub_cache["page_table"] = jnp.asarray(pt_host)[None]
-        sub_cache["length"] = jnp.zeros((1,), jnp.int32)
+        sub_cache["length"] = jnp.full((1,), start_len, jnp.int32)
+        sub_dcache: Dict = {n: st.dcache[n] for n in kvc.DRAFT_POOL_KEYS}
+        sub_dcache["page_table"] = jnp.asarray(dpt_host)[None]
+        sub_dcache["length"] = jnp.full((1,), start_len, jnp.int32)
         sub = self._prefill_state(prompt[None, :], chunk, extra,
-                                  cache=sub_cache, grow=grow)
+                                  cache=sub_cache, dcache=sub_dcache,
+                                  grow=grow, start_len=start_len,
+                                  prev_feat=prev0, on_chunk=on_chunk)
         cur = al.count(slot)
         if total_pages > cur:                   # decode reserve
             pt_host[cur:total_pages] = al.alloc(slot, total_pages - cur)
+            dpt_host[cur:total_pages] = dal.alloc(slot, total_pages - cur)
+
+        # ---- register completed prompt blocks back into the cache -----
+        if self._prefix is not None and n_full > n_match:
+            keys = self._prefix.chain_keys(prompt, n_full)
+            # one stamp for the WHOLE chain, matched ancestors included:
+            # a parent may never be older than its children, or LRU
+            # eviction could drop a chain head and orphan the tail
+            tick = self._prefix.new_tick()
+            for e in entries:
+                e.tick = tick
+            for j in range(n_match, n_full):
+                self._prefix.insert(keys[j], j, int(pt_host[j]),
+                                    int(dpt_host[j]), feats[j], al, dal,
+                                    tick=tick)
+
         self._pkv_active_rows[slot] = False
-        # the pool was written in place (batch-1 view); rebind it into the
-        # batched state, then row-write the per-slot keys
+        # the pools were written in place (batch-1 view); rebind them into
+        # the batched state, then row-write the per-slot keys
         pool = {n: sub.cache[n] for n in kvc.PAGED_POOL_KEYS}
-        st = dc_replace(st, cache=dict(st.cache, **pool))
+        dpool = {n: sub.dcache[n] for n in kvc.DRAFT_POOL_KEYS}
+        st = dc_replace(st, cache=dict(st.cache, **pool),
+                        dcache=dict(st.dcache, **dpool))
         row_cache = {n: v for n, v in sub.cache.items()
                      if n not in kvc.PAGED_POOL_KEYS}
         row_cache["page_table"] = jnp.asarray(pt_host)[None]
-        sub_row = dc_replace(sub, cache=row_cache)
+        row_dcache = {"page_table": jnp.asarray(dpt_host)[None],
+                      "length": sub.dcache["length"]}
+        sub_row = dc_replace(sub, cache=row_cache, dcache=row_dcache)
         st = self._write_slot(st, sub_row, jnp.int32(slot))
         return st, int(np.asarray(sub.pending[0, 0]))
+
+    # ------------------------------------------------------------------
+    # copy-on-write: fork + pre-step exclusivity
+    # ------------------------------------------------------------------
+    def _read_slot(self, st: EngineState, slot: int) -> EngineState:
+        """Extract batch row `slot` as a batch-1 sub-state (shared pool
+        keys are omitted for paged caches — ``_write_slot`` passes them
+        through)."""
+        def row(a, axis):
+            return jax.lax.dynamic_slice_in_dim(a, slot, 1, axis)
+        paged = "page_table" in st.cache
+        cache = {n: row(a, kvc.CACHE_BATCH_AXIS.get(n, 0))
+                 for n, a in st.cache.items()
+                 if not (paged and n in kvc.PAGED_POOL_KEYS)}
+        dpaged = "page_table" in st.dcache
+        dcache = {n: row(a, 0) for n, a in st.dcache.items()
+                  if not (dpaged and n in kvc.DRAFT_POOL_KEYS)}
+        kw = dict(cache=cache, dcache=dcache, key=st.key)
+        for f in _PKV_FIELDS:
+            a = getattr(st, f)
+            kw[f] = row(a, 1) if a.ndim > 1 else a
+        for f in _ROW_FIELDS:
+            kw[f] = row(getattr(st, f), 0)
+        return EngineState(**kw)
+
+    def fork_slot(self, st: EngineState, src: int, dst: int) -> EngineState:
+        """Copy-on-write fork: row `dst` becomes a live replica of row
+        `src` sharing *all* of its physical pages (refcounts incremented,
+        zero pool bytes copied).  Either branch may then diverge — the
+        pre-step CoW (``prepare_cow``) hands a writer a private copy of
+        any still-shared block before its first commit, so neither branch
+        can ever perturb the other.  Consumes `st` — callers must
+        rebind."""
+        assert self.paged, "fork_slot requires the refcounted paged cache"
+        assert src != dst
+        self._page_alloc.free_slot(dst)         # stale pages, if any
+        self._draft_alloc.free_slot(dst)
+        self._page_alloc.fork(src, dst)
+        self._draft_alloc.fork(src, dst)
+        self._pkv_active_rows[dst] = self._pkv_active_rows[src]
+        self._forked_slots.update((src, dst))
+        sub = self._read_slot(st, src)
+        return self._write_slot(st, sub, jnp.int32(dst))
+
+    def prepare_cow(self, st: EngineState, rows: np.ndarray) -> EngineState:
+        """Pre-step copy-on-write: give every about-to-step row exclusive
+        ownership of the physical blocks its writes may touch (trunk: the
+        commit window ``[length, length + commit_write_extent)``; draft:
+        the extend window past the draft length).  Shared blocks in the
+        window are copied to private pages and the row's table is
+        repointed.  Free no-op unless a live slot has fork-derived
+        sharing — prefix-shared prompt blocks sit strictly below every
+        write window, so admission sharing alone never copies; only
+        forked slots are scanned."""
+        if not self.paged or not self._forked_slots.intersection(
+                np.nonzero(rows)[0]):
+            return st
+        bs = self.spec.block_size
+        plans = (
+            (st.cache, self._page_alloc, np.asarray(st.cache["length"]),
+             vf.commit_write_extent(self.pmax, self.tree.depth), 1),
+            (st.dcache, self._draft_alloc, np.asarray(st.dcache["length"]),
+             self.emax, 0),
+        )
+        # two-phase: plan every needed copy first (no allocator mutation),
+        # budget-check, and only then execute — so pool exhaustion raises
+        # with host allocator and device page tables still consistent
+        planned = []
+        for cdict, al, lengths, extent, pool_axis in plans:
+            shared_blocks = []                # (slot, blk)
+            for i in np.nonzero(rows)[0]:
+                i = int(i)
+                if i not in self._forked_slots:
+                    continue
+                if al.count(i) == 0 or not al.slot_holds_shared(i):
+                    continue
+                lo = int(lengths[i]) // bs
+                hi = min(cdiv(int(lengths[i]) + extent, bs), al.count(i))
+                for blk in range(lo, hi):
+                    if al.refcount(al.page_at(i, blk)) > 1:
+                        shared_blocks.append((i, blk))
+            if len(shared_blocks) > al.free:
+                self.reclaim_pages(len(shared_blocks) - al.free)
+            if len(shared_blocks) > al.free:
+                raise RuntimeError(
+                    f"page pool exhausted during copy-on-write: need "
+                    f"{len(shared_blocks)} private pages, {al.free} free "
+                    f"of {al.capacity}")
+            planned.append(shared_blocks)
+
+        out = []
+        for (cdict, al, lengths, extent, pool_axis), shared_blocks in zip(
+                plans, planned):
+            copies = [(i, blk) + al.cow_write(i, blk)
+                      for i, blk in shared_blocks]  # (slot, blk, old, new)
+            if copies:
+                cdict = dict(cdict)
+                sl, bl, olds, news = (jnp.asarray([c[j] for c in copies],
+                                                  jnp.int32)
+                                      for j in range(4))
+                pool_keys = (kvc.PAGED_POOL_KEYS if pool_axis == 1
+                             else kvc.DRAFT_POOL_KEYS)
+                for n in pool_keys:
+                    a = cdict[n]
+                    cdict[n] = (a.at[:, news].set(a[:, olds])
+                                if pool_axis == 1
+                                else a.at[news].set(a[olds]))
+                cdict["page_table"] = cdict["page_table"].at[sl, bl].set(news)
+            out.append(cdict)
+        return dc_replace(st, cache=out[0], dcache=out[1])
 
     # ------------------------------------------------------------------
     def mode_for(self, pending_len: int, seq_len: int,
@@ -688,6 +1014,7 @@ class SpecPVEngine:
         fn = self._step_fn(mode)
         if fn is None:
             raise ValueError(mode)
+        st = self.prepare_cow(st, np.ones((self.batch,), bool))
         ones = jnp.ones((self.batch,), bool)
         st, (toks, counts, acc) = fn(self.params, self.dparams, st, ones)
         if mode == "refresh":
@@ -709,6 +1036,7 @@ class SpecPVEngine:
         fn = self._step_fn(mode, masked=True)
         if fn is None:
             raise ValueError(mode)
+        st = self.prepare_cow(st, rows)
         mask = jnp.asarray(rows)
         st, (toks, counts, acc) = fn(self.params, self.dparams, st, mask)
         if mode == "refresh":

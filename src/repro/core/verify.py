@@ -105,6 +105,21 @@ def commit_slots(tree: TreeSpec, pend_valid, path_nodes, p: int):
 # commits
 # ---------------------------------------------------------------------------
 
+def commit_write_extent(pmax: int, tree_depth: int) -> int:
+    """Upper bound on the full-cache tokens one verify commit can touch
+    past the current length: the compacted commit window is
+    ``pending (<= pmax) + accepted path (<= depth)`` wide, and both the
+    token scatter and the targeted summary refresh write all of it
+    (entries beyond the accepted count are overwritten later).
+
+    This is the copy-on-write horizon: before a step, every physical
+    block intersecting ``[length, length + extent)`` of a stepping slot
+    must be exclusively owned (refcount 1), otherwise a partial-refresh
+    commit into a shared block would perturb the other holders — the
+    engine CoWs exactly this window (``SpecPVEngine.prepare_cow``)."""
+    return pmax + tree_depth
+
+
 def gather_new_kv(new_kv, slots, slot_valid):
     """new_kv: (k, v) [L, B, S, Hk, Dh]; slots: [B, W] -> [L, B, W, Hk, Dh].
     Invalid slots are zeroed (they land beyond the committed length)."""
@@ -155,7 +170,14 @@ def _append_paged_cache(cache: Dict, ck, cv, count):
     """Paged commit: per-layer token scatter through the page table plus
     a targeted physical-page summary refresh.  Entries beyond `count`
     are written (and later overwritten) exactly as in the contiguous
-    path; rows whose table maps them nowhere land in the null page."""
+    path; rows whose table maps them nowhere land in the null page.
+
+    Precondition (refcounted pages): every block this commit touches —
+    ``commit_write_extent`` tokens from ``length`` — is exclusively
+    owned by its row.  The engine's pre-step CoW establishes this, so
+    the scatter can never write through a page shared with another slot
+    or pinned by the prefix cache.  Quest retrieval and the summary
+    *reads* need no such guard: shared pages are read-only here."""
     pt = cache["page_table"]
     length = cache["length"]
     w = ck.shape[2]

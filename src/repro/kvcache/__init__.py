@@ -1,6 +1,6 @@
 from repro.kvcache.cache import (KVCache, BlockSummaries, PartialKV,
-                                 PageAllocator)
+                                 PageAllocator, PrefixCache)
 from repro.kvcache.offload import TrafficMeter
 
 __all__ = ["KVCache", "BlockSummaries", "PartialKV", "PageAllocator",
-           "TrafficMeter"]
+           "PrefixCache", "TrafficMeter"]

@@ -20,12 +20,19 @@ Paged variant (``page_table`` key present in the cache dict):
   Dh]``;
 * page 0 is the reserved null page — unallocated table entries point at
   it, stray writes are routed into it, and it is never read unmasked;
-* page ownership (which slot holds which page) lives host-side in
-  ``PageAllocator``; the device only ever sees the tables.
+* page ownership lives host-side in ``PageAllocator`` and is
+  *refcounted*: several slots (and the host-side ``PrefixCache``) may
+  reference one physical page, writes into shared pages go through
+  copy-on-write, and a page is reclaimed only when its last reference
+  drops; the device only ever sees the tables;
+* the draft cache can be paged the same way over a second, smaller pool
+  (single draft layer): ``k/v: [NumPagesD, block, Hk, Dh]`` + per-slot
+  tables, so draft residency also scales with live tokens.
 """
 from __future__ import annotations
 
-from typing import List, Tuple
+import hashlib
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -170,24 +177,42 @@ PAGED_POOL_KEYS = ("k", "v", "kmax", "kmin")   # no batch axis when paged
 
 
 class PageAllocator:
-    """Host-side free-list allocator over the shared block pool.
+    """Host-side refcounted allocator over the shared block pool.
 
     Page 0 is the reserved null page: unallocated page-table entries point
     at it and it is never handed out, so ``capacity == num_pages - 1``.
     The allocator is pure host state (the device only sees page tables);
     it never touches pool contents, so an over-draw raises instead of
     corrupting pages.
+
+    Ownership is *refcounted*: a physical page may back the same logical
+    block of several slots (``fork``/``attach``) and carry an extra
+    reference from the host-side ``PrefixCache`` (``add_ref``).  A page
+    returns to the free list only when its refcount drops to zero, and a
+    write into a page with refcount > 1 must first go through
+    ``cow_write`` (copy-on-write: the writer gets a private page and
+    releases its share of the old one).
+
+    Invariant: ``_slot_pages[slot][j]`` is the physical page backing
+    logical block ``j`` of that slot — every mutation (alloc growth,
+    attach of a matched prefix, in-place ``cow_write`` replacement)
+    preserves logical-block order, so callers may mirror page tables
+    from it.
     """
 
     def __init__(self, num_pages: int):
         assert num_pages >= 2, "need at least one allocatable page"
         self.num_pages = num_pages
-        self.high_water = 0
+        self.high_water = 0             # peak committed (live working set)
+        self.resident_high_water = 0    # peak physical (incl. idle cached)
         self.reset()
 
     def reset(self) -> None:
         # LIFO free list: freshly freed pages are reused first (warm HBM)
         self._free: List[int] = list(range(self.num_pages - 1, 0, -1))
+        self._free_set = set(self._free)        # double-free detection
+        self._ref = np.zeros((self.num_pages,), np.int32)
+        self._cache_ref = np.zeros((self.num_pages,), np.int32)
         self._slot_pages: dict = {}
 
     @property
@@ -200,7 +225,20 @@ class PageAllocator:
 
     @property
     def in_use(self) -> int:
+        """Physical pages off the free list (incl. idle cached ones)."""
         return self.capacity - len(self._free)
+
+    @property
+    def idle(self) -> int:
+        """Pages held *only* by cache references (no live slot) — fully
+        reclaimable at zero cost via LRU prefix eviction."""
+        return int(np.sum((self._ref > 0) & (self._ref == self._cache_ref)))
+
+    @property
+    def committed(self) -> int:
+        """Pages some live slot references — the working set a smaller
+        pool could not do without.  ``high_water`` tracks its peak."""
+        return self.in_use - self.idle
 
     def count(self, slot: int) -> int:
         """Pages currently held by `slot`."""
@@ -209,23 +247,275 @@ class PageAllocator:
     def pages_of(self, slot: int) -> List[int]:
         return list(self._slot_pages.get(slot, ()))
 
-    def alloc(self, slot: int, n: int) -> np.ndarray:
-        """Hand `n` pages to `slot`.  Raises on over-draw (state
-        unchanged), so exhaustion can never hand out a page twice."""
+    def page_at(self, slot: int, block: int) -> int:
+        """Physical page backing logical block `block` of `slot`."""
+        return self._slot_pages[slot][block]
+
+    def refcount(self, page: int) -> int:
+        return int(self._ref[page])
+
+    def slot_holds_shared(self, slot: int) -> bool:
+        """Does `slot` hold any page it does not own exclusively?"""
+        return any(self._ref[p] > 1 for p in self._slot_pages.get(slot, ()))
+
+    # -- high_water tracks peak *committed* pages (live-slot working
+    # -- set): it moves only in _track(), called where a page can become
+    # -- slot-referenced — never in fork (which shares existing refs and
+    # -- allocates nothing), so forking can never skew it.
+    def _track(self) -> None:
+        self.high_water = max(self.high_water, self.committed)
+        self.resident_high_water = max(self.resident_high_water, self.in_use)
+
+    # -- page-grab primitive: the ONLY place pages leave the free list
+    def _take(self, n: int) -> List[int]:
         if n > len(self._free):
             raise RuntimeError(
                 f"page pool exhausted: want {n}, have {len(self._free)} "
                 f"free of {self.capacity}")
         pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            assert self._ref[p] == 0, f"free page {p} had refcount"
+            self._free_set.discard(p)
+            self._ref[p] = 1
+        self._track()
+        return pages
+
+    def alloc(self, slot: int, n: int) -> np.ndarray:
+        """Hand `n` fresh (refcount-1) pages to `slot`.  Raises on
+        over-draw (state unchanged), so exhaustion can never hand out a
+        page twice."""
+        pages = self._take(n)
         self._slot_pages.setdefault(slot, []).extend(pages)
-        self.high_water = max(self.high_water, self.in_use)
         return np.asarray(pages, np.int32)
 
-    def free_slot(self, slot: int) -> List[int]:
-        """Return all of `slot`'s pages to the free list (idempotent)."""
-        pages = self._slot_pages.pop(slot, [])
-        self._free.extend(pages)
+    def add_ref(self, pages, *, cache: bool = False) -> None:
+        """Take an extra reference on already-allocated pages.  ``cache``
+        marks it as a prefix-cache (idle-capable) reference: pages held
+        only by such references count as reclaimable, not committed."""
+        for p in pages:
+            assert self._ref[p] > 0, f"add_ref on free page {p}"
+            self._ref[p] += 1
+            if cache:
+                self._cache_ref[p] += 1
+
+    def dec_ref(self, pages, *, cache: bool = False) -> List[int]:
+        """Release one reference per page; pages whose refcount drops to
+        zero return to the free list.  Returns the pages actually freed."""
+        freed: List[int] = []
+        for p in pages:
+            assert p != 0, "refcount op on the reserved null page"
+            assert p not in self._free_set, \
+                f"double free: page {p} is already on the free list"
+            assert self._ref[p] > 0, f"refcount underflow on page {p}"
+            self._ref[p] -= 1
+            if cache:
+                assert self._cache_ref[p] > 0
+                self._cache_ref[p] -= 1
+            if self._ref[p] == 0:
+                self._free.append(p)
+                self._free_set.add(p)
+                freed.append(p)
+        return freed
+
+    def attach(self, slot: int, pages) -> None:
+        """Share existing pages into `slot` (appended in logical-block
+        order): prefix-cache hits attach the matched leading blocks by
+        reference instead of allocating + re-prefilling them.  An idle
+        cached page becomes committed again here."""
+        self.add_ref(pages)
+        self._slot_pages.setdefault(slot, []).extend(int(p) for p in pages)
+        self._track()
+
+    def fork(self, src: int, dst: int) -> List[int]:
+        """`dst` becomes a full reference-holder of `src`'s pages
+        (copy-on-write fork).  `dst` must not hold pages."""
+        assert not self._slot_pages.get(dst), \
+            f"fork target slot {dst} still holds pages"
+        pages = self.pages_of(src)
+        self.attach(dst, pages)
         return pages
+
+    def cow_write(self, slot: int, block: int) -> Tuple[int, int]:
+        """Make logical block `block` of `slot` exclusively writable.
+
+        Returns ``(old_page, new_page)``; ``old == new`` when the slot
+        already owned the page alone.  Otherwise a private page is taken
+        (the caller must copy pool contents old -> new and update the
+        device page table) and the shared page loses one reference."""
+        old = self._slot_pages[slot][block]
+        if self._ref[old] == 1:
+            return old, old
+        [new] = self._take(1)
+        self._slot_pages[slot][block] = new
+        self._ref[old] -= 1             # ref > 1, so never frees here
+        return old, new
+
+    def free_slot(self, slot: int) -> List[int]:
+        """Release `slot`'s references (idempotent).  Returns only the
+        pages actually freed — pages still shared with another slot or
+        with the prefix cache stay resident."""
+        pages = self._slot_pages.pop(slot, [])
+        return self.dec_ref(pages)
+
+
+# ---------------------------------------------------------------------------
+# prefix cache (host side)
+# ---------------------------------------------------------------------------
+
+class _PrefixEntry:
+    __slots__ = ("key", "depth", "page", "draft_page", "feat", "tick")
+
+    def __init__(self, key, depth, page, draft_page, feat, tick):
+        self.key = key              # chain hash of blocks [0..depth]
+        self.depth = depth          # logical block index
+        self.page = page            # trunk pool page (all layers)
+        self.draft_page = draft_page
+        self.feat = feat            # fused feature of the block's last
+                                    # token (tail-prefill continuation)
+        self.tick = tick            # LRU stamp
+
+
+class PrefixCache:
+    """Host-side prompt-prefix index over the paged pools.
+
+    Keyed by a *chained* hash of block-aligned prompt-token chunks
+    (blake2b over ``parent_digest || block_tokens``), so a hit at block
+    ``i`` certifies the entire prefix ``[0, (i+1)*block)`` matches.  Each
+    entry pins one trunk page + one draft page (one ``add_ref`` each) and
+    carries the fused boundary feature needed to resume chunked prefill
+    right after the matched region.
+
+    Entries are evicted LRU-oldest-first — but only when nothing besides
+    the cache references their pages, so eviction under pool pressure
+    reclaims exactly the idle prefixes.  A matched chain is re-stamped as
+    one unit, which keeps every child entry no newer than its parent;
+    ties break deepest-first so a chain never loses an interior block
+    before its tail.
+    """
+
+    def __init__(self, block_size: int):
+        self.block = block_size
+        self._entries: Dict[bytes, _PrefixEntry] = {}
+        self._tick = 0
+        self.lookups = 0
+        self.blocks_matched = 0
+        self.blocks_seen = 0
+        self.inserted = 0
+        self.evicted = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @staticmethod
+    def _digest(parent: bytes, tokens: np.ndarray) -> bytes:
+        h = hashlib.blake2b(parent, digest_size=16)
+        h.update(np.ascontiguousarray(tokens, np.int64).tobytes())
+        return h.digest()
+
+    def chain_keys(self, prompt: np.ndarray, n_blocks: int) -> List[bytes]:
+        """Chain hashes of the first `n_blocks` full blocks of `prompt`."""
+        bs = self.block
+        keys, parent = [], b"specpv-prefix"
+        for j in range(n_blocks):
+            parent = self._digest(parent, prompt[j * bs: (j + 1) * bs])
+            keys.append(parent)
+        return keys
+
+    def match(self, prompt: np.ndarray, max_blocks: int,
+              *, touch: bool = True, count: bool = True
+              ) -> List[_PrefixEntry]:
+        """Longest cached chain over the leading full blocks of `prompt`
+        (at most `max_blocks`).  ``touch`` re-stamps the matched chain
+        MRU; ``count=False`` makes this a side-effect-free probe for
+        admission accounting."""
+        bs = self.block
+        n = min(max_blocks, len(prompt) // bs)
+        out: List[_PrefixEntry] = []
+        parent = b"specpv-prefix"
+        for j in range(n):
+            parent = self._digest(parent, prompt[j * bs: (j + 1) * bs])
+            e = self._entries.get(parent)
+            if e is None:
+                break
+            out.append(e)
+        if touch and out:
+            self._tick += 1
+            for e in out:
+                e.tick = self._tick
+        if count:
+            self.lookups += 1
+            self.blocks_seen += n
+            self.blocks_matched += len(out)
+        return out
+
+    def new_tick(self) -> int:
+        """Fresh LRU stamp.  One registration (or match) stamps its whole
+        chain with a single tick, so the deepest-first tie-break keeps
+        the invariant 'no child newer than its parent' — eviction can
+        then never orphan a chain head before its tail (which would pin
+        unreachable pages)."""
+        self._tick += 1
+        return self._tick
+
+    def insert(self, key: bytes, depth: int, page: int, draft_page: int,
+               feat, trunk_alloc: PageAllocator,
+               draft_alloc: PageAllocator,
+               tick: Optional[int] = None) -> bool:
+        """Register one completed prefill block.  Takes one reference on
+        each pool page; returns False (and takes nothing) when the chain
+        hash is already cached.  Pass one ``new_tick()`` for all blocks
+        of a chain registered together."""
+        if key in self._entries:
+            return False
+        trunk_alloc.add_ref([page], cache=True)
+        draft_alloc.add_ref([draft_page], cache=True)
+        self._entries[key] = _PrefixEntry(
+            key, depth, int(page), int(draft_page), feat,
+            self.new_tick() if tick is None else tick)
+        self.inserted += 1
+        return True
+
+    def evict_lru(self, trunk_alloc: PageAllocator,
+                  draft_alloc: PageAllocator, n_pages: int) -> int:
+        """Drop least-recently-used *unreferenced* entries (pages held
+        only by the cache) until `n_pages` trunk pages have been freed or
+        no candidate remains.  Returns trunk pages freed."""
+        freed = 0
+        for e in sorted(self._entries.values(),
+                        key=lambda e: (e.tick, -e.depth)):
+            if freed >= n_pages:
+                break
+            if (trunk_alloc.refcount(e.page) == 1
+                    and draft_alloc.refcount(e.draft_page) == 1):
+                del self._entries[e.key]
+                freed += len(trunk_alloc.dec_ref([e.page], cache=True))
+                draft_alloc.dec_ref([e.draft_page], cache=True)
+                self.evicted += 1
+        return freed
+
+    def clear(self, trunk_alloc: PageAllocator,
+              draft_alloc: PageAllocator) -> None:
+        """Release every entry's references (engine reset)."""
+        for e in self._entries.values():
+            trunk_alloc.dec_ref([e.page], cache=True)
+            draft_alloc.dec_ref([e.draft_page], cache=True)
+        self._entries.clear()
+
+    def stats(self) -> Dict[str, int]:
+        return dict(entries=len(self._entries), lookups=self.lookups,
+                    blocks_matched=self.blocks_matched,
+                    blocks_seen=self.blocks_seen,
+                    tokens_reused=self.blocks_matched * self.block,
+                    inserted=self.inserted, evicted=self.evicted)
+
+    def reset_stats(self) -> None:
+        """Zero the hit/reuse counters (benchmark warmup); entries and
+        LRU state are untouched."""
+        self.lookups = 0
+        self.blocks_matched = 0
+        self.blocks_seen = 0
+        self.inserted = 0
+        self.evicted = 0
 
 
 def init_paged_pool(num_layers: int, num_pages: int, block: int,
@@ -355,22 +645,34 @@ def write_cache_slot(dst: dict, src: dict, slot) -> dict:
             for name in dst}
 
 
+def _page_on_mask(mask: jax.Array, page_table: jax.Array,
+                  num_pages: int) -> jax.Array:
+    """[NumPages] bool — pages referenced by an active row's table (null
+    page excluded).  With copy-on-write sharing a page may appear in
+    several tables; it steps iff *any* active row maps it, which is safe
+    because steps only ever write pages the stepping row owns
+    exclusively (the engine CoWs shared pages out of the write window
+    first)."""
+    b, nb = page_table.shape
+    row_on = jnp.repeat(mask, nb)
+    tgt = jnp.where(row_on, page_table.reshape(-1), 0)
+    return (jnp.zeros((num_pages,), bool).at[tgt].set(True)
+            .at[0].set(False))
+
+
 def merge_cache_rows(mask: jax.Array, new: dict, old: dict) -> dict:
     """Per-row merge of two full-cache dicts (masked engine steps).
 
     Paged: pool keys have no batch axis, so rows are merged at *page*
     granularity — a page takes the stepped (`new`) value iff it belongs
-    to an active row's table.  Pages of inactive rows, free pages and
-    the null page revert to `old`, which keeps untouched slots
-    bit-identical exactly as the row merge does for contiguous caches."""
+    to an active row's table.  Pages of inactive rows, free pages,
+    pages pinned only by the prefix cache, and the null page revert to
+    `old`, which keeps untouched slots bit-identical exactly as the row
+    merge does for contiguous caches."""
     if "page_table" in new:
         pt = old["page_table"]                       # tables don't step
-        b, nb = pt.shape
         num_pages = new["k"].shape[1]
-        row_on = jnp.repeat(mask, nb)
-        tgt = jnp.where(row_on, pt.reshape(-1), 0)
-        page_on = (jnp.zeros((num_pages,), bool).at[tgt].set(True)
-                   .at[0].set(False))
+        page_on = _page_on_mask(mask, pt, num_pages)
         out = {}
         for name in new:
             if name in PAGED_POOL_KEYS:
@@ -384,3 +686,45 @@ def merge_cache_rows(mask: jax.Array, new: dict, old: dict) -> dict:
     return {name: select_rows(mask, new[name], old[name],
                               CACHE_BATCH_AXIS.get(name, 0))
             for name in new}
+
+
+# ---------------------------------------------------------------------------
+# draft-cache surgery — same contracts as the full-cache helpers above,
+# but the draft dict carries its batch on axis 0 everywhere and its
+# (optional) pool keys ``k``/``v`` are [NumPages, block, Hk, Dh] with no
+# leading layer axis (the draft module is a single decoder layer).
+# ---------------------------------------------------------------------------
+
+DRAFT_POOL_KEYS = ("k", "v")
+
+
+def write_draft_slot(dst: dict, src: dict, slot) -> dict:
+    """Copy the single batch row of a batch-1 draft-cache dict into row
+    `slot` of `dst`.  Paged: pool keys pass through from `dst` (a paged
+    slot prefill already wrote the slot's draft pages in place)."""
+    if "page_table" in dst:
+        out = dict(dst)
+        for name in src:
+            if name in DRAFT_POOL_KEYS:
+                continue
+            out[name] = write_row(dst[name], src[name], slot, 0)
+        return out
+    return {name: write_row(dst[name], src[name], slot, 0) for name in dst}
+
+
+def merge_draft_rows(mask: jax.Array, new: dict, old: dict) -> dict:
+    """Per-row merge of two draft-cache dicts (masked engine steps);
+    paged draft pools merge at page granularity like the trunk pool."""
+    if "page_table" in new:
+        num_pages = new["k"].shape[0]
+        page_on = _page_on_mask(mask, old["page_table"], num_pages)
+        out = {}
+        for name in new:
+            if name in DRAFT_POOL_KEYS:
+                m = page_on.reshape((num_pages,)
+                                    + (1,) * (new[name].ndim - 1))
+                out[name] = jnp.where(m, new[name], old[name])
+            else:
+                out[name] = select_rows(mask, new[name], old[name], 0)
+        return out
+    return {name: select_rows(mask, new[name], old[name], 0) for name in new}

@@ -470,3 +470,49 @@ def combine_attn_parts(parts, out_dtype):
         acc = acc + acci * corr[..., None]
     out = acc / jnp.maximum(l, 1e-30)[..., None]
     return out.transpose(0, 2, 1, 3).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# single-layer KV-cache views (draft cache) — the paged counterpart of the
+# trunk read/write path in models/dense.py, over the second, smaller pool
+# (k/v: [NumPagesD, block, Hk, Dh] + per-slot tables).
+# ---------------------------------------------------------------------------
+
+def layer_ctx_view(cache: dict):
+    """Logical contiguous (k, v, S) view of a single-layer KV-cache dict.
+
+    Contiguous caches return their arrays as-is; paged caches gather the
+    slot's pages through the table (entries mapping to the null page read
+    stale values — callers mask by ``cache["length"]``, exactly as they
+    mask unwritten contiguous slots)."""
+    if "page_table" in cache:
+        from repro.kvcache.cache import gather_page_view
+        pt = cache["page_table"]
+        k = gather_page_view(cache["k"], pt)
+        v = gather_page_view(cache["v"], pt)
+        return k, v, k.shape[1]
+    return cache["k"], cache["v"], cache["k"].shape[1]
+
+
+def layer_cache_append(cache: dict, k_new, v_new, valid) -> dict:
+    """Write `k_new`/`v_new` [B, T, Hk, Dh] at per-row offsets
+    ``cache["length"]`` into a single-layer KV-cache dict; `valid`
+    [B, T] zeroes masked entries in place (they land beyond the advanced
+    length and are overwritten later, mirroring the contiguous path).
+    Length bookkeeping stays with the caller."""
+    zk = jnp.where(valid[:, :, None, None], k_new, 0)
+    zv = jnp.where(valid[:, :, None, None], v_new, 0)
+    out = dict(cache)
+    if "page_table" in cache:
+        from repro.kvcache.cache import paged_write_tokens
+        pt = cache["page_table"]
+        out["k"] = paged_write_tokens(cache["k"], pt, cache["length"], zk)
+        out["v"] = paged_write_tokens(cache["v"], pt, cache["length"], zv)
+        return out
+
+    def wr(buf, new, off):
+        return jax.lax.dynamic_update_slice(buf, new.astype(buf.dtype),
+                                            (off, 0, 0))
+    out["k"] = jax.vmap(wr)(cache["k"], zk, cache["length"])
+    out["v"] = jax.vmap(wr)(cache["v"], zv, cache["length"])
+    return out

@@ -290,9 +290,18 @@ def select_and_gather_partial_paged(spec: SpecPVConfig, scores, pool_k,
 # per-layer forward
 # ---------------------------------------------------------------------------
 
+def _paged_kernel_ok() -> bool:
+    """Backend gate for the Pallas paged decode_full kernel: the
+    scalar-prefetch pipeline only pays off on TPU — off-TPU the trunk
+    keeps the gathered logical view (tests monkeypatch this to force the
+    kernel route through interpret mode)."""
+    return jax.default_backend() == "tpu"
+
+
 def _self_attention(cfg: ModelConfig, mode: str,
                     lp: Dict, h, positions, self_mask, cache_kv, pkv,
-                    length, inv_freq, mscale, page_table=None):
+                    length, inv_freq, mscale, page_table=None,
+                    paged_kernel: bool = False):
     """One self-attention sublayer under the given mode.
 
     cache_kv: (k_layer, v_layer) for prefill/decode_full or None; with
@@ -300,6 +309,9 @@ def _self_attention(cfg: ModelConfig, mode: str,
               [NP, block, Hk, Dh] read (and, for prefill, written)
               through the table
     pkv:      (pk, pv, ppos) per-kv-head slots for decode_partial or None
+    paged_kernel: decode_full + page_table only — stream the resident
+              pages through ``kernels.ops.paged_verify_attention``
+              instead of materialising the gathered logical view
     Returns (attn_out, updates_dict).
     """
     x = cm.rmsnorm(h, lp["norm1"], cfg.norm_eps)
@@ -344,6 +356,18 @@ def _self_attention(cfg: ModelConfig, mode: str,
                                  window=cfg.window_size,
                                  kv_valid=kv_valid, chunk=512)
     elif mode in ("decode_full",):
+        if page_table is not None and paged_kernel:
+            # stream resident pages HBM->VMEM via the scalar-prefetch
+            # kernel; the contiguous [B, S, ...] view never materialises
+            from repro.kernels import ops as kops
+            part_ctx = kops.paged_verify_attention(
+                q, cache_kv[0], cache_kv[1], page_table, length)
+            part_self = cm.dense_attn_part(q, k_new, v_new,
+                                           mask=self_mask[:, None])
+            out = cm.combine_attn_parts([part_ctx, part_self], h.dtype)
+            upd["new_k"] = k_new
+            upd["new_v"] = v_new
+            return bk.attn_output(cfg, lp["attn"], out), upd, q
         if page_table is not None:
             from repro.kvcache.cache import gather_page_view
             k_layer = gather_page_view(cache_kv[0], page_table)
@@ -485,6 +509,8 @@ def trunk_fwd(cfg: ModelConfig, stack_params: Dict, h, positions, *,
     length = cache["length"] if cache is not None else jnp.zeros((b,), jnp.int32)
     paged = cache is not None and "page_table" in cache
     page_table = cache["page_table"] if paged else None
+    paged_kernel = (paged and mode == "decode_full" and spec is not None
+                    and spec.use_pallas and _paged_kernel_ok())
     if q_weight is None:
         q_weight = jnp.ones((b, t), jnp.float32)
 
@@ -589,7 +615,8 @@ def trunk_fwd(cfg: ModelConfig, stack_params: Dict, h, positions, *,
                     pkv_l = None
                 att, upd, q = _self_attention(
                     cfg, mode, lp, h, positions, self_mask, cache_kv, pkv_l,
-                    length, inv_freq, mscale, page_table=page_table)
+                    length, inv_freq, mscale, page_table=page_table,
+                    paged_kernel=paged_kernel)
                 h = h + att
                 if mode == "prefill":
                     if paged:

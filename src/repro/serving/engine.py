@@ -46,12 +46,19 @@ class ServingConfig:
     # verification and automatically fall back to the wave path.
     scheduler: str = "continuous"
     # paged full-KV cache (continuous scheduler only): back the engine's
-    # batch rows with a shared block pool + per-slot page tables and gate
-    # admission on free pages.  num_pages=None sizes the pool at
-    # contiguous parity (batch * max_len/block + 1); smaller pools trade
-    # concurrency for memory.  The wave path always runs contiguous.
+    # batch rows (trunk AND draft caches) with shared block pools +
+    # per-slot page tables and gate admission on free pages.
+    # num_pages=None sizes the pools at contiguous parity
+    # (batch * max_len/block + 1); smaller pools trade concurrency for
+    # memory.  The wave path always runs contiguous.
     paged_kv: bool = False
     num_pages: Optional[int] = None
+    # copy-on-write prompt-prefix sharing (paged only): requests whose
+    # prompts share block-aligned leading tokens attach the cached pages
+    # by reference — one physical copy, zero prefill FLOPs for the
+    # shared prefix — and admission subtracts the hits from the page
+    # bill.  Off: every request pays for its whole prompt (A/B baseline).
+    prefix_cache: bool = True
 
 
 class ServingEngine:
@@ -94,7 +101,8 @@ class ServingEngine:
                 self.cfg, self.spec, self.dcfg, self.params, self.dparams,
                 batch=batch, max_len=self.scfg.max_len,
                 partial_verification=self.scfg.partial_verification,
-                paged=paged, num_pages=self.scfg.num_pages)
+                paged=paged, num_pages=self.scfg.num_pages,
+                prefix_cache=self.scfg.prefix_cache)
         return self._engines[key]
 
     def page_stats(self) -> Dict[str, int]:
@@ -103,12 +111,33 @@ class ServingEngine:
         key = (self.scfg.batch, True)
         return self._engines[key].page_stats() if key in self._engines else {}
 
+    def prefix_stats(self) -> Dict[str, int]:
+        """Prefix-cache hit/reuse accounting of the continuous engine
+        ({} when not paged or sharing is off)."""
+        key = (self.scfg.batch, True)
+        return (self._engines[key].prefix_stats()
+                if key in self._engines else {})
+
     def reset_page_high_water(self) -> None:
-        """Zero the resident-page high-water mark (e.g. after a warmup
-        run, so it reflects only the timed region)."""
+        """Zero the resident-page high-water marks (e.g. after a warmup
+        run, so they reflect only the timed region)."""
         key = (self.scfg.batch, True)
         if key in self._engines:
-            self._engines[key]._page_alloc.high_water = 0
+            self._engines[key].reset_high_water()
+
+    def reset_warm(self) -> None:
+        """Forget everything a warmup run left behind: outputs/stats,
+        the continuous scheduler (the next ``run()`` boots a fresh one,
+        resetting the allocators and clearing the prefix cache), and the
+        page / prefix counters.  Jitted step functions stay compiled —
+        that is the point of warming up."""
+        self.stats.clear()
+        self.outputs.clear()
+        self._continuous = None
+        self.reset_page_high_water()
+        key = (self.scfg.batch, True)
+        if key in self._engines:
+            self._engines[key].reset_prefix_stats()
 
     # ------------------------------------------------------------------
     # continuous (in-flight) scheduler
@@ -124,7 +153,8 @@ class ServingEngine:
             sched.submit(self.queue.pop(0))
         done = sched.run()
         self.outputs.update({o.request_id: o for o in done})
-        for k in ("tokens", "wall_s", "steps", "admissions", "page_stalls"):
+        for k in ("tokens", "wall_s", "steps", "admissions", "page_stalls",
+                  "prefix_evictions"):
             self.stats[k] += sched.stats.pop(k, 0.0)
         return done
 

@@ -16,10 +16,19 @@ priority desc, then earliest deadline, then arrival.
 
 With a paged engine (``SpecPVEngine(paged=True)``) admission is
 additionally gated on free *pages*: a request is only admitted when the
-shared block pool can hold its prompt + generation budget, so short
-requests stop paying for max_len-sized rows and the pool can be sized
-well below batch x max_len.  A request that does not fit right now stays
-queued (``stats["page_stalls"]``) while smaller waiters may proceed.
+shared block pools (trunk + draft) can hold its prompt + generation
+budget, so short requests stop paying for max_len-sized rows and the
+pool can be sized well below batch x max_len.  A request that does not
+fit right now stays queued (``stats["page_stalls"]``) while smaller
+waiters may proceed.
+
+Admission accounting is *sharing-aware*: with the engine's prefix cache
+on, ``pages_needed_shared`` subtracts the leading prompt blocks already
+resident (they attach by refcounted page-table reference, skipping their
+prefill entirely), under pool pressure idle cached prefixes are evicted
+LRU before a request is stalled, and freeing a slot only reclaims pages
+whose refcount drops to zero — pages still shared with another slot or
+pinned by the prefix cache stay resident.
 """
 from __future__ import annotations
 
@@ -170,11 +179,25 @@ class ContinuousScheduler:
                 self.waiting.remove(req)
                 self._emit(req, -1, [], finished=False, reason="rejected")
                 continue
-            if self.engine.paged and need_pages > self.engine.free_pages():
-                # admission is gated on free *pages*, not just free slots:
-                # the request stays queued; smaller waiters may still fit
-                self.stats["page_stalls"] += 1
-                continue
+            if self.engine.paged:
+                # sharing-aware gate: only the *fresh* pages beyond the
+                # request's prefix-cache hits must be free; under
+                # pressure, idle cached prefixes are LRU-evicted first
+                need_fresh = self.engine.pages_needed_shared(
+                    req.prompt, req.max_new_tokens, touch=True)
+                short = need_fresh - self.engine.free_pages()
+                if short > 0:
+                    self.stats["prefix_evictions"] += \
+                        self.engine.reclaim_pages(short)
+                    # eviction may have shortened this request's own
+                    # matched chain (LRU has no pin) — re-count so the
+                    # gate never passes on a stale, smaller bill
+                    need_fresh = self.engine.pages_needed_shared(
+                        req.prompt, req.max_new_tokens, touch=True)
+                if need_fresh > self.engine.free_pages():
+                    # the request stays queued; smaller waiters may fit
+                    self.stats["page_stalls"] += 1
+                    continue
             i = free.pop(0)
             self.waiting.remove(req)
             self.st, first = self.engine.prefill_into_slot(

@@ -147,9 +147,13 @@ def solo_paged(tiny, small_spec, small_dcfg):
 
 @pytest.fixture(scope="module")
 def serve_paged(tiny, small_spec, small_dcfg):
+    # prefix sharing off: these tests exercise pure paged admission (and
+    # swap the trunk allocator wholesale, which a live prefix cache
+    # holding references would not survive); the copy-on-write / prefix
+    # sharing paths are covered in tests/test_prefix_cow.py
     return SpecPVEngine(*tiny[:1], small_spec, small_dcfg, *tiny[1:],
                         batch=2, max_len=MAX_LEN, partial_verification=True,
-                        paged=True)
+                        paged=True, prefix_cache=False)
 
 
 def _prompt(cfg, length, seed):
