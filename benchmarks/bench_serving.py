@@ -28,10 +28,22 @@ rate, pages saved by sharing, and prefill tokens skipped, alongside the
 resident-page high-water mark of both runs (sharing holds one physical
 copy of each hot prefix; the baseline re-stores it per request).
 
+``--interleave`` A/Bs blocking admission against chunked-prefill
+interleaving (``ServingConfig(prefill_budget=...)``) on a mixed-length
+Poisson workload with some long prompts: blocking runs a newly admitted
+prompt's whole prefill before the next decode tick, so every in-flight
+request's inter-token gap spikes by the full prefill time; interleaving
+caps each tick at ~``--prefill-budget`` prefill tokens.  Both runs serve
+the identical request set with token-identical outputs (verified); the
+report compares per-request decode-step gaps (p50/p95 and jitter =
+p95 - p50, from the scheduler's ``step_log``) and request latency.
+
 Run:  PYTHONPATH=src python benchmarks/bench_serving.py --requests 8
       PYTHONPATH=src python benchmarks/bench_serving.py --requests 8 --paged
       PYTHONPATH=src python benchmarks/bench_serving.py --requests 8 \
           --prefix-share
+      PYTHONPATH=src python benchmarks/bench_serving.py --requests 8 \
+          --interleave
 """
 import argparse
 import time
@@ -46,7 +58,7 @@ from repro.core.engine import SpecPVEngine, request_token_need
 from repro.core.tree import TreeSpec
 from repro.data import continuation_task
 from repro.serving import Request, ServingEngine, ServingConfig
-from repro.serving.scheduler import trim_output
+from repro.serving.scheduler import ContinuousScheduler, trim_output
 
 
 def make_requests(corpus, contexts, n, rate, rng, max_new):
@@ -145,6 +157,91 @@ def check_lossless(cfg, spec, dcfg, params, dparams, scfg, reqs, outs):
     return True
 
 
+def step_gap_stats(step_log):
+    """Decode-step gaps per request, pooled: for each in-flight request,
+    the wall-clock spacing of its consecutive decode steps.  A blocking
+    long-prompt admission shows up as one giant gap for every other
+    in-flight request; interleaving bounds it."""
+    times = {}
+    for t, rid, _ in step_log:
+        times.setdefault(rid, []).append(t)
+    gaps = [g for ts in times.values() for g in np.diff(ts) if len(ts) > 1]
+    return np.asarray(gaps, np.float64)
+
+
+def run_interleave(args, cfg, dcfg, params, dparams, corpus, spec,
+                   contexts):
+    """Blocking vs interleaved chunked prefill on one engine (shared jit
+    compiles): identical Poisson request set, token-identity verified."""
+    rng = np.random.default_rng(args.seed)
+    reqs = make_requests(corpus, contexts, args.requests, args.rate, rng,
+                         args.max_new)
+    max_len = max(contexts) + args.max_new + 128
+    eng = SpecPVEngine(cfg, spec, dcfg, params, dparams, batch=args.batch,
+                       max_len=max_len, partial_verification=True,
+                       paged=args.paged,
+                       num_pages=args.num_pages or None)
+    budget = args.prefill_budget
+    print(f"interleave A/B: {args.requests} requests, contexts {contexts}, "
+          f"chunk 64, prefill budget {budget} tokens/tick"
+          + (" (paged)" if args.paged else ""))
+    if not args.no_warmup:
+        warm = ContinuousScheduler(eng, prefill_chunk=64)
+        for j, ctx in enumerate({min(contexts), max(contexts)}):
+            prompt, _ = continuation_task(corpus, batch=1, context_len=ctx,
+                                          seed=1)
+            warm.submit(Request(request_id=f"warm-{j}", prompt=prompt[0],
+                                max_new_tokens=8))
+        warm.run()
+
+    results = {}
+    for mode, b in (("blocking", None), ("interleaved", budget)):
+        # step_log is recorded inside tick() itself, so the stock run()
+        # loop (arrival gating included) drives the measurement
+        sched = ContinuousScheduler(eng, prefill_chunk=64,
+                                    prefill_budget=b, record_steps=True)
+        t0 = time.time()
+        for off, r in reqs:
+            sched.submit(Request(request_id=r.request_id, prompt=r.prompt,
+                                 max_new_tokens=r.max_new_tokens,
+                                 eos_id=r.eos_id, arrival_s=t0 + off))
+        outs = sched.run()
+        wall = time.time() - t0
+        toks = sum(len(o.tokens) for o in outs)
+        lat50, lat95 = percentiles([o.latency_s for o in outs])
+        gaps = step_gap_stats(sched.step_log)
+        g50, g95 = percentiles(gaps)
+        results[mode] = dict(outs=outs, tput=toks / wall, lat50=lat50,
+                             lat95=lat95, g50=g50, g95=g95,
+                             jitter=g95 - g50)
+        print(f"{mode:>12}: {toks} tokens in {wall:.1f}s -> "
+              f"{toks / wall:.1f} tok/s, request latency p50={lat50:.2f}s "
+              f"p95={lat95:.2f}s")
+        print(f"{'':>12}  decode-step gap p50={g50 * 1e3:.1f}ms "
+              f"p95={g95 * 1e3:.1f}ms, jitter (p95-p50) = "
+              f"{(g95 - g50) * 1e3:.1f}ms over {gaps.size} gaps")
+
+    if not args.no_check:
+        blk = {o.request_id: o.tokens for o in results["blocking"]["outs"]}
+        for o in results["interleaved"]["outs"]:
+            assert np.array_equal(o.tokens, blk[o.request_id]), \
+                f"{o.request_id}: interleaved != blocking"
+        print("losslessness: interleaved outputs token-identical to "
+              "blocking admission")
+    rb, ri = results["blocking"], results["interleaved"]
+    print(f"decode-gap p95: {ri['g95'] * 1e3:.1f}ms interleaved vs "
+          f"{rb['g95'] * 1e3:.1f}ms blocking "
+          f"({rb['g95'] / max(ri['g95'], 1e-9):.2f}x lower)")
+    out = ensure_dir(RESULTS_DIR)
+    write_rows(f"{out}/bench_serving_interleave.csv",
+               ["mode", "tok_s", "lat_p50_s", "lat_p95_s",
+                "gap_p50_ms", "gap_p95_ms", "jitter_ms"],
+               [[m, f"{r['tput']:.2f}", f"{r['lat50']:.2f}",
+                 f"{r['lat95']:.2f}", f"{r['g50'] * 1e3:.2f}",
+                 f"{r['g95'] * 1e3:.2f}", f"{r['jitter'] * 1e3:.2f}"]
+                for m, r in results.items()])
+
+
 def run_prefix_share(args, cfg, dcfg, params, dparams, corpus, spec):
     """Shared-system-prompt workload: paged continuous scheduler with the
     copy-on-write prefix cache on vs off (identical request set)."""
@@ -231,8 +328,10 @@ def main():
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--rate", type=float, default=4.0,
                     help="Poisson arrival rate (req/s); 0 = all at once")
-    ap.add_argument("--contexts", type=int, nargs="+",
-                    default=[64, 192, 96, 160, 224])
+    ap.add_argument("--contexts", type=int, nargs="+", default=None,
+                    help="prompt lengths cycled over (default "
+                         "64 192 96 160 224; --interleave mixes in long "
+                         "prompts: 64 512 96 384 224)")
     ap.add_argument("--no-warmup", action="store_true",
                     help="include jit compilation in the timed region")
     ap.add_argument("--seed", type=int, default=0)
@@ -248,6 +347,13 @@ def main():
                     help="shared-system-prompt workload: A/B the paged "
                          "continuous scheduler with the copy-on-write "
                          "prefix cache on vs off")
+    ap.add_argument("--interleave", action="store_true",
+                    help="A/B blocking admission vs chunked-prefill "
+                         "interleaving: decode-step gap p50/p95 + jitter")
+    ap.add_argument("--prefill-budget", type=int, default=64,
+                    help="interleave: prefill tokens per tick (>= the "
+                         "64-token prefill chunk; the per-tick bound is "
+                         "max(budget, chunk))")
     ap.add_argument("--num-sys", type=int, default=1,
                     help="prefix-share: distinct shared system prompts "
                          "(1 = one hot template, the canonical case; "
@@ -270,6 +376,12 @@ def main():
     if args.prefix_share:
         run_prefix_share(args, cfg, dcfg, params, dparams, corpus, spec)
         return
+    if args.interleave:
+        contexts = args.contexts or [64, 512, 96, 384, 224]
+        run_interleave(args, cfg, dcfg, params, dparams, corpus, spec,
+                       contexts)
+        return
+    args.contexts = args.contexts or [64, 192, 96, 160, 224]
     rng = np.random.default_rng(args.seed)
     reqs = make_requests(corpus, args.contexts, args.requests, args.rate,
                          rng, args.max_new)

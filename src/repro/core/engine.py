@@ -14,11 +14,22 @@ Mode automaton (host side, §3.3):
 State architectures (ssm/hybrid) run chain speculation with native
 (windowed/recurrent) verification — partial verification is inapplicable
 (DESIGN.md §Arch-applicability).
+
+Continuous-batching support (see docs/architecture.md, docs/serving.md):
+batch rows are independent slots.  ``step_rows`` runs one masked jitted
+step over any subset of rows; ``prefill_begin_slot`` /
+``prefill_step_into_slot`` / ``prefill_finalize_slot`` make per-slot
+prefill *resumable*, so the serving scheduler can interleave one prefill
+chunk at a time with decode steps (Sarathi/vLLM-style chunked prefill)
+instead of stalling every in-flight request for a whole admission.
+``prefill_into_slot`` is the blocking wrapper over the same cursor
+machinery — both paths run the identical absolute chunk schedule, so
+outputs are bit-identical either way.
 """
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass, replace as dc_replace
+from dataclasses import dataclass, field, replace as dc_replace
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -70,6 +81,57 @@ class StepOutput:
     counts: np.ndarray          # [B] number of valid tokens (= accept+1)
     accept_len: np.ndarray      # [B]
     mode: str
+
+
+@dataclass
+class PrefillCursor:
+    """Resumable per-slot prefill state (chunked-prefill interleaving).
+
+    One cursor tracks one in-flight admission between
+    ``prefill_begin_slot`` and ``prefill_finalize_slot``.  Each
+    ``prefill_step_into_slot`` call advances it by exactly one chunk;
+    ``off`` is the *absolute* token offset of the next chunk, and chunk
+    boundaries stay absolute multiples of ``chunk`` (a resumed prefill
+    runs the identical chunk schedule as a blocking one, so outputs are
+    bit-identical).  ``row_cache``/``row_dcache`` carry the slot's
+    private cache keys between chunks — for paged engines these are the
+    per-row keys only (page table, length, cross rows); the shared pools
+    live in the batched ``EngineState`` and are rebound after every
+    chunk.  The paged fields record the admission-time page plan (host
+    page tables incl. the decode reserve, prefix-cache attach state, and
+    the chain entries registered so far for mid-prefill LRU
+    re-stamping)."""
+    slot: int
+    prompt: np.ndarray
+    chunk: int
+    extra: Optional[Dict]
+    off: int                            # absolute offset of the next chunk
+    prev_feat: Any                      # [1, 3d] fused boundary feature
+    row_cache: Dict                     # per-row cache keys (or the whole
+    row_dcache: Dict                    # batch-1 cache when not paged)
+    logits_last: Any = None             # last chunk's logits (first token)
+    # paged bookkeeping (None / zero when the engine is contiguous)
+    pt_host: Optional[np.ndarray] = None
+    dpt_host: Optional[np.ndarray] = None
+    total_pages: int = 0
+    n_match: int = 0                    # prefix-cache blocks attached
+    n_full: int = 0                     # full prompt blocks (registrable)
+    chain_keys: List[bytes] = field(default_factory=list)
+    chain_entries: List[Any] = field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return self.off >= len(self.prompt)
+
+    @property
+    def next_tokens(self) -> int:
+        """Tokens the next ``prefill_step_into_slot`` call will process
+        (0 when done) — the scheduler's per-tick budget accounting."""
+        if self.done:
+            return 0
+        end = min(len(self.prompt),
+                  (self.off // self.chunk + 1) * self.chunk)
+        return end - self.off
 
 
 # ---------------------------------------------------------------------------
@@ -486,55 +548,44 @@ class SpecPVEngine:
 
     def prefill(self, prompt: np.ndarray, chunk: int = 256,
                 extra: Optional[Dict] = None) -> EngineState:
+        """Whole-batch chunked prefill; returns the boot state for the
+        lock-step ``generate``/``step`` loop (chunk boundaries are
+        absolute multiples of `chunk`, see docs/architecture.md)."""
         assert prompt.shape[0] == self.batch
         self._pkv_active = False
         self._pkv_active_rows[:] = False
         return self._prefill_state(prompt, chunk, extra)
 
     def _prefill_state(self, prompt: np.ndarray, chunk: int = 256,
-                       extra: Optional[Dict] = None, *,
-                       cache: Optional[Dict] = None,
-                       dcache: Optional[Dict] = None,
-                       grow=None, start_len: int = 0,
-                       prev_feat: Optional[jax.Array] = None,
-                       on_chunk=None) -> EngineState:
-        """Chunked prefill for an arbitrary batch (the continuous scheduler
-        prefills batch-1 sub-states and scatters them into slots).
-
-        cache/dcache: pre-built caches to prefill into (paged slot
-        admission passes the shared pools + the slot's table rows);
-        grow(cache, dcache, upto) is called before each chunk so paged
-        admission can allocate pages chunk by chunk.
-
-        start_len: tokens already resident (prefix-cache hit) — prefill
-        resumes there with `prev_feat` as the boundary fused feature, and
-        chunk boundaries stay aligned to absolute multiples of `chunk` so
-        a resumed prefill runs the identical chunk schedule as a cold one
-        past the first partial chunk.  on_chunk(off, end, fused) sees
-        each chunk's fused features (prefix-block registration)."""
-        cfg, spec = self.cfg, self.spec
+                       extra: Optional[Dict] = None) -> EngineState:
+        """Whole-batch chunked prefill (the lock-step ``generate`` path;
+        per-slot admission goes through the resumable cursor machinery
+        instead, see ``prefill_begin_slot``)."""
+        cfg = self.cfg
         b, s0 = prompt.shape
-        assert start_len < s0, "prefix match must leave a non-empty tail"
-        if cache is None:
-            cache = self._init_cache(b, full_alloc=self.paged)
-        if dcache is None:
-            dcache = self._init_dcache(b, full_alloc=self.paged)
-        if prev_feat is None:
-            prev_feat = jnp.zeros((b, 3 * cfg.d_model), cm.dt(cfg.dtype))
+        cache = self._init_cache(b, full_alloc=self.paged)
+        dcache = self._init_dcache(b, full_alloc=self.paged)
+        prev_feat = jnp.zeros((b, 3 * cfg.d_model), cm.dt(cfg.dtype))
         logits_last = None
-        off = start_len
+        off = 0
         while off < s0:
             end = min(s0, (off // chunk + 1) * chunk)
             toks = jnp.asarray(prompt[:, off: end])
-            if grow is not None:
-                cache, dcache = grow(cache, dcache, end)
             cache, dcache, logits_last, fused = self._prefill_chunk(
                 self.params, self.dparams, cache, dcache, toks, prev_feat,
                 extra)
-            if on_chunk is not None:
-                on_chunk(off, end, fused)
             prev_feat = fused[:, -1]
             off = end
+        return self._boot_state(cache, dcache, logits_last, prev_feat, s0)
+
+    def _boot_state(self, cache: Dict, dcache: Dict, logits_last,
+                    prev_feat, s0: int) -> EngineState:
+        """Post-prefill engine state: sample/argmax the first token from
+        the final chunk's logits and seed the pending/extend queues.
+        Shared by the batch path and the per-slot cursor finalise, so the
+        two construct bit-identical automaton state."""
+        cfg = self.cfg
+        b = prev_feat.shape[0]
         if self.temperature > 0:
             bonus0 = jax.random.categorical(
                 jax.random.PRNGKey(11),
@@ -607,6 +658,19 @@ class SpecPVEngine:
         if self._prefix is not None:
             self._prefix.clear(self._page_alloc, self._draft_alloc)
 
+    def clear_slot_rows(self, st: EngineState, slot: int) -> EngineState:
+        """Zero a slot's *device* rows (page table -> null page, neutral
+        automaton scalars) without touching the host allocator.  Masked
+        steps execute every batch row and route each row's cache writes
+        through its own table/offsets, so an inactive row must never
+        keep a stale table: a mid-prefill slot's real table lives in its
+        ``PrefillCursor`` while the device row stays neutral.  Consumes
+        `st` (buffers donated) — callers must rebind."""
+        if self._neutral_sub is None:
+            self._neutral_sub = self._neutral_state(1, row_cache=self.paged)
+        self._pkv_active_rows[slot] = False
+        return self._write_slot(st, self._neutral_sub, jnp.int32(slot))
+
     def reset_slot(self, st: EngineState, slot: int) -> EngineState:
         """Evict a request: zero the slot's cache rows and automaton
         (paged: clear the slot's page-table rows and release its page
@@ -615,14 +679,11 @@ class SpecPVEngine:
         the prefix cache stay resident.  Pool contents are left stale,
         they are never read once unmapped).  Consumes `st` (buffers
         donated) — callers must rebind."""
-        if self._neutral_sub is None:
-            self._neutral_sub = self._neutral_state(1, row_cache=self.paged)
         if self.paged:
             self._page_alloc.free_slot(slot)
             self._draft_alloc.free_slot(slot)
             self._forked_slots.discard(slot)
-        self._pkv_active_rows[slot] = False
-        return self._write_slot(st, self._neutral_sub, jnp.int32(slot))
+        return self.clear_slot_rows(st, slot)
 
     # ---- page accounting (host side; no-ops when not paged) ----------
     def pages_needed(self, prompt_len: int, max_new_tokens: int) -> int:
@@ -716,31 +777,44 @@ class SpecPVEngine:
         out["prefill_tokens_skipped"] = self._prefill_skipped_tokens
         return out
 
-    def prefill_into_slot(self, st: EngineState, slot: int,
-                          prompt: np.ndarray, chunk: int = 256,
-                          extra: Optional[Dict] = None,
-                          max_new_tokens: Optional[int] = None
-                          ) -> Tuple[EngineState, int]:
-        """Admit a request: chunked batch-1 prefill, then scatter the
-        sub-state into batch row `slot`.  Returns (state, first token).
-        Consumes `st` (buffers donated) — callers must rebind.
+    # ------------------------------------------------------------------
+    # resumable per-slot prefill (chunked-prefill interleaving)
+    # ------------------------------------------------------------------
+    def prefill_begin_slot(self, st: EngineState, slot: int,
+                           prompt: np.ndarray, chunk: int = 256,
+                           extra: Optional[Dict] = None,
+                           max_new_tokens: Optional[int] = None
+                           ) -> Tuple[EngineState, PrefillCursor]:
+        """Open a resumable prefill of `prompt` into batch row `slot`.
+        Returns (state, cursor); drive the cursor with
+        ``prefill_step_into_slot`` (one chunk per call) and commit it
+        with ``prefill_finalize_slot``.  Consumes `st` — callers must
+        rebind.
 
-        Paged engines prefill straight into the shared pools through
-        fresh table rows for `slot`, allocating pages chunk by chunk plus
-        a decode reserve sized by ``max_new_tokens`` (defaults to the
-        remaining max_len budget).  With prefix caching, matched leading
-        blocks are attached by page-table reference (their prefill is
-        skipped entirely) and freshly completed prompt blocks are
-        registered back into the cache.  Raises RuntimeError when the
-        pools cannot cover the request even after LRU prefix eviction —
-        callers should gate admission on
-        ``free_pages()``/``pages_needed_shared()`` first."""
+        All admission-time page accounting happens here, up front: the
+        prefix cache is consulted (matched leading blocks attach by
+        page-table reference — their prefill is skipped entirely) and
+        the *whole* page plan — fresh prompt blocks plus the decode
+        reserve sized by ``max_new_tokens`` (default: the remaining
+        max_len budget) — is allocated immediately, so later steps can
+        never fail on pool exhaustion no matter what is admitted in
+        between.  Raises RuntimeError (with the attach rolled back) when
+        the pools cannot cover the request even after LRU prefix
+        eviction — callers should gate admission on
+        ``free_pages()``/``pages_needed_shared()`` first.
+
+        The slot's device rows are cleared (page table -> null page):
+        masked decode steps may run between chunks, and an inactive row
+        must never route its masked writes through a stale table."""
         prompt = np.asarray(prompt)
+        cfg = self.cfg
         if not self.paged:
-            sub = self._prefill_state(prompt[None, :], chunk, extra)
-            self._pkv_active_rows[slot] = False
-            st = self._write_slot(st, sub, jnp.int32(slot))
-            return st, int(np.asarray(sub.pending[0, 0]))
+            cur = PrefillCursor(
+                slot=slot, prompt=prompt, chunk=chunk, extra=extra, off=0,
+                prev_feat=jnp.zeros((1, 3 * cfg.d_model), cm.dt(cfg.dtype)),
+                row_cache=self._init_cache(1),
+                row_dcache=self._init_dcache(1))
+            return self.clear_slot_rows(st, slot), cur
 
         al, dal = self._page_alloc, self._draft_alloc
         al.free_slot(slot)                      # stale pages, if any
@@ -767,13 +841,13 @@ class SpecPVEngine:
         n_match = len(entries)
         pt_host = np.zeros((self._nb_seq,), np.int32)
         dpt_host = np.zeros((self._nb_seq,), np.int32)
-        prev0 = None
+        prev_feat = None
         if n_match:
             al.attach(slot, [e.page for e in entries])
             dal.attach(slot, [e.draft_page for e in entries])
             pt_host[:n_match] = [e.page for e in entries]
             dpt_host[:n_match] = [e.draft_page for e in entries]
-            prev0 = jnp.asarray(entries[-1].feat)[None]
+            prev_feat = jnp.asarray(entries[-1].feat)[None]
         fresh = total_pages - n_match
         if fresh > min(al.free, dal.free):
             self.reclaim_pages(fresh - min(al.free, dal.free))
@@ -787,76 +861,139 @@ class SpecPVEngine:
         if n_match:
             self._prefill_skipped_tokens += n_match * bs
         start_len = n_match * bs
+        assert start_len < len(prompt), \
+            "prefix match must leave a non-empty tail"
+        if fresh:                           # tail blocks + decode reserve
+            pt_host[n_match:total_pages] = al.alloc(slot, fresh)
+            dpt_host[n_match:total_pages] = dal.alloc(slot, fresh)
+        if prev_feat is None:
+            prev_feat = jnp.zeros((1, 3 * cfg.d_model), cm.dt(cfg.dtype))
 
-        def grow(cache: Dict, dcache: Dict, upto: int):
-            need = min(cdiv(upto, bs), self._nb_seq)
-            cur = al.count(slot)
-            if need > cur:
-                pt_host[cur:need] = al.alloc(slot, need - cur)
-                dpt_host[cur:need] = dal.alloc(slot, need - cur)
-            return (dict(cache, page_table=jnp.asarray(pt_host)[None]),
-                    dict(dcache, page_table=jnp.asarray(dpt_host)[None]))
-
-        # fused boundary features of freshly prefilled full blocks, for
-        # registration (dict: block index -> np [3d])
-        n_full = len(prompt) // bs
-        feats: Dict[int, np.ndarray] = {}
-
-        def on_chunk(off: int, end: int, fused) -> None:
-            if self._prefix is None:
-                return
-            for j in range(n_match, min(end // bs, n_full)):
-                p = (j + 1) * bs - 1        # block j's boundary token
-                if p >= off:                # earlier boundaries are done
-                    feats[j] = np.asarray(fused[0, p - off])
-
-        sub_cache: Dict = {n: st.cache[n] for n in kvc.PAGED_POOL_KEYS}
+        row_cache: Dict = {"page_table": jnp.asarray(pt_host)[None],
+                           "length": jnp.full((1,), start_len, jnp.int32)}
         for n in ("cross_k", "cross_v"):
             if n in st.cache:
-                sub_cache[n] = st.cache[n][:, slot: slot + 1]
-        sub_cache["page_table"] = jnp.asarray(pt_host)[None]
-        sub_cache["length"] = jnp.full((1,), start_len, jnp.int32)
-        sub_dcache: Dict = {n: st.dcache[n] for n in kvc.DRAFT_POOL_KEYS}
-        sub_dcache["page_table"] = jnp.asarray(dpt_host)[None]
-        sub_dcache["length"] = jnp.full((1,), start_len, jnp.int32)
-        sub = self._prefill_state(prompt[None, :], chunk, extra,
-                                  cache=sub_cache, dcache=sub_dcache,
-                                  grow=grow, start_len=start_len,
-                                  prev_feat=prev0, on_chunk=on_chunk)
-        cur = al.count(slot)
-        if total_pages > cur:                   # decode reserve
-            pt_host[cur:total_pages] = al.alloc(slot, total_pages - cur)
-            dpt_host[cur:total_pages] = dal.alloc(slot, total_pages - cur)
+                row_cache[n] = st.cache[n][:, slot: slot + 1]
+        row_dcache: Dict = {"page_table": jnp.asarray(dpt_host)[None],
+                            "length": jnp.full((1,), start_len, jnp.int32)}
+        n_full = len(prompt) // bs
+        cur = PrefillCursor(
+            slot=slot, prompt=prompt, chunk=chunk, extra=extra,
+            off=start_len, prev_feat=prev_feat,
+            row_cache=row_cache, row_dcache=row_dcache,
+            pt_host=pt_host, dpt_host=dpt_host, total_pages=total_pages,
+            n_match=n_match, n_full=n_full,
+            chain_keys=(self._prefix.chain_keys(prompt, n_full)
+                        if self._prefix is not None and n_full > n_match
+                        else []),
+            chain_entries=list(entries))
+        return self.clear_slot_rows(st, slot), cur
 
-        # ---- register completed prompt blocks back into the cache -----
-        if self._prefix is not None and n_full > n_match:
-            keys = self._prefix.chain_keys(prompt, n_full)
-            # one stamp for the WHOLE chain, matched ancestors included:
-            # a parent may never be older than its children, or LRU
-            # eviction could drop a chain head and orphan the tail
-            tick = self._prefix.new_tick()
-            for e in entries:
-                e.tick = tick
-            for j in range(n_match, n_full):
-                self._prefix.insert(keys[j], j, int(pt_host[j]),
-                                    int(dpt_host[j]), feats[j], al, dal,
-                                    tick=tick)
+    def prefill_step_into_slot(self, st: EngineState, cur: PrefillCursor
+                               ) -> Tuple[EngineState, int]:
+        """Advance `cur` by exactly one chunk.  Chunk boundaries stay
+        absolute multiples of ``cur.chunk`` regardless of where the
+        cursor resumes, so an interleaved prefill runs the identical
+        chunk schedule (and produces bit-identical caches) as a blocking
+        one.  Returns (state, tokens processed).  Consumes `st` — paged
+        pools are written in place and rebound into the batched state
+        after every chunk, so masked decode steps may run between calls.
 
-        self._pkv_active_rows[slot] = False
-        # the pools were written in place (batch-1 view); rebind them into
-        # the batched state, then row-write the per-slot keys
-        pool = {n: sub.cache[n] for n in kvc.PAGED_POOL_KEYS}
-        dpool = {n: sub.dcache[n] for n in kvc.DRAFT_POOL_KEYS}
-        st = dc_replace(st, cache=dict(st.cache, **pool),
-                        dcache=dict(st.dcache, **dpool))
-        row_cache = {n: v for n, v in sub.cache.items()
-                     if n not in kvc.PAGED_POOL_KEYS}
-        row_cache["page_table"] = jnp.asarray(pt_host)[None]
-        row_dcache = {"page_table": jnp.asarray(dpt_host)[None],
-                      "length": sub.dcache["length"]}
-        sub_row = dc_replace(sub, cache=row_cache, dcache=row_dcache)
-        st = self._write_slot(st, sub_row, jnp.int32(slot))
+        Freshly completed prompt blocks are registered into the prefix
+        cache *as they finish*, so concurrent admissions can share a
+        long prefix before this prefill completes; each registration
+        re-stamps the whole chain with one LRU tick (a parent is never
+        older than its children)."""
+        assert not cur.done, "prefill cursor already exhausted"
+        s0 = len(cur.prompt)
+        off = cur.off
+        end = min(s0, (off // cur.chunk + 1) * cur.chunk)
+        toks = jnp.asarray(cur.prompt[None, off: end])
+        if self.paged:
+            sub_cache = {n: st.cache[n] for n in kvc.PAGED_POOL_KEYS}
+            sub_cache.update(cur.row_cache)
+            sub_dcache = {n: st.dcache[n] for n in kvc.DRAFT_POOL_KEYS}
+            sub_dcache.update(cur.row_dcache)
+        else:
+            sub_cache, sub_dcache = cur.row_cache, cur.row_dcache
+        cache, dcache, logits_last, fused = self._prefill_chunk(
+            self.params, self.dparams, sub_cache, sub_dcache, toks,
+            cur.prev_feat, cur.extra)
+
+        # ---- register prompt blocks completed by this chunk -----------
+        if self.paged and self._prefix is not None and cur.n_full:
+            lo, hi = off // self.spec.block_size, \
+                min(end // self.spec.block_size, cur.n_full)
+            if hi > lo:
+                # one stamp for the WHOLE chain, matched ancestors and
+                # earlier chunks' blocks included: a parent may never be
+                # older than its children, or LRU eviction could drop a
+                # chain head and orphan the tail
+                tick = self._prefix.new_tick()
+                for e in cur.chain_entries:
+                    e.tick = tick
+                for j in range(lo, hi):
+                    p = (j + 1) * self.spec.block_size - 1
+                    e = self._prefix.insert(
+                        cur.chain_keys[j], j, int(cur.pt_host[j]),
+                        int(cur.dpt_host[j]), np.asarray(fused[0, p - off]),
+                        self._page_alloc, self._draft_alloc, tick=tick)
+                    cur.chain_entries.append(
+                        e if e is not None
+                        else self._prefix.entry(cur.chain_keys[j]))
+
+        cur.prev_feat = fused[:, -1]
+        cur.logits_last = logits_last
+        cur.off = end
+        if self.paged:
+            # the pools were written in place (batch-1 view); rebind them
+            # into the batched state so interleaved decode steps see the
+            # chunk, and keep only the per-row keys in the cursor
+            cur.row_cache = {n: v for n, v in cache.items()
+                             if n not in kvc.PAGED_POOL_KEYS}
+            cur.row_dcache = {n: v for n, v in dcache.items()
+                              if n not in kvc.DRAFT_POOL_KEYS}
+            pool = {n: cache[n] for n in kvc.PAGED_POOL_KEYS}
+            dpool = {n: dcache[n] for n in kvc.DRAFT_POOL_KEYS}
+            st = dc_replace(st, cache=dict(st.cache, **pool),
+                            dcache=dict(st.dcache, **dpool))
+        else:
+            cur.row_cache, cur.row_dcache = cache, dcache
+        return st, end - off
+
+    def prefill_finalize_slot(self, st: EngineState, cur: PrefillCursor
+                              ) -> Tuple[EngineState, int]:
+        """Commit an exhausted cursor: build the slot's automaton state
+        from the final chunk's logits and scatter it into batch row
+        ``cur.slot``.  Returns (state, first token).  Consumes `st` —
+        callers must rebind."""
+        assert cur.done, "prefill cursor still has chunks to run"
+        sub = self._boot_state(cur.row_cache, cur.row_dcache,
+                               cur.logits_last, cur.prev_feat,
+                               len(cur.prompt))
+        self._pkv_active_rows[cur.slot] = False
+        st = self._write_slot(st, sub, jnp.int32(cur.slot))
         return st, int(np.asarray(sub.pending[0, 0]))
+
+    def prefill_into_slot(self, st: EngineState, slot: int,
+                          prompt: np.ndarray, chunk: int = 256,
+                          extra: Optional[Dict] = None,
+                          max_new_tokens: Optional[int] = None
+                          ) -> Tuple[EngineState, int]:
+        """Admit a request in one blocking call: chunked batch-1 prefill,
+        then scatter the sub-state into batch row `slot`.  Returns
+        (state, first token).  Consumes `st` (buffers donated) — callers
+        must rebind.  This is the whole-request wrapper over the
+        resumable cursor (``prefill_begin_slot`` ->
+        ``prefill_step_into_slot``* -> ``prefill_finalize_slot``), so it
+        shares every invariant documented there — including the
+        RuntimeError on page-pool exhaustion."""
+        st, cur = self.prefill_begin_slot(st, slot, prompt, chunk=chunk,
+                                          extra=extra,
+                                          max_new_tokens=max_new_tokens)
+        while not cur.done:
+            st, _ = self.prefill_step_into_slot(st, cur)
+        return self.prefill_finalize_slot(st, cur)
 
     # ------------------------------------------------------------------
     # copy-on-write: fork + pre-step exclusivity
@@ -1011,6 +1148,9 @@ class SpecPVEngine:
 
     def step(self, st: EngineState, mode: str) -> Tuple[EngineState,
                                                         StepOutput]:
+        """One lock-step draft -> verify(mode) -> accept -> commit round
+        over the whole batch (``select_mode`` picks `mode`).  Consumes
+        `st` — callers must rebind."""
         fn = self._step_fn(mode)
         if fn is None:
             raise ValueError(mode)

@@ -28,6 +28,11 @@ Paged variant (``page_table`` key present in the cache dict):
 * the draft cache can be paged the same way over a second, smaller pool
   (single draft layer): ``k/v: [NumPagesD, block, Hk, Dh]`` + per-slot
   tables, so draft residency also scales with live tokens.
+
+The full subsystem — ownership rules, copy-on-write, prefix-cache
+hashing/LRU, and the high-water accounting — is documented in
+docs/paged_kv.md, whose symbol references CI checks against this file
+(tools/check_docs.py).
 """
 from __future__ import annotations
 
@@ -460,20 +465,25 @@ class PrefixCache:
     def insert(self, key: bytes, depth: int, page: int, draft_page: int,
                feat, trunk_alloc: PageAllocator,
                draft_alloc: PageAllocator,
-               tick: Optional[int] = None) -> bool:
+               tick: Optional[int] = None) -> Optional[_PrefixEntry]:
         """Register one completed prefill block.  Takes one reference on
-        each pool page; returns False (and takes nothing) when the chain
-        hash is already cached.  Pass one ``new_tick()`` for all blocks
-        of a chain registered together."""
+        each pool page; returns the new entry, or None (taking nothing)
+        when the chain hash is already cached — ``entry(key)`` then
+        fetches the existing one.  Pass one ``new_tick()`` for all
+        blocks of a chain registered together."""
         if key in self._entries:
-            return False
+            return None
         trunk_alloc.add_ref([page], cache=True)
         draft_alloc.add_ref([draft_page], cache=True)
-        self._entries[key] = _PrefixEntry(
-            key, depth, int(page), int(draft_page), feat,
-            self.new_tick() if tick is None else tick)
+        e = _PrefixEntry(key, depth, int(page), int(draft_page), feat,
+                         self.new_tick() if tick is None else tick)
+        self._entries[key] = e
         self.inserted += 1
-        return True
+        return e
+
+    def entry(self, key: bytes) -> Optional[_PrefixEntry]:
+        """The cached entry for a chain hash, if any (no LRU touch)."""
+        return self._entries.get(key)
 
     def evict_lru(self, trunk_alloc: PageAllocator,
                   draft_alloc: PageAllocator, n_pages: int) -> int:

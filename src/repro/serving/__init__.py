@@ -1,6 +1,6 @@
-from repro.serving.request import Request, RequestOutput
+from repro.serving.request import Request, RequestOutput, RequestPhase
 from repro.serving.engine import ServingEngine, ServingConfig
 from repro.serving.scheduler import ContinuousScheduler
 
-__all__ = ["Request", "RequestOutput", "ServingEngine", "ServingConfig",
-           "ContinuousScheduler"]
+__all__ = ["Request", "RequestOutput", "RequestPhase", "ServingEngine",
+           "ServingConfig", "ContinuousScheduler"]

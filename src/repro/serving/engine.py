@@ -39,6 +39,14 @@ class ServingConfig:
     batch: int = 4
     max_len: int = 4096
     prefill_chunk: int = 256
+    # chunked-prefill interleaving (continuous scheduler only).  None:
+    # an admission runs its whole prompt prefill before the tick's
+    # decode steps (blocking).  N: each tick runs at most
+    # ~max(N, prefill_chunk) prompt tokens of the open prefill cursors,
+    # interleaved with decode — bounding the decode-tick jitter a long
+    # admission injects while outputs stay token-identical
+    # (see docs/serving.md).
+    prefill_budget: Optional[int] = None
     partial_verification: bool = True
     pad_id: int = 0
     # "continuous" | "wave".  Continuous batching drives the per-slot
@@ -147,14 +155,15 @@ class ServingEngine:
         if sched is None:
             sched = ContinuousScheduler(
                 self._engine_for(self.scfg.batch, paged=self.scfg.paged_kv),
-                prefill_chunk=self.scfg.prefill_chunk)
+                prefill_chunk=self.scfg.prefill_chunk,
+                prefill_budget=self.scfg.prefill_budget)
             self._continuous = sched
         while self.queue:
             sched.submit(self.queue.pop(0))
         done = sched.run()
         self.outputs.update({o.request_id: o for o in done})
         for k in ("tokens", "wall_s", "steps", "admissions", "page_stalls",
-                  "prefix_evictions"):
+                  "prefix_evictions", "prefill_tokens"):
             self.stats[k] += sched.stats.pop(k, 0.0)
         return done
 

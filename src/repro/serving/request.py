@@ -1,11 +1,36 @@
-"""Request / output records for the serving engine."""
+"""Request / output records for the serving engine.
+
+A request moves through the ``RequestPhase`` lifecycle
+(see docs/serving.md):
+
+    WAITING -> PREFILLING -> DECODING -> FINISHED
+
+``PREFILLING`` covers the window between slot admission and the first
+generated token.  Under the blocking scheduler it lasts for the single
+tick that runs the whole prompt; with chunked-prefill interleaving
+(``ServingConfig(prefill_budget=...)``) a request stays PREFILLING
+across ticks while its chunks are interleaved with other slots' decode
+steps (``ContinuousScheduler.tick``).  Cancellation and deadline
+eviction apply in every phase — a PREFILLING request evicted mid-prompt
+releases its page references and reports zero tokens.
+"""
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
+from enum import Enum
 from typing import List, Optional
 
 import numpy as np
+
+
+class RequestPhase(str, Enum):
+    """Lifecycle phase, maintained by the continuous scheduler (the wave
+    path runs whole requests lock-step and does not track phases)."""
+    WAITING = "waiting"          # submitted, not yet admitted to a slot
+    PREFILLING = "prefilling"    # admitted; prompt chunks still running
+    DECODING = "decoding"        # first token emitted; speculative decode
+    FINISHED = "finished"        # output emitted (any finish_reason)
 
 
 @dataclass
@@ -20,6 +45,7 @@ class Request:
                                         # are dropped (finish_reason
                                         # "deadline")
     cancelled: bool = False
+    phase: RequestPhase = RequestPhase.WAITING
 
     def cancel(self) -> None:
         """Mark for cancellation; the scheduler evicts the request at its

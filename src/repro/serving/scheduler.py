@@ -29,6 +29,28 @@ prefill entirely), under pool pressure idle cached prefixes are evicted
 LRU before a request is stalled, and freeing a slot only reclaims pages
 whose refcount drops to zero — pages still shared with another slot or
 pinned by the prefix cache stay resident.
+
+**Chunked-prefill interleaving** (``prefill_budget``): by default an
+admission runs its *whole* prompt prefill inside ``_admit`` before the
+tick's decode steps, so every in-flight request's inter-token latency
+spikes by the full prefill time of each new long prompt.  With
+``prefill_budget=N`` admission only *opens* a resumable prefill cursor
+(``SpecPVEngine.prefill_begin_slot``; the request enters the
+``PREFILLING`` phase) and each tick advances the open cursors — oldest
+admission first — by whole chunks until ~N prompt tokens have run
+(``_pump_prefill``), interleaved with the masked decode steps of the
+DECODING slots.  Chunk boundaries stay absolute, so interleaved outputs
+are token-identical to blocking ones; a tick processes at most
+``max(prefill_budget, prefill_chunk)`` prefill tokens (one chunk always
+runs when any cursor is open, so prefill can never starve), which bounds
+the decode-tick jitter admission can inject.  Mid-prefill requests
+honour cancellation and deadlines like any other slot: eviction drops
+the cursor and releases the slot's page references, while prompt blocks
+already registered in the prefix cache stay cached for future requests.
+
+The lifecycle, admission/eviction rules and config knobs are documented
+in docs/serving.md, whose symbol references CI checks against this file
+(tools/check_docs.py).
 """
 from __future__ import annotations
 
@@ -39,8 +61,8 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
-from repro.core.engine import SpecPVEngine
-from repro.serving.request import Request, RequestOutput
+from repro.core.engine import PrefillCursor, SpecPVEngine
+from repro.serving.request import Request, RequestOutput, RequestPhase
 
 
 def trim_output(tokens: List[int], max_new: int, eos_id: int) -> np.ndarray:
@@ -56,6 +78,8 @@ def trim_output(tokens: List[int], max_new: int, eos_id: int) -> np.ndarray:
 class _Slot:
     req: Request
     admit_s: float
+    seq: int = 0                    # admission order (prefill FIFO)
+    cursor: Optional[PrefillCursor] = None  # open resumable prefill
     tokens: List[int] = field(default_factory=list)
     accepts: List[int] = field(default_factory=list)
     steps: int = 0
@@ -79,23 +103,44 @@ class _Slot:
 
 
 class ContinuousScheduler:
+    """Slot scheduler over one shared ``SpecPVEngine`` (see module
+    docstring and docs/serving.md for the lifecycle and invariants).
+
+    ``prefill_budget=None`` (default) admits blocking: a request's whole
+    prompt prefills inside its admission tick.  ``prefill_budget=N``
+    interleaves: each tick advances open prefill cursors by whole chunks
+    up to ~N prompt tokens before running the decode steps (at most
+    ``max(N, prefill_chunk)`` tokens per tick; at least one chunk runs
+    whenever a cursor is open).  ``record_steps`` appends
+    ``(clock(), request_id, n_tokens)`` to ``step_log`` for every slot
+    that decodes in a tick — the per-request inter-step gap trace the
+    jitter benchmark (``bench_serving.py --interleave``) is built on."""
+
     def __init__(self, engine: SpecPVEngine, *, prefill_chunk: int = 256,
+                 prefill_budget: Optional[int] = None,
+                 record_steps: bool = False,
                  clock: Callable[[], float] = time.time):
         assert engine.is_attn, \
             "continuous batching drives the per-slot SpecPV automaton " \
             "(attention archs); state archs use the wave scheduler"
         assert engine.temperature == 0.0, \
             "continuous batching is greedy (per-slot losslessness)"
+        assert prefill_budget is None or prefill_budget > 0, \
+            "prefill_budget must be positive (None = blocking prefill)"
         self.engine = engine
         self.prefill_chunk = prefill_chunk
+        self.prefill_budget = prefill_budget
+        self.record_steps = record_steps
         self.clock = clock
         self.st = engine.empty_state()
         self.slots: List[Optional[_Slot]] = [None] * engine.batch
         self._dirty: set = set()        # evicted, not yet reset/refilled
+        self._seq = 0                   # admission counter (prefill FIFO)
         self.waiting: List[Request] = []
         self.outputs: Dict[str, RequestOutput] = {}
         self.done_order: List[RequestOutput] = []
         self.trace: List[tuple] = []        # (event, request_id, slot)
+        self.step_log: List[tuple] = []     # (t, request_id, n_tokens)
         self.stats = defaultdict(float)
 
     # ------------------------------------------------------------------
@@ -135,6 +180,7 @@ class ContinuousScheduler:
             latency_s=max(0.0, self.clock() - req.arrival_s),
             mean_accept=float(np.mean(accepts)) if len(accepts) else 0.0,
             tokens_per_step=(len(tokens) / steps if steps else 0.0))
+        req.phase = RequestPhase.FINISHED
         self.outputs[req.request_id] = out
         self.done_order.append(out)
         self.stats["tokens"] += len(out.tokens)
@@ -200,12 +246,23 @@ class ContinuousScheduler:
                     continue
             i = free.pop(0)
             self.waiting.remove(req)
-            self.st, first = self.engine.prefill_into_slot(
-                self.st, i, req.prompt, chunk=self.prefill_chunk,
-                max_new_tokens=req.max_new_tokens)
+            req.phase = RequestPhase.PREFILLING
+            slot = _Slot(req=req, admit_s=now, seq=self._seq)
+            self._seq += 1
+            if self.prefill_budget is None:
+                # blocking admission: the whole prompt prefills now
+                self.st, first = self.engine.prefill_into_slot(
+                    self.st, i, req.prompt, chunk=self.prefill_chunk,
+                    max_new_tokens=req.max_new_tokens)
+                req.phase = RequestPhase.DECODING
+                slot.append([first])
+            else:
+                # interleaved admission: open a resumable cursor; chunks
+                # run inside _pump_prefill under the per-tick budget
+                self.st, slot.cursor = self.engine.prefill_begin_slot(
+                    self.st, i, req.prompt, chunk=self.prefill_chunk,
+                    max_new_tokens=req.max_new_tokens)
             self._dirty.discard(i)
-            slot = _Slot(req=req, admit_s=now)
-            slot.append([first])
             self.slots[i] = slot
             self.stats["admissions"] += 1
             self.trace.append(("admit", req.request_id, i))
@@ -214,14 +271,52 @@ class ContinuousScheduler:
             self.st = self.engine.reset_slot(self.st, i)
         self._dirty.clear()
 
+    def _pump_prefill(self) -> int:
+        """Advance open prefill cursors, oldest admission first, by whole
+        chunks until the per-tick budget is spent (the first chunk always
+        runs, so a budget below the chunk size still progresses — the
+        per-tick bound is ``max(prefill_budget, prefill_chunk)`` tokens).
+        A cursor that exhausts its prompt is finalised: the sub-state is
+        scattered into the slot row, the first token appended, and the
+        request enters DECODING — eligible for a decode step in this same
+        tick.  Returns prefill tokens processed."""
+        spent = 0
+        order = sorted((s.seq, i) for i, s in enumerate(self.slots)
+                       if s is not None and s.cursor is not None)
+        for _, i in order:
+            s = self.slots[i]
+            while s.cursor is not None:
+                if spent and spent + s.cursor.next_tokens > \
+                        self.prefill_budget:
+                    break
+                self.st, n = self.engine.prefill_step_into_slot(
+                    self.st, s.cursor)
+                spent += n
+                if s.cursor.done:
+                    self.st, first = self.engine.prefill_finalize_slot(
+                        self.st, s.cursor)
+                    s.cursor = None
+                    s.req.phase = RequestPhase.DECODING
+                    s.append([first])
+                    self.trace.append(("prefill_done", s.req.request_id, i))
+            if spent and spent >= self.prefill_budget:
+                break
+        if spent:
+            self.stats["prefill_tokens"] += spent
+        return spent
+
     # ------------------------------------------------------------------
     def tick(self) -> bool:
-        """One scheduler round: evict, admit, step.  Returns True when a
-        decode step ran (False = idle; nothing active right now)."""
+        """One scheduler round: evict, admit, pump prefill chunks (when
+        interleaving), step the decoding slots.  Returns True when any
+        work ran — a decode step or prefill progress (False = idle)."""
         # evictions: cancellation first, then natural completion (a slot
         # can satisfy its stop condition during the previous tick's step),
         # then deadline misses — an in-flight request past its deadline_s
-        # is evicted with its partial tokens, same as an expired waiter
+        # is evicted with its partial tokens, same as an expired waiter.
+        # All three apply to PREFILLING slots too: eviction drops the
+        # cursor (pages released via _evict; registered prefix blocks
+        # stay cached) and the request reports whatever it has (nothing).
         now = self.clock()
         for i, s in enumerate(self.slots):
             if s is None:
@@ -233,20 +328,29 @@ class ContinuousScheduler:
             elif s.req.deadline_s is not None and s.req.deadline_s < now:
                 self._evict(i, "deadline")
         self._admit()
+        prefilled = self._pump_prefill() if self.prefill_budget else 0
 
-        active = np.array([s is not None for s in self.slots], bool)
+        # decode: slots mid-prefill have no automaton state yet and sit
+        # this phase out (their device rows are neutral — masked steps
+        # treat them exactly like empty slots)
+        active = np.array([s is not None and s.cursor is None
+                           for s in self.slots], bool)
         if not active.any():
-            return False
+            return prefilled > 0
         groups = self.engine.select_mode_rows(self.st, active)
         for mode in sorted(groups):
             mask = groups[mode]
             self.st, so = self.engine.step_rows(self.st, mode, mask)
             self.stats["steps"] += 1
+            t_step = self.clock() if self.record_steps else 0.0
             for i in np.nonzero(mask)[0]:
                 s = self.slots[i]
                 s.append([int(x) for x in so.tokens[i, : so.counts[i]]])
                 s.accepts.append(int(so.accept_len[i]))
                 s.steps += 1
+                if self.record_steps:
+                    self.step_log.append((t_step, s.req.request_id,
+                                          int(so.counts[i])))
         return True
 
     def run(self) -> List[RequestOutput]:

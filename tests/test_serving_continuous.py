@@ -5,6 +5,13 @@ request alone through ``SpecPVEngine.generate`` (slot independence +
 per-slot mode automaton), slots are reused the moment a request evicts,
 admission respects capacity and priority, and cancellation mid-flight
 frees the slot.
+
+Chunked-prefill interleaving (``prefill_budget``): interleaved outputs
+are token-identical to blocking admission (absolute chunk boundaries),
+per-tick prefill work is bounded (jitter bound, frozen clock), decode
+steps keep flowing while a long prompt prefills, and a mid-prefill
+request honours deadlines — eviction releases its page references while
+prompt blocks already registered stay in the prefix cache.
 """
 import jax
 import numpy as np
@@ -14,7 +21,7 @@ from repro.configs import get_config
 from repro.core import SpecPVEngine
 from repro.core.draft import init_draft_params
 from repro.models import api
-from repro.serving import Request
+from repro.serving import Request, RequestPhase
 from repro.serving.scheduler import ContinuousScheduler, trim_output
 
 pytestmark = [pytest.mark.serving, pytest.mark.slow]
@@ -197,6 +204,167 @@ def test_cancel_before_arrival_clamps_latency(tiny, engine2):
     out = sched.outputs["early-cancel"]
     assert out.finish_reason == "cancelled" and not out.finished
     assert out.latency_s == 0.0
+
+
+@pytest.fixture(scope="module")
+def engine2p(tiny, small_spec, small_dcfg):
+    """Paged + prefix-cache engine for interleaved-admission tests."""
+    cfg, params, dparams = tiny
+    return SpecPVEngine(cfg, small_spec, small_dcfg, params, dparams,
+                        batch=2, max_len=512, partial_verification=True,
+                        paged=True)
+
+
+def test_interleaved_identical_to_blocking(tiny, engine2):
+    """Chunked-prefill interleaving must not change a single token vs
+    blocking admission: chunk boundaries stay absolute, so both paths run
+    the identical prefill schedule (contiguous KV layout)."""
+    cfg, _, _ = tiny
+    outs = {}
+    for budget in (None, 64):
+        reqs = [_mk_req(cfg, "a", 48, 12, seed=2, arrival_s=0.0),
+                _mk_req(cfg, "b", 160, 12, seed=3, arrival_s=0.0),
+                _mk_req(cfg, "c", 96, 12, seed=4, arrival_s=0.0)]
+        sched = ContinuousScheduler(engine2, prefill_chunk=64,
+                                    prefill_budget=budget)
+        for r in reqs:
+            sched.submit(r)
+        sched.run()
+        assert all(r.phase is RequestPhase.FINISHED for r in reqs)
+        outs[budget] = {r.request_id: sched.outputs[r.request_id].tokens
+                        for r in reqs}
+    for rid, ref in outs[None].items():
+        assert np.array_equal(outs[64][rid], ref), rid
+
+
+@pytest.mark.paged
+@pytest.mark.prefix
+def test_interleaved_paged_prefix_midprefill_sharing(tiny, engine2p):
+    """Paged + prefix-cache interleaving: a later arrival must be able to
+    attach prompt blocks that an *in-progress* prefill already registered
+    (mid-prefill registration), and every output must still equal the
+    blocking run's."""
+    cfg, _, _ = tiny
+    bs = engine2p.spec.block_size
+    rng = np.random.default_rng(7)
+    shared = rng.integers(0, cfg.vocab_size, (8 * bs,)).astype(np.int32)
+    tails = [rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+             for n in (40, 24)]
+    prompts = [np.concatenate([shared, t]).astype(np.int32) for t in tails]
+
+    outs, matched = {}, {}
+    for budget in (None, 64):
+        now = {"t": 0.0}
+        sched = ContinuousScheduler(engine2p, prefill_chunk=64,
+                                    prefill_budget=budget,
+                                    clock=lambda: now["t"])
+        pre_matched = engine2p.prefix_stats()["blocks_matched"]
+        reqs = [Request(request_id=f"r{i}", prompt=p, max_new_tokens=10,
+                        arrival_s=float(i))     # r1 arrives one tick later
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            sched.submit(r)
+        while sched.has_work():
+            sched.tick()
+            now["t"] += 1.0
+        outs[budget] = {r.request_id: sched.outputs[r.request_id].tokens
+                        for r in reqs}
+        matched[budget] = (engine2p.prefix_stats()["blocks_matched"]
+                          - pre_matched)
+    for rid, ref in outs[None].items():
+        assert np.array_equal(outs[64][rid], ref), rid
+    # r1 was admitted while r0 was still prefilling (168 tokens over 3
+    # ticks at 64/tick), so its prefix hit can only have come from blocks
+    # r0 registered mid-prefill
+    assert matched[64] >= 4
+
+
+def test_interleave_jitter_bound_and_decode_progress(tiny, engine2):
+    """Frozen-clock jitter bound: with ``prefill_budget=64`` no tick may
+    run more than max(budget, chunk) prefill tokens, a 320-token prompt
+    spreads over >= 5 ticks (PREFILLING phase visible throughout), and
+    the already-decoding request keeps receiving tokens in those same
+    ticks — the inter-token stall a blocking admission would inject is
+    gone."""
+    cfg, _, _ = tiny
+    now = {"t": 0.0}
+    sched = ContinuousScheduler(engine2, prefill_chunk=64,
+                                prefill_budget=64,
+                                clock=lambda: now["t"])
+    short = _mk_req(cfg, "short", 48, 24, seed=20, arrival_s=0.0)
+    long = _mk_req(cfg, "long", 320, 8, seed=21, arrival_s=1.5)
+    sched.submit(short)
+    sched.submit(long)
+
+    per_tick = []                       # (prefill_tokens, short_steps_gain,
+                                        #  long_phase_during_tick)
+    while sched.has_work():
+        pre = sched.stats["prefill_tokens"]
+        s_short = next((s.steps for s in sched.slots
+                        if s and s.req.request_id == "short"), None)
+        sched.tick()
+        gain = next((s.steps - s_short for s in sched.slots
+                     if s and s.req.request_id == "short"
+                     and s_short is not None), 0)
+        per_tick.append((sched.stats["prefill_tokens"] - pre, gain,
+                         long.phase))
+        now["t"] += 1.0
+
+    assert all(p <= 64 for p, _, _ in per_tick)          # jitter bound
+    # 320 tokens = 5 chunks: the long request is still PREFILLING at the
+    # end of the 4 ticks that ran chunks 1..4 (chunk 5 finalises it)
+    prefilling = [t for t in per_tick if t[2] is RequestPhase.PREFILLING]
+    assert len(prefilling) >= 4
+    # decode interleaves: the short request gained tokens in ticks where
+    # the long prompt was still mid-prefill
+    assert any(gain > 0 for _, gain, ph in prefilling
+               if ph is RequestPhase.PREFILLING)
+    assert sched.outputs["short"].finished
+    assert sched.outputs["long"].finished
+
+
+@pytest.mark.paged
+@pytest.mark.prefix
+def test_midprefill_deadline_eviction_releases_pages(tiny, engine2p):
+    """A request whose deadline passes mid-prefill is evicted with zero
+    tokens, its slot page references (trunk + draft) are released, and
+    only the prompt blocks it already registered stay — pinned by the
+    prefix cache alone, fully reclaimable.  The freed slot then serves a
+    fresh request normally."""
+    cfg, _, _ = tiny
+    al, dal = engine2p._page_alloc, engine2p._draft_alloc
+    now = {"t": 0.0}
+    sched = ContinuousScheduler(engine2p, prefill_chunk=64,
+                                prefill_budget=64,
+                                clock=lambda: now["t"])
+    req = _mk_req(cfg, "dl", 168, 16, seed=30, arrival_s=0.0,
+                  deadline_s=0.5)
+    sched.submit(req)
+    assert sched.tick()                     # admit + first chunk only
+    assert req.phase is RequestPhase.PREFILLING
+    assert "dl" not in sched.outputs
+    assert al.count(0) > 0                  # slot holds its page plan
+
+    now["t"] = 1.0                          # deadline passes mid-prefill
+    sched.tick()
+    out = sched.outputs["dl"]
+    assert out.finish_reason == "deadline" and not out.finished
+    assert len(out.tokens) == 0 and out.slot >= 0
+    assert al.count(0) == 0 and dal.count(0) == 0
+    # the first chunk registered 4 full blocks; they stay cached (cache
+    # refs only) and are reclaimable on demand
+    n_cached = len(engine2p._prefix)
+    assert n_cached >= 4
+    assert al.in_use == n_cached and al.idle == n_cached
+    engine2p.reclaim_pages(1 << 30)
+    assert al.in_use == 0 and dal.in_use == 0
+
+    fresh = _mk_req(cfg, "fresh", 48, 6, seed=31, arrival_s=1.0)
+    sched.submit(fresh)
+    while sched.has_work():
+        sched.tick()
+        now["t"] += 1.0
+    assert sched.outputs["fresh"].finished
 
 
 def test_first_eos_tracked_incrementally(tiny, engine2):

@@ -1,0 +1,119 @@
+#!/usr/bin/env python3
+"""Docs consistency checker (the CI ``docs`` job).
+
+Two classes of drift are caught:
+
+* **Broken links** — every relative markdown link in ``README.md``,
+  ``tests/README.md`` and ``docs/*.md`` must resolve to an existing
+  file; ``#anchor`` fragments must match a heading slug in the target
+  document (GitHub slug rules: lowercase, punctuation stripped, spaces
+  to dashes).
+* **Stale symbol references** — docs cross-reference code as
+  ``path/to/file.py:Symbol`` or ``file.py:Class.method`` inside
+  backticks.  Every referenced file must exist and every dotted name
+  component must be defined there (``def``/``class`` at any indent, or
+  a module-level assignment/annotation), so renaming a documented
+  symbol without updating the docs fails CI.
+
+Run from anywhere:  python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+REF_RE = re.compile(r"`([\w./-]+\.py):([A-Za-z_][\w.]*)`")
+FENCE_RE = re.compile(r"^```.*?^```", re.M | re.S)
+
+
+def doc_files() -> list[Path]:
+    docs = sorted((ROOT / "docs").glob("*.md"))
+    return [ROOT / "README.md", ROOT / "tests" / "README.md", *docs]
+
+
+def slugify(heading: str) -> str:
+    h = heading.strip().lower()
+    h = re.sub(r"[`*_~]", "", h)
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+_HEADINGS: dict = {}
+
+
+def headings(path: Path) -> set:
+    if path not in _HEADINGS:
+        _HEADINGS[path] = {
+            slugify(line.lstrip("#"))
+            for line in FENCE_RE.sub("", path.read_text()).splitlines()
+            if line.startswith("#")}
+    return _HEADINGS[path]
+
+
+def symbol_defined(src: str, name: str) -> bool:
+    pat = re.compile(
+        rf"^\s*(?:def|class)\s+{re.escape(name)}\b"
+        rf"|^{re.escape(name)}\s*[:=]", re.M)
+    return bool(pat.search(src))
+
+
+def check_file(md: Path, text: str, errors: list) -> None:
+    rel = md.relative_to(ROOT)
+
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, anchor = target.partition("#")
+        tgt = (md.parent / path_part).resolve() if path_part else md
+        if path_part and not tgt.exists():
+            errors.append(f"{rel}: broken link ({target})")
+            continue
+        if anchor and tgt.suffix == ".md" and anchor not in headings(tgt):
+            errors.append(f"{rel}: link anchor #{anchor} not a heading "
+                          f"of {tgt.relative_to(ROOT)}")
+
+    srcs: dict = {}
+    for m in REF_RE.finditer(text):
+        fname, sym = m.groups()
+        f = ROOT / fname
+        if not f.exists():
+            errors.append(f"{rel}: reference `{fname}:{sym}` — no such "
+                          f"file {fname}")
+            continue
+        if f not in srcs:
+            srcs[f] = f.read_text()
+        for part in sym.split("."):
+            if not symbol_defined(srcs[f], part):
+                errors.append(f"{rel}: reference `{fname}:{sym}` — "
+                              f"`{part}` is not defined in {fname}")
+                break
+
+
+def main() -> int:
+    errors: list = []
+    files = doc_files()
+    missing = [f for f in files if not f.exists()]
+    for f in missing:
+        errors.append(f"{f.relative_to(ROOT)}: missing")
+    n_refs = n_links = 0
+    for md in files:
+        if md.exists():
+            body = FENCE_RE.sub("", md.read_text())
+            n_refs += len(REF_RE.findall(body))
+            n_links += len(LINK_RE.findall(body))
+            check_file(md, body, errors)
+    for e in errors:
+        print(f"ERROR: {e}")
+    print(f"checked {len(files) - len(missing)} docs: {n_links} links, "
+          f"{n_refs} code references -> "
+          f"{'FAIL' if errors else 'ok'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
