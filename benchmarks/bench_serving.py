@@ -38,12 +38,24 @@ the identical request set with token-identical outputs (verified); the
 report compares per-request decode-step gaps (p50/p95 and jitter =
 p95 - p50, from the scheduler's ``step_log``) and request latency.
 
+``--fused`` A/Bs grouped-per-mode vs fused decode ticks on a
+mixed-length Poisson workload straddling the partial budget (so
+in-flight slots routinely diverge into distinct SpecPV modes): grouped
+scheduling runs one batch-wide masked step per distinct mode per tick,
+the fused step (``ServingConfig(fused_step=True)``, the default) folds
+the whole mode mix into a single jitted dispatch.  The run reports the
+distinct-modes-per-tick histogram, jitted dispatches per decode tick,
+per-mode stepped rows, and decode-step gap p50/p95, and verifies the
+two schedules produce token-identical outputs.
+
 Run:  PYTHONPATH=src python benchmarks/bench_serving.py --requests 8
       PYTHONPATH=src python benchmarks/bench_serving.py --requests 8 --paged
       PYTHONPATH=src python benchmarks/bench_serving.py --requests 8 \
           --prefix-share
       PYTHONPATH=src python benchmarks/bench_serving.py --requests 8 \
           --interleave
+      PYTHONPATH=src python benchmarks/bench_serving.py --requests 8 \
+          --fused
 """
 import argparse
 import time
@@ -242,6 +254,105 @@ def run_interleave(args, cfg, dcfg, params, dparams, corpus, spec,
                 for m, r in results.items()])
 
 
+def run_fused(args, cfg, dcfg, params, dparams, corpus, spec, contexts):
+    """Grouped-per-mode vs fused decode ticks on one engine (shared jit
+    compiles): the identical mixed Poisson request set straddles the
+    partial budget, so in-flight slots routinely want different SpecPV
+    modes in the same tick.  Grouped scheduling pays one batch-wide
+    masked dispatch per distinct mode; the fused step folds the whole
+    mode mix into one.  Reports the distinct-modes-per-tick histogram,
+    jitted dispatches per decode tick, per-mode stepped rows, and
+    decode-step gap p50/p95 — outputs are verified token-identical."""
+    rng = np.random.default_rng(args.seed)
+    reqs = make_requests(corpus, contexts, args.requests, args.rate, rng,
+                         args.max_new)
+    max_len = max(contexts) + args.max_new + 128
+    eng = SpecPVEngine(cfg, spec, dcfg, params, dparams, batch=args.batch,
+                       max_len=max_len, partial_verification=True,
+                       paged=args.paged,
+                       num_pages=args.num_pages or None)
+    print(f"fused A/B: {args.requests} requests, contexts {contexts} "
+          f"(partial budget {spec.partial_budget_tokens} tokens), "
+          f"batch {args.batch}" + (" (paged)" if args.paged else ""))
+    if not args.no_warmup:
+        # warm BOTH scheduling paths on the exact timed request set (all
+        # arrivals immediate): grouped ticks compile the uniform step
+        # variants, fused ticks compile every mode-MIX variant the real
+        # schedule will produce — otherwise one arm pays first-compiles
+        # inside its timed region.  (Each ContinuousScheduler boot
+        # resets the paged engine's allocators and prefix cache, so no
+        # KV state leaks between warmup and the timed arms, or between
+        # the arms.)
+        for f in (False, True):
+            warm = ContinuousScheduler(eng, prefill_chunk=64, fused=f)
+            for _, r in reqs:
+                warm.submit(Request(request_id=f"warm-{r.request_id}",
+                                    prompt=r.prompt,
+                                    max_new_tokens=r.max_new_tokens))
+            warm.run()
+
+    results = {}
+    for mode, fused in (("grouped", False), ("fused", True)):
+        sched = ContinuousScheduler(eng, prefill_chunk=64, fused=fused,
+                                    record_steps=True)
+        t0 = time.time()
+        for off, r in reqs:
+            sched.submit(Request(request_id=r.request_id, prompt=r.prompt,
+                                 max_new_tokens=r.max_new_tokens,
+                                 eos_id=r.eos_id, arrival_s=t0 + off))
+        outs = sched.run()
+        wall = time.time() - t0
+        toks = sum(len(o.tokens) for o in outs)
+        dispatches = int(sched.stats["steps"])
+        hist = {int(k.rsplit("_", 1)[1]): int(v)
+                for k, v in sched.stats.items()
+                if k.startswith("ticks_modes_")}
+        ticks = max(sum(hist.values()), 1)
+        mode_rows = {k[len("mode_rows_"):]: int(v)
+                     for k, v in sched.stats.items()
+                     if k.startswith("mode_rows_")}
+        gaps = step_gap_stats(sched.step_log)
+        g50, g95 = percentiles(gaps) if gaps.size else (0.0, 0.0)
+        results[mode] = dict(outs=outs, tput=toks / wall,
+                             dispatches=dispatches, ticks=ticks,
+                             hist=hist, mode_rows=mode_rows,
+                             g50=g50, g95=g95)
+        print(f"{mode:>8}: {toks} tokens in {wall:.1f}s -> "
+              f"{toks / wall:.1f} tok/s; {dispatches} dispatches over "
+              f"{ticks} decode ticks ({dispatches / ticks:.2f}/tick)")
+        print(f"{'':>8}  distinct-modes-per-tick histogram: "
+              + ", ".join(f"{k} mode{'s' if k > 1 else ''}: {hist[k]}"
+                          for k in sorted(hist))
+              + f"; mode rows: {mode_rows}")
+        print(f"{'':>8}  decode-step gap p50={g50 * 1e3:.1f}ms "
+              f"p95={g95 * 1e3:.1f}ms over {gaps.size} gaps")
+
+    if not args.no_check:
+        grp = {o.request_id: o.tokens for o in results["grouped"]["outs"]}
+        for o in results["fused"]["outs"]:
+            assert np.array_equal(o.tokens, grp[o.request_id]), \
+                f"{o.request_id}: fused != grouped"
+        print("losslessness: fused outputs token-identical to grouped "
+              "per-mode scheduling")
+    rg, rf = results["grouped"], results["fused"]
+    print(f"dispatches/tick: {rf['dispatches'] / rf['ticks']:.2f} fused vs "
+          f"{rg['dispatches'] / rg['ticks']:.2f} grouped "
+          f"({rg['dispatches'] / max(rf['dispatches'], 1):.2f}x fewer "
+          f"dispatches); decode-gap p95 "
+          f"{rf['g95'] * 1e3:.1f}ms vs {rg['g95'] * 1e3:.1f}ms")
+    out = ensure_dir(RESULTS_DIR)
+    write_rows(f"{out}/bench_serving_fused.csv",
+               ["mode", "tok_s", "dispatches", "decode_ticks",
+                "dispatches_per_tick", "gap_p50_ms", "gap_p95_ms",
+                "ticks_1_mode", "ticks_2_modes", "ticks_3_modes"],
+               [[m, f"{r['tput']:.2f}", r["dispatches"], r["ticks"],
+                 f"{r['dispatches'] / r['ticks']:.3f}",
+                 f"{r['g50'] * 1e3:.2f}", f"{r['g95'] * 1e3:.2f}",
+                 r["hist"].get(1, 0), r["hist"].get(2, 0),
+                 r["hist"].get(3, 0)]
+                for m, r in results.items()])
+
+
 def run_prefix_share(args, cfg, dcfg, params, dparams, corpus, spec):
     """Shared-system-prompt workload: paged continuous scheduler with the
     copy-on-write prefix cache on vs off (identical request set)."""
@@ -350,6 +461,10 @@ def main():
     ap.add_argument("--interleave", action="store_true",
                     help="A/B blocking admission vs chunked-prefill "
                          "interleaving: decode-step gap p50/p95 + jitter")
+    ap.add_argument("--fused", action="store_true",
+                    help="A/B grouped-per-mode vs fused decode ticks: "
+                         "distinct-modes-per-tick histogram, jitted "
+                         "dispatches per tick, decode-gap p50/p95")
     ap.add_argument("--prefill-budget", type=int, default=64,
                     help="interleave: prefill tokens per tick (>= the "
                          "64-token prefill chunk; the per-tick bound is "
@@ -380,6 +495,12 @@ def main():
         contexts = args.contexts or [64, 512, 96, 384, 224]
         run_interleave(args, cfg, dcfg, params, dparams, corpus, spec,
                        contexts)
+        return
+    if args.fused:
+        # straddle the partial budget so in-flight slots diverge:
+        # short prompts stay in Full, long ones cycle Refresh/Partial
+        contexts = args.contexts or [64, 192, 96, 256, 224]
+        run_fused(args, cfg, dcfg, params, dparams, corpus, spec, contexts)
         return
     args.contexts = args.contexts or [64, 192, 96, 160, 224]
     rng = np.random.default_rng(args.seed)

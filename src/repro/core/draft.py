@@ -156,6 +156,37 @@ def draft_extend(cfg: ModelConfig, dcfg: DraftConfig, dp: Dict,
     return cache, h_last, logits_last
 
 
+def draft_phase(cfg: ModelConfig, dcfg: DraftConfig, dp: Dict, target_params,
+                tree: TreeSpec, cache: Dict, ext_tokens, ext_feats, ext_len,
+                active=None, sample_key=None, temperature: float = 0.0):
+    """The draft half of one SpecPV step — extend the draft cache with
+    the previous step's accepted tokens, then draft a candidate tree
+    from the last valid entry.
+
+    Drafting is *mode-invariant*: it depends only on the accepted-token
+    stream (ext queue) and the draft cache, never on whether the target
+    will verify fully, partially, or refresh — which is why the fused
+    multi-mode step (``core.engine.SpecPVEngine.step_fused``) runs it
+    exactly once for every row regardless of the tick's mode mix.
+
+    ext_tokens: [B, E]; ext_feats: [B, E, 3d]; ext_len: [B];
+    active: optional [B] bool (dead rows write nothing).
+    Returns (cache, tree_tokens [B, T], aux) — aux is the per-node draft
+    log-probs (greedy) or logits (sampling), as in ``tree_draft``.
+    """
+    emax = ext_tokens.shape[1]
+    ext_valid = jnp.arange(emax)[None] < ext_len[:, None]
+    cache, h_root, logits_root = draft_extend(
+        cfg, dcfg, dp, target_params, cache, ext_tokens, ext_feats,
+        ext_valid, active=active)
+    last_tok = jnp.take_along_axis(
+        ext_tokens, jnp.maximum(ext_len - 1, 0)[:, None], axis=1)[:, 0]
+    tree_tokens, aux = tree_draft(
+        cfg, dcfg, dp, target_params, cache, tree, h_root, logits_root,
+        last_tok, sample_key=sample_key, temperature=temperature)
+    return cache, tree_tokens, aux
+
+
 def tree_draft(cfg: ModelConfig, dcfg: DraftConfig, dp: Dict, target_params,
                cache: Dict, tree: TreeSpec, h_root, logits_root, last_token,
                sample_key=None, temperature: float = 1.0

@@ -16,8 +16,13 @@ State architectures (ssm/hybrid) run chain speculation with native
 (DESIGN.md §Arch-applicability).
 
 Continuous-batching support (see docs/architecture.md, docs/serving.md):
-batch rows are independent slots.  ``step_rows`` runs one masked jitted
-step over any subset of rows; ``prefill_begin_slot`` /
+batch rows are independent slots.  The per-slot mode is an *operand*,
+not control flow: ``step_fused`` runs ONE masked jitted step over any
+subset of rows with a per-row mode vector ``[B] int8``
+(MODE_FULL/MODE_REFRESH/MODE_PARTIAL) — a tick whose slots want three
+different modes still costs a single dispatch.  ``step`` (lock-step)
+and ``step_rows`` (grouped per-mode, kept for A/B) are thin wrappers
+over the same fused path.  ``prefill_begin_slot`` /
 ``prefill_step_into_slot`` / ``prefill_finalize_slot`` make per-slot
 prefill *resumable*, so the serving scheduler can interleave one prefill
 chunk at a time with decode steps (Sarathi/vLLM-style chunked prefill)
@@ -75,12 +80,21 @@ def request_token_need(prompt_len: int, max_new_tokens: int,
     return prompt_len + 1 + max_new_tokens + buffer_size + 2 * emax + 2
 
 
+# per-row verification modes: the SpecPV automaton as an operand of the
+# fused step (``SpecPVEngine.step_fused``) instead of control flow
+MODE_FULL, MODE_REFRESH, MODE_PARTIAL = 0, 1, 2
+MODE_IDS = {"full": MODE_FULL, "refresh": MODE_REFRESH,
+            "partial": MODE_PARTIAL}
+MODE_NAMES = {v: k for k, v in MODE_IDS.items()}
+
+
 @dataclass
 class StepOutput:
     tokens: np.ndarray          # [B, D+1] accepted tokens (path + bonus)
     counts: np.ndarray          # [B] number of valid tokens (= accept+1)
     accept_len: np.ndarray      # [B]
-    mode: str
+    mode: str                   # single mode name, or "fused" for a mix
+    modes: Optional[np.ndarray] = None  # [B] int8 per-row mode (fused path)
 
 
 @dataclass
@@ -118,6 +132,9 @@ class PrefillCursor:
     n_full: int = 0                     # full prompt blocks (registrable)
     chain_keys: List[bytes] = field(default_factory=list)
     chain_entries: List[Any] = field(default_factory=list)
+    # whole-prompt tail-entry hit: the cursor is born exhausted and
+    # finalise boots straight from the stored first token (no logits)
+    boot_token: Optional[int] = None
 
     @property
     def done(self) -> bool:
@@ -227,9 +244,10 @@ class SpecPVEngine:
         self._prefix = (kvc.PrefixCache(spec.block_size)
                         if self.paged and prefix_cache else None)
         # slots with fork-derived sharing still alive: only these can
-        # hold a shared page inside a write window (prefix sharing alone
-        # never does), so pre-step CoW scans exactly this set — empty
-        # set, zero cost
+        # hold a shared page inside a write window (admission sharing
+        # never does — full prefix blocks sit below every write window
+        # and a tail-entry attach COPIES its block), so pre-step CoW
+        # scans exactly this set — empty set, zero cost
         self._forked_slots: set = set()
         self._prefill_skipped_tokens = 0
         if partial_verification is None:
@@ -245,6 +263,7 @@ class SpecPVEngine:
         self.traffic = TrafficMeter()
         self._pkv_active = False
         self._pkv_active_rows = np.zeros((batch,), bool)   # per-slot automaton
+        self.dispatches = 0             # jitted engine steps executed
         self._build_jits()
         # the destination state dies at the call site (callers rebind), so
         # donate it instead of materialising a second copy of the caches
@@ -279,28 +298,10 @@ class SpecPVEngine:
 
         sample = self.temperature > 0.0
 
-        def _draft_phase(params, dparams, st: EngineState, active,
-                         draft_key=None):
-            ext_valid = (jnp.arange(self.emax)[None]
-                         < st.ext_len[:, None])
-            dcache, h_root, logits_root = dr.draft_extend(
-                cfg, dcfg, dparams, params, st.dcache, st.ext_tokens,
-                st.ext_feats, ext_valid, active=active)
-            last_tok = jnp.take_along_axis(
-                st.ext_tokens, jnp.maximum(st.ext_len - 1, 0)[:, None],
-                axis=1)[:, 0]
-            tree_tokens, aux = dr.tree_draft(
-                cfg, dcfg, dparams, params, dcache, tree, h_root,
-                logits_root, last_tok, sample_key=draft_key,
-                temperature=self.temperature)
-            return dcache, tree_tokens, aux
-
-        def _post_accept(st, vin, out, path, acc, bonus, bonus_parent):
+        def _post_accept(st, vin, out, tree_tokens, path, acc, bonus):
             """Shared ext-queue + seq_len bookkeeping. Returns pieces."""
             b = bonus.shape[0]
             d = tree.depth
-            # accepted path tokens, compacted
-            tree_tokens = vin["tokens"][:, vin["tokens"].shape[1] - tree.size:]
             path_valid = path >= 0
             path_toks = jnp.take_along_axis(
                 tree_tokens, jnp.maximum(path, 0), axis=1)
@@ -311,12 +312,13 @@ class SpecPVEngine:
             newtoks = jnp.where(
                 jnp.arange(d + 1)[None] == acc[:, None],
                 bonus[:, None], jnp.pad(newtoks[:, : d + 1], ((0, 0), (0, 0))))
-            # ext feats: fused at [root_slot, path_slots[:-1].., bonus_parent]
+            # ext feats: fused at [root_slot, path_slots..] — node_slots
+            # carries the per-row layout, so this needs no width knowledge
             fused = out.features.fused_input()                # [B, S, 3d]
-            path_slots = jnp.where(path_valid,
-                                   vin["node_slots"][:, 0:1] * 0
-                                   + vin["tokens"].shape[1] - tree.size
-                                   + jnp.maximum(path, 0), 0)
+            path_slots = jnp.where(
+                path_valid,
+                jnp.take_along_axis(vin["node_slots"],
+                                    jnp.maximum(path, 0), axis=1), 0)
             fslots = jnp.concatenate([vin["root_slot"][:, None], path_slots],
                                      axis=1)                  # [B, D+1]
             ext_feats = jnp.take_along_axis(fused, fslots[..., None], axis=1)
@@ -324,34 +326,62 @@ class SpecPVEngine:
             seq_len = st.seq_len + acc + 1
             return newtoks, ext_feats, ext_len, seq_len
 
-        def _step_attn(params, dparams, st: EngineState, active, *,
-                       mode: str):
+        def _step_fused(params, dparams, st: EngineState, active, modes, *,
+                        has_full: bool, has_partial: bool,
+                        has_refresh: bool):
+            """One fused multi-mode step over per-row `modes` [B] int8.
+
+            The static flags encode the tick's mode *mix* (which
+            branches exist at all), never which row runs what — so a
+            tick dispatches exactly one jitted step no matter how its
+            slots' automata diverge.  Per-row behaviour rides on the
+            mode vector: drafting is mode-invariant and runs once,
+            verification row-selects its context source
+            (``api.decode(mode="fused")``), and the commits/refresh are
+            masked epilogues.  Rows keep the exact operand layouts of
+            their single-mode step (``vf.build_verify_inputs_fused``),
+            so greedy outputs stay bit-identical to the grouped path.
+            """
             b = self.batch
             key_draft = key_accept = key_next = st.key
             if sample:
                 key_draft, key_accept, key_next = jax.random.split(st.key, 3)
-            dcache, tree_tokens, aux = _draft_phase(
-                params, dparams, st, active, key_draft if sample else None)
+            dcache, tree_tokens, aux = dr.draft_phase(
+                cfg, dcfg, dparams, params, tree, st.dcache, st.ext_tokens,
+                st.ext_feats, st.ext_len, active=active,
+                sample_key=key_draft if sample else None,
+                temperature=self.temperature)
 
-            if mode == "partial_verify":
-                xb = jnp.take_along_axis(
-                    st.pending, jnp.maximum(st.pending_len - 1, 0)[:, None],
-                    axis=1)
-                pend_in, plen_in = xb, jnp.ones((b,), jnp.int32)
-            elif mode == "refresh":
-                pend_in, plen_in = st.pending, st.pending_len
-            else:  # full
-                pend_in, plen_in = st.pending[:, :1], jnp.ones((b,), jnp.int32)
+            is_partial = modes == MODE_PARTIAL
+            is_refresh = modes == MODE_REFRESH
+            last_tok = jnp.take_along_axis(
+                st.pending, jnp.maximum(st.pending_len - 1, 0)[:, None],
+                axis=1)[:, 0]
+            if has_refresh:
+                # refresh rows verify their whole pending run; everyone
+                # else collapses to one pend slot holding the newest
+                # bonus — per-row widths inside one static shape
+                pend_in = jnp.where(
+                    is_refresh[:, None], st.pending,
+                    jnp.zeros_like(st.pending).at[:, 0].set(last_tok))
+                plen_in = jnp.where(is_refresh, st.pending_len, 1)
+                p_eff = jnp.where(is_refresh, self.pmax, 1).astype(jnp.int32)
+            else:
+                pend_in = last_tok[:, None]
+                plen_in = jnp.ones((b,), jnp.int32)
+                p_eff = jnp.ones((b,), jnp.int32)
 
-            vin = vf.build_verify_inputs(tree, pend_in, plen_in, tree_tokens,
-                                         st.seq_len, active=active)
-            want_refresh = mode in ("refresh", "init_partial")
+            vin = vf.build_verify_inputs_fused(
+                tree, pend_in, plen_in, p_eff, tree_tokens, st.seq_len,
+                active=active)
+            decode_kind = ("fused" if has_full and has_partial
+                           else ("full" if has_full else "partial"))
             out = api.decode(
                 cfg, params, vin["tokens"], vin["positions"], st.cache,
-                mode=("partial" if mode == "partial_verify" else "full"),
-                self_mask=vin["self_mask"],
-                pkv=(st.pkv_k, st.pkv_v, st.pkv_pos),
-                spec=spec, emit_queries=want_refresh)
+                mode=decode_kind, self_mask=vin["self_mask"],
+                pkv=(st.pkv_k, st.pkv_v, st.pkv_pos), spec=spec,
+                emit_queries=has_refresh,
+                partial_rows=is_partial if decode_kind == "fused" else None)
 
             if sample:
                 from repro.core.sampling import tree_speculative_sample
@@ -359,57 +389,96 @@ class SpecPVEngine:
                     tree, tree_tokens, aux, out.logits, vin["root_slot"],
                     vin["node_slots"], key_accept,
                     temperature=self.temperature)
-                bonus_parent = vin["root_slot"]
             else:
-                path, acc, bonus, bonus_parent = tr.greedy_tree_accept(
+                path, acc, bonus, _ = tr.greedy_tree_accept(
                     tree, tree_tokens, out.logits, vin["root_slot"],
                     vin["node_slots"])
             newtoks, ext_feats, ext_len, seq_len = _post_accept(
-                st, vin, out, path, acc, bonus, bonus_parent)
+                st, vin, out, tree_tokens, path, acc, bonus)
 
-            p_in = pend_in.shape[1]
             slots, slot_valid = vf.commit_slots(tree, vin["pend_valid"],
-                                                path, p_in)
+                                                path, p_eff)
             ck, cv = vf.gather_new_kv(out.new_kv, slots, slot_valid)
             count = plen_in + acc
 
             cache = st.cache
             pkv_k, pkv_v, pkv_pos = st.pkv_k, st.pkv_v, st.pkv_pos
             buf_len = st.buf_len
-            if mode == "partial_verify":
-                cpos = jnp.take_along_axis(vin["positions"], slots, axis=1)
-                pkv_k, pkv_v, pkv_pos, buf_len = vf.append_buffer(
+            if has_partial:
+                # partial rows append their accepted run to the pkv
+                # buffer.  The compaction puts valid entries first and a
+                # partial row commits at most 1 + depth of them, so the
+                # buffer write is sliced to that width — the exact shape
+                # a single-mode partial step uses (and the guarantee the
+                # buffer-overflow guard in mode_for is sized for).
+                wb = 1 + tree.depth
+                cpos = jnp.take_along_axis(vin["positions"],
+                                           slots[:, :wb], axis=1)
+                count_buf = (jnp.where(is_partial, count, 0)
+                             if has_full else count)
+                nk, nv, npos, nbl = vf.append_buffer(
                     pkv_k, pkv_v, pkv_pos, spec.partial_budget_tokens,
-                    buf_len, ck, cv, cpos, count)
-                pending = jax.vmap(
+                    buf_len, ck[:, :, :wb], cv[:, :, :wb], cpos, count_buf)
+                if has_full:   # non-partial rows keep their pkv bits
+                    selp = is_partial[None, :, None, None]
+                    pkv_k = jnp.where(selp[..., None], nk, pkv_k)
+                    pkv_v = jnp.where(selp[..., None], nv, pkv_v)
+                    pkv_pos = jnp.where(selp, npos, pkv_pos)
+                    buf_len = jnp.where(is_partial, nbl, buf_len)
+                else:
+                    pkv_k, pkv_v, pkv_pos, buf_len = nk, nv, npos, nbl
+            if has_full:
+                # full/refresh rows commit exact KV to the full cache;
+                # partial rows pass count 0 — their masked write lands
+                # beyond `length` (never read, overwritten by their own
+                # next refresh) and their summaries recompute to the
+                # same bits, so length/summaries stay untouched
+                count_full = (jnp.where(is_partial, 0, count)
+                              if has_partial else count)
+                cache = vf.append_full_cache(cache, ck, cv, count_full, spec)
+            if has_refresh:
+                # masked epilogue: rebuild refresh rows' partial cache
+                # from this step's queries (Quest retrieval over the
+                # just-committed cache), leave everyone else's alone
+                t_sz = tree.size
+                node_w = jnp.zeros((b, t_sz))
+                node_w = jnp.where(
+                    (jnp.arange(t_sz)[None, None, :]
+                     == jnp.maximum(path, 0)[:, :, None])
+                    & (path >= 0)[:, :, None], 1.0, 0.0).sum(1)
+                s_all = vin["tokens"].shape[1]
+                qw = jnp.zeros((b, s_all), jnp.float32)
+                qw = qw.at[:, : pend_in.shape[1]].set(
+                    vin["pend_valid"].astype(jnp.float32))
+                qw = jax.vmap(lambda qr, idx, w: qr.at[idx].add(w))(
+                    qw, vin["node_slots"], node_w)
+                pk, pv, ppos = vf.refresh_partial_from_queries(
+                    cfg, spec, out.queries, qw, cache)
+                pad = spec.buffer_size
+                rk = jnp.pad(pk, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+                rv = jnp.pad(pv, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+                rpos = jnp.pad(ppos, ((0, 0), (0, 0), (0, 0), (0, pad)),
+                               constant_values=-1)
+                selr = is_refresh[None, :, None, None]
+                pkv_k = jnp.where(selr[..., None], rk, pkv_k)
+                pkv_v = jnp.where(selr[..., None], rv, pkv_v)
+                pkv_pos = jnp.where(selr, rpos, pkv_pos)
+                buf_len = jnp.where(is_refresh, 0, buf_len)
+
+            pending_f = jnp.zeros_like(st.pending).at[:, 0].set(bonus)
+            if has_partial:
+                pending_p = jax.vmap(
                     lambda p_, n_, o_: jax.lax.dynamic_update_slice(
                         p_, n_, (o_,)))(st.pending, newtoks, st.pending_len)
-                pending_len = st.pending_len + acc + 1
+                plen_p = st.pending_len + acc + 1
+                if has_full:
+                    pending = jnp.where(is_partial[:, None], pending_p,
+                                        pending_f)
+                    pending_len = jnp.where(is_partial, plen_p, 1)
+                else:
+                    pending, pending_len = pending_p, plen_p
             else:
-                cache = vf.append_full_cache(cache, ck, cv, count, spec)
-                if want_refresh:
-                    # weight = valid pending + accepted nodes
-                    t = tree.size
-                    node_w = jnp.zeros((b, t))
-                    node_w = jnp.where(
-                        (jnp.arange(t)[None, None, :]
-                         == jnp.maximum(path, 0)[:, :, None])
-                        & (path >= 0)[:, :, None], 1.0, 0.0).sum(1)
-                    qw = jnp.concatenate(
-                        [vin["pend_valid"].astype(jnp.float32), node_w],
-                        axis=1)
-                    pk, pv, ppos = vf.refresh_partial_from_queries(
-                        cfg, spec, out.queries, qw, cache)
-                    pad = spec.buffer_size
-                    pkv_k = jnp.pad(pk, ((0, 0), (0, 0), (0, 0), (0, pad),
-                                         (0, 0)))
-                    pkv_v = jnp.pad(pv, ((0, 0), (0, 0), (0, 0), (0, pad),
-                                         (0, 0)))
-                    pkv_pos = jnp.pad(ppos, ((0, 0), (0, 0), (0, 0),
-                                             (0, pad)), constant_values=-1)
-                    buf_len = jnp.zeros((b,), jnp.int32)
-                pending = jnp.zeros_like(st.pending)
-                pending = pending.at[:, 0].set(bonus)
+                pending = pending_f
                 pending_len = jnp.ones((b,), jnp.int32)
 
             st2 = EngineState(
@@ -425,8 +494,11 @@ class SpecPVEngine:
             key_draft = key_accept = key_next = st.key
             if sample:
                 key_draft, key_accept, key_next = jax.random.split(st.key, 3)
-            dcache, tree_tokens, aux = _draft_phase(
-                params, dparams, st, active, key_draft if sample else None)
+            dcache, tree_tokens, aux = dr.draft_phase(
+                cfg, dcfg, dparams, params, tree, st.dcache, st.ext_tokens,
+                st.ext_feats, st.ext_len, active=active,
+                sample_key=key_draft if sample else None,
+                temperature=self.temperature)
             pend_in = st.pending[:, :1]
             plen_in = jnp.ones((b,), jnp.int32)
             vin = vf.build_verify_inputs(tree, pend_in, plen_in, tree_tokens,
@@ -439,13 +511,12 @@ class SpecPVEngine:
                     tree, tree_tokens, aux, out.logits, vin["root_slot"],
                     vin["node_slots"], key_accept,
                     temperature=self.temperature)
-                bonus_parent = vin["root_slot"]
             else:
-                path, acc, bonus, bonus_parent = tr.greedy_tree_accept(
+                path, acc, bonus, _ = tr.greedy_tree_accept(
                     tree, tree_tokens, out.logits, vin["root_slot"],
                     vin["node_slots"])
             newtoks, ext_feats, ext_len, seq_len = _post_accept(
-                st, vin, out, path, acc, bonus, bonus_parent)
+                st, vin, out, tree_tokens, path, acc, bonus)
             # advance state with [x_b] ++ accepted path (valid = 1 + acc)
             adv_toks = jnp.concatenate([pend_in, jnp.where(
                 path >= 0, jnp.take_along_axis(tree_tokens,
@@ -464,30 +535,39 @@ class SpecPVEngine:
                 key=key_next)
             return st2, (newtoks, acc + 1, acc)
 
-        def _masked(step_fn, **kw):
-            """Masked-step variant for continuous batching: the row merge
-            runs inside the jit and the input state is donated, so
-            untouched rows are preserved without materialising a second
-            copy of the caches."""
-            def fn(params, dparams, st, active):
-                st2, out = step_fn(params, dparams, st, active, **kw)
-                return merge_state_rows(active, st2, st), out
-            return jax.jit(fn, donate_argnums=(2,))
-
         if self.is_attn:
-            self._step_full = jax.jit(functools.partial(_step_attn,
-                                                        mode="full"))
-            self._step_refresh = jax.jit(functools.partial(_step_attn,
-                                                           mode="refresh"))
-            self._step_partial = jax.jit(
-                functools.partial(_step_attn, mode="partial_verify"))
-            self._step_full_m = _masked(_step_attn, mode="full")
-            self._step_refresh_m = _masked(_step_attn, mode="refresh")
-            self._step_partial_m = _masked(_step_attn, mode="partial_verify")
+            # every attention step — lock-step, grouped, or mixed — runs
+            # through the SAME fused impl; variants are keyed only by the
+            # tick's mode MIX (which masked branches exist at all), so a
+            # tick is always exactly one jitted dispatch.  The row merge
+            # runs inside the jit and the input state is donated, so
+            # untouched rows are preserved without materialising a
+            # second copy of the caches.
+            self._fused_impl = _step_fused
+            self._fused_jits: Dict[Tuple[bool, bool, bool], Any] = {}
         else:
             # no masked variant: continuous batching is attention-only
             # (merge_state_rows assumes the attention cache layout)
             self._step_state = jax.jit(_step_state)
+
+    def _fused_fn(self, has_full: bool, has_partial: bool,
+                  has_refresh: bool):
+        """The jitted fused-step variant for a mode mix (built lazily —
+        only mixes that actually occur compile)."""
+        key = (has_full, has_partial, has_refresh)
+        fn = self._fused_jits.get(key)
+        if fn is None:
+            impl = functools.partial(self._fused_impl, has_full=has_full,
+                                     has_partial=has_partial,
+                                     has_refresh=has_refresh)
+
+            def run(params, dparams, st, active, modes):
+                st2, out = impl(params, dparams, st, active, modes)
+                return merge_state_rows(active, st2, st), out
+
+            fn = jax.jit(run, donate_argnums=(2,))
+            self._fused_jits[key] = fn
+        return fn
 
     # ------------------------------------------------------------------
     def _init_pkv(self, b: int):
@@ -584,14 +664,24 @@ class SpecPVEngine:
         the final chunk's logits and seed the pending/extend queues.
         Shared by the batch path and the per-slot cursor finalise, so the
         two construct bit-identical automaton state."""
-        cfg = self.cfg
-        b = prev_feat.shape[0]
         if self.temperature > 0:
             bonus0 = jax.random.categorical(
                 jax.random.PRNGKey(11),
                 logits_last / self.temperature, axis=-1).astype(jnp.int32)
         else:
             bonus0 = jnp.argmax(logits_last, axis=-1).astype(jnp.int32)
+        return self._boot_state_from_token(cache, dcache, bonus0,
+                                           prev_feat, s0)
+
+    def _boot_state_from_token(self, cache: Dict, dcache: Dict, bonus0,
+                               prev_feat, s0: int) -> EngineState:
+        """Boot from an already-known first token (the tail-entry fast
+        path stores the greedy argmax at registration, so a whole-prompt
+        prefix hit rebuilds the identical automaton state with zero
+        prefill FLOPs)."""
+        cfg = self.cfg
+        b = prev_feat.shape[0]
+        bonus0 = jnp.asarray(bonus0, jnp.int32)
 
         pend = jnp.zeros((b, self.pmax), jnp.int32).at[:, 0].set(bonus0)
         ext_tokens = jnp.zeros((b, self.emax), jnp.int32).at[:, 0].set(bonus0)
@@ -711,8 +801,18 @@ class SpecPVEngine:
                             touch: bool = False) -> int:
         """Sharing-aware admission accounting: fresh pages the request
         would need right now — the cold-count minus the blocks the
-        prefix cache already holds (those attach by reference)."""
+        prefix cache already holds (those attach by reference).  A
+        whole-prompt tail-entry hit discounts every *full* block; the
+        tail block itself stays billed (its attach is a fresh-page
+        copy, so the page bill matches ``_attach_tail_slot`` exactly —
+        admission can never leave the slot owing a page)."""
         need = self.pages_needed(len(prompt), max_new_tokens)
+        if self._prefix is not None and self.temperature == 0.0:
+            tail = self._prefix.match_tail(np.asarray(prompt), touch=touch,
+                                           count=False)
+            if tail is not None:
+                bs = self.spec.block_size
+                return max(need - len(prompt) // bs, 0)
         return max(need - self.prefix_match_blocks(prompt, touch=touch), 0)
 
     def free_pages(self) -> int:
@@ -833,6 +933,16 @@ class SpecPVEngine:
         assert extra is None or self._prefix is None, \
             "prefix sharing cannot key per-request `extra` conditioning; " \
             "build the engine with prefix_cache=False"
+        # whole-prompt fast path: every full block chains AND the final
+        # partial block's exact tokens are registered — attach all of it
+        # (the tail page speculatively, CoW covers the divergent writes)
+        # and boot from the stored first token with ZERO prefill FLOPs
+        tail = (self._prefix.match_tail(prompt)
+                if self._prefix is not None and self.temperature == 0.0
+                else None)
+        if tail is not None:
+            return self._attach_tail_slot(st, slot, prompt, chunk, extra,
+                                          total_pages, tail)
         # attach BEFORE any reclaim: slot-referenced pages are never LRU
         # eviction candidates, so reclaiming for the fresh remainder
         # cannot cannibalise the chain this admission just matched
@@ -888,6 +998,130 @@ class SpecPVEngine:
                         else []),
             chain_entries=list(entries))
         return self.clear_slot_rows(st, slot), cur
+
+    @staticmethod
+    def _copy_pool_page(cache: Dict, src: int, dst: int, *,
+                        draft: bool) -> Dict:
+        """Device-side copy of one physical page's contents — every pool
+        key (KV and, for the trunk, the physical-page summaries) — from
+        page `src` to page `dst`.  Single source of the copy used by the
+        tail-entry attach and registration paths (``prepare_cow`` keeps
+        its own batched form)."""
+        out = dict(cache)
+        keys = kvc.DRAFT_POOL_KEYS if draft else kvc.PAGED_POOL_KEYS
+        for n in keys:
+            a = out[n]
+            out[n] = (a.at[dst].set(a[src]) if draft
+                      else a.at[:, dst].set(a[:, src]))
+        return out
+
+    def _attach_tail_slot(self, st: EngineState, slot: int,
+                          prompt: np.ndarray, chunk: int,
+                          extra: Optional[Dict], total_pages: int,
+                          tail) -> Tuple[EngineState, PrefillCursor]:
+        """Whole-prompt tail-entry hit: attach the full-block chain by
+        page-table reference, materialise the final partial block as a
+        device page COPY of the cached one, skip prefill entirely, and
+        boot from the entry's stored boundary feature + greedy first
+        token.  The tail block is copied (not ref-shared) because it
+        sits exactly where this slot's first decode commit lands —
+        copying at admission keeps the invariant that only *forked*
+        slots ever hold a shared page inside a write window (so
+        ``prepare_cow`` stays a free no-op for admission sharing) and
+        leaves no deferred page debt: the tail block is billed as a
+        fresh page by ``pages_needed_shared``, exactly like a non-tail
+        prefix hit's first uncached block."""
+        entries, te = tail
+        al, dal = self._page_alloc, self._draft_alloc
+        n_match = len(entries)
+        pt_host = np.zeros((self._nb_seq,), np.int32)
+        dpt_host = np.zeros((self._nb_seq,), np.int32)
+        al.attach(slot, [e.page for e in entries])
+        dal.attach(slot, [e.draft_page for e in entries])
+        pt_host[: n_match] = [e.page for e in entries]
+        dpt_host[: n_match] = [e.draft_page for e in entries]
+        fresh = total_pages - n_match          # incl. the tail block
+        if fresh > min(al.free, dal.free):
+            self.reclaim_pages(fresh - min(al.free, dal.free))
+        if fresh > min(al.free, dal.free):
+            al.free_slot(slot)              # roll the attach back
+            dal.free_slot(slot)
+            raise RuntimeError(
+                f"slot {slot}: request needs {fresh} fresh pages "
+                f"({n_match} shared), {al.free}/{dal.free} "
+                f"free (trunk/draft) of {al.capacity}")
+        pt_host[n_match: total_pages] = al.alloc(slot, fresh)
+        dpt_host[n_match: total_pages] = dal.alloc(slot, fresh)
+        # device-side page copy: the slot's private tail block takes the
+        # cached page's KV + summaries (draft likewise)
+        st = dc_replace(
+            st,
+            cache=self._copy_pool_page(st.cache, te.page,
+                                       int(pt_host[n_match]), draft=False),
+            dcache=self._copy_pool_page(st.dcache, te.draft_page,
+                                        int(dpt_host[n_match]), draft=True))
+        self._prefill_skipped_tokens += len(prompt)
+        row_cache: Dict = {"page_table": jnp.asarray(pt_host)[None],
+                           "length": jnp.full((1,), len(prompt), jnp.int32)}
+        for n in ("cross_k", "cross_v"):
+            if n in st.cache:
+                row_cache[n] = st.cache[n][:, slot: slot + 1]
+        row_dcache: Dict = {"page_table": jnp.asarray(dpt_host)[None],
+                            "length": jnp.full((1,), len(prompt),
+                                               jnp.int32)}
+        cur = PrefillCursor(
+            slot=slot, prompt=prompt, chunk=chunk, extra=extra,
+            off=len(prompt), prev_feat=jnp.asarray(te.feat)[None],
+            row_cache=row_cache, row_dcache=row_dcache,
+            pt_host=pt_host, dpt_host=dpt_host, total_pages=total_pages,
+            n_match=n_match, n_full=n_match, boot_token=te.first_token)
+        return self.clear_slot_rows(st, slot), cur
+
+    def _register_tail(self, st: EngineState, cur: PrefillCursor
+                       ) -> EngineState:
+        """Register a finished prompt's final *partial* block as a
+        whole-prompt tail entry, then immediately hand the registering
+        slot a private copy of that block (``cow_write`` + pool page
+        copy): the slot's next decode commit writes into this very
+        block, and the cached KV must stay frozen for future attaches.
+        Skipped for block-aligned prompts, incomplete chains, sampling
+        engines, or when no page is free for the copy."""
+        if not self.paged or self._prefix is None or self.temperature != 0:
+            return st
+        bs = self.spec.block_size
+        prompt = cur.prompt
+        n_full = len(prompt) // bs
+        rem = len(prompt) - n_full * bs
+        al, dal = self._page_alloc, self._draft_alloc
+        if rem == 0 or min(al.free, dal.free) < 1:
+            return st
+        if n_full and len(cur.chain_entries) < n_full:
+            return st          # chain incomplete: the tail'd be orphaned
+        parent = (cur.chain_entries[-1].key if n_full
+                  else kvc.PrefixCache._ROOT)
+        e = self._prefix.register_tail(
+            parent, prompt[n_full * bs:], n_full,
+            int(cur.pt_host[n_full]), int(cur.dpt_host[n_full]),
+            np.asarray(cur.prev_feat[0]),
+            int(np.asarray(jnp.argmax(cur.logits_last, axis=-1))[0]),
+            al, dal)
+        if e is None:
+            return st
+        for ent in cur.chain_entries:   # parent never older than the tail
+            ent.tick = e.tick
+        old, new = al.cow_write(cur.slot, n_full)
+        cache = self._copy_pool_page(st.cache, old, new, draft=False)
+        dold, dnew = dal.cow_write(cur.slot, n_full)
+        dcache = self._copy_pool_page(st.dcache, dold, dnew, draft=True)
+        cur.pt_host[n_full] = new
+        cur.dpt_host[n_full] = dnew
+        cur.row_cache = dict(cur.row_cache,
+                             page_table=cur.row_cache["page_table"]
+                             .at[0, n_full].set(new))
+        cur.row_dcache = dict(cur.row_dcache,
+                              page_table=cur.row_dcache["page_table"]
+                              .at[0, n_full].set(dnew))
+        return dc_replace(st, cache=cache, dcache=dcache)
 
     def prefill_step_into_slot(self, st: EngineState, cur: PrefillCursor
                                ) -> Tuple[EngineState, int]:
@@ -964,13 +1198,24 @@ class SpecPVEngine:
     def prefill_finalize_slot(self, st: EngineState, cur: PrefillCursor
                               ) -> Tuple[EngineState, int]:
         """Commit an exhausted cursor: build the slot's automaton state
-        from the final chunk's logits and scatter it into batch row
-        ``cur.slot``.  Returns (state, first token).  Consumes `st` —
+        from the final chunk's logits (or, on a whole-prompt tail-entry
+        hit, from the entry's stored first token) and scatter it into
+        batch row ``cur.slot``.  A freshly prefilled prompt ending in a
+        partial block also registers that block as a tail entry here
+        (``_register_tail``) so identical future prompts skip prefill
+        entirely.  Returns (state, first token).  Consumes `st` —
         callers must rebind."""
         assert cur.done, "prefill cursor still has chunks to run"
-        sub = self._boot_state(cur.row_cache, cur.row_dcache,
-                               cur.logits_last, cur.prev_feat,
-                               len(cur.prompt))
+        if cur.boot_token is not None:
+            sub = self._boot_state_from_token(
+                cur.row_cache, cur.row_dcache,
+                jnp.full((1,), cur.boot_token, jnp.int32),
+                cur.prev_feat, len(cur.prompt))
+        else:
+            st = self._register_tail(st, cur)
+            sub = self._boot_state(cur.row_cache, cur.row_dcache,
+                                   cur.logits_last, cur.prev_feat,
+                                   len(cur.prompt))
         self._pkv_active_rows[cur.slot] = False
         st = self._write_slot(st, sub, jnp.int32(cur.slot))
         return st, int(np.asarray(sub.pending[0, 0]))
@@ -1046,8 +1291,8 @@ class SpecPVEngine:
         window are copied to private pages and the row's table is
         repointed.  Free no-op unless a live slot has fork-derived
         sharing — prefix-shared prompt blocks sit strictly below every
-        write window, so admission sharing alone never copies; only
-        forked slots are scanned."""
+        write window and a tail-entry attach copies its block at
+        admission, so only forked slots are scanned."""
         if not self.paged or not self._forked_slots.intersection(
                 np.nonzero(rows)[0]):
             return st
@@ -1126,66 +1371,119 @@ class SpecPVEngine:
         """Lock-step automaton over the whole batch (generate() path)."""
         return self.mode_for(pending_len_max, seq_len_min, self._pkv_active)
 
-    def select_mode_rows(self, st: EngineState,
-                         rows: np.ndarray) -> Dict[str, np.ndarray]:
-        """Per-slot automaton: group the active rows by the mode each slot
-        wants this step.  Returns {mode: [B] bool mask}."""
+    def modes_for_rows(self, st: EngineState, rows: np.ndarray) -> np.ndarray:
+        """Per-slot automaton as a mode *vector*: [B] int8 of
+        MODE_FULL/MODE_REFRESH/MODE_PARTIAL (inactive rows read
+        MODE_FULL; their entries are don't-cares — ``step_fused``
+        normalises them).  This is the fused tick's one host-side
+        decision; the vector then rides through the jitted step as an
+        operand."""
         pl = np.asarray(st.pending_len)
         sl = np.asarray(st.seq_len)
-        out: Dict[str, np.ndarray] = {}
+        out = np.full((self.batch,), MODE_FULL, np.int8)
         for i in np.nonzero(rows)[0]:
-            m = self.mode_for(int(pl[i]), int(sl[i]),
-                              bool(self._pkv_active_rows[i]))
-            out.setdefault(m, np.zeros(self.batch, bool))[i] = True
+            out[i] = MODE_IDS[self.mode_for(
+                int(pl[i]), int(sl[i]), bool(self._pkv_active_rows[i]))]
         return out
 
-    def _step_fn(self, mode: str, masked: bool = False):
-        sfx = "_m" if masked else ""
-        return getattr(self, {"state": "_step_state",
-                              "full": "_step_full",
-                              "refresh": "_step_refresh",
-                              "partial": "_step_partial"}[mode] + sfx, None)
+    def select_mode_rows(self, st: EngineState,
+                         rows: np.ndarray) -> Dict[str, np.ndarray]:
+        """Per-slot automaton grouped by mode (the *grouped* per-mode
+        scheduling path, kept for A/B against the fused tick).
+        Returns {mode: [B] bool mask}."""
+        modes = self.modes_for_rows(st, rows)
+        out: Dict[str, np.ndarray] = {}
+        for i in np.nonzero(rows)[0]:
+            out.setdefault(MODE_NAMES[int(modes[i])],
+                           np.zeros(self.batch, bool))[i] = True
+        return out
+
+    def step_fused(self, st: EngineState, rows: np.ndarray,
+                   modes: np.ndarray) -> Tuple[EngineState, StepOutput]:
+        """One fused multi-mode step: every row where `rows` is True
+        steps in the mode `modes` assigns it — an arbitrary mix of
+        FULL/REFRESH/PARTIAL slots costs exactly ONE jitted dispatch
+        (``dispatches`` counts them).  Untouched rows are preserved
+        bit-for-bit, and each stepped row's result is bit-identical to
+        stepping it alone in its own mode (the losslessness anchor for
+        continuous batching).  Consumes `st` (buffers donated in the
+        merge) — callers must rebind."""
+        assert self.is_attn, \
+            "fused steps drive the attention automaton; state archs " \
+            "use step(mode='state')"
+        rows = np.asarray(rows, bool)
+        modes = np.asarray(modes, np.int8)
+        active_modes = modes[rows]
+        assert active_modes.size, "step_fused needs at least one live row"
+        has_refresh = bool(np.any(active_modes == MODE_REFRESH))
+        has_full = has_refresh or bool(np.any(active_modes == MODE_FULL))
+        has_partial = bool(np.any(active_modes == MODE_PARTIAL))
+        # inactive rows' compute is discarded by the in-jit row merge;
+        # normalise their mode entries to one the variant implements so
+        # the per-row selects never see an unrepresented mode
+        modes = np.where(rows, modes, active_modes[0]).astype(np.int8)
+        st = self.prepare_cow(st, rows)
+        fn = self._fused_fn(has_full, has_partial, has_refresh)
+        st, (toks, counts, acc) = fn(self.params, self.dparams, st,
+                                     jnp.asarray(rows), jnp.asarray(modes))
+        self.dispatches += 1
+        self._pkv_active_rows |= rows & (modes == MODE_REFRESH)
+        self._record_traffic_rows(modes, st, rows)
+        counts = np.where(rows, np.asarray(counts), 0)
+        names = sorted({MODE_NAMES[int(m)] for m in active_modes})
+        return st, StepOutput(tokens=np.asarray(toks), counts=counts,
+                              accept_len=np.where(rows, np.asarray(acc), 0),
+                              mode=(names[0] if len(names) == 1
+                                    else "fused"),
+                              modes=modes)
 
     def step(self, st: EngineState, mode: str) -> Tuple[EngineState,
                                                         StepOutput]:
         """One lock-step draft -> verify(mode) -> accept -> commit round
-        over the whole batch (``select_mode`` picks `mode`).  Consumes
-        `st` — callers must rebind."""
-        fn = self._step_fn(mode)
-        if fn is None:
+        over the whole batch (``select_mode`` picks `mode`) — a thin
+        wrapper over ``step_fused`` with a uniform mode vector, so
+        lock-step outputs are the fused path's outputs by construction.
+        Consumes `st` — callers must rebind."""
+        if mode == "state":
+            if self.is_attn:
+                raise ValueError(mode)
+            st = self.prepare_cow(st, np.ones((self.batch,), bool))
+            ones = jnp.ones((self.batch,), bool)
+            st, (toks, counts, acc) = self._step_state(
+                self.params, self.dparams, st, ones)
+            self.dispatches += 1
+            return st, StepOutput(tokens=np.asarray(toks),
+                                  counts=np.asarray(counts),
+                                  accept_len=np.asarray(acc), mode=mode)
+        if mode not in MODE_IDS:
             raise ValueError(mode)
-        st = self.prepare_cow(st, np.ones((self.batch,), bool))
-        ones = jnp.ones((self.batch,), bool)
-        st, (toks, counts, acc) = fn(self.params, self.dparams, st, ones)
+        st, out = self.step_fused(
+            st, np.ones((self.batch,), bool),
+            np.full((self.batch,), MODE_IDS[mode], np.int8))
         if mode == "refresh":
             self._pkv_active = True
-            self._pkv_active_rows[:] = True
-        self._record_traffic(mode, st)
-        return st, StepOutput(tokens=np.asarray(toks),
-                              counts=np.asarray(counts),
-                              accept_len=np.asarray(acc), mode=mode)
+        return st, out
 
     def step_rows(self, st: EngineState, mode: str,
                   rows: np.ndarray) -> Tuple[EngineState, StepOutput]:
-        """Step only the slots where `rows` is True in `mode`; every other
-        slot's state is preserved bit-for-bit (rows are computationally
-        independent, so a stepped row's result equals what it would get if
-        stepped alone — the losslessness anchor for continuous batching).
-        Consumes `st` (buffers donated in the merge) — callers must
-        rebind."""
-        fn = self._step_fn(mode, masked=True)
-        if fn is None:
+        """Step only the slots where `rows` is True in `mode` (the
+        grouped per-mode path — one dispatch per distinct mode per tick,
+        kept for A/B against ``step_fused``); every other slot's state is
+        preserved bit-for-bit.  Consumes `st` (buffers donated in the
+        merge) — callers must rebind."""
+        if mode not in MODE_IDS:
             raise ValueError(mode)
-        st = self.prepare_cow(st, rows)
-        mask = jnp.asarray(rows)
-        st, (toks, counts, acc) = fn(self.params, self.dparams, st, mask)
-        if mode == "refresh":
-            self._pkv_active_rows |= rows
-        self._record_traffic(mode, st, rows)
-        counts = np.where(rows, np.asarray(counts), 0)
-        return st, StepOutput(tokens=np.asarray(toks), counts=counts,
-                              accept_len=np.where(rows, np.asarray(acc), 0),
-                              mode=mode)
+        return self.step_fused(
+            st, rows, np.full((self.batch,), MODE_IDS[mode], np.int8))
+
+    def _record_traffic_rows(self, modes: np.ndarray, st: EngineState,
+                             rows: np.ndarray) -> None:
+        """Per-row mode attribution: one traffic record per distinct
+        mode actually stepped, each billed only for its own rows."""
+        for mid in (MODE_FULL, MODE_REFRESH, MODE_PARTIAL):
+            sub = rows & (modes == mid)
+            if sub.any():
+                self._record_traffic(MODE_NAMES[mid], st, sub)
 
     def _record_traffic(self, mode: str, st: EngineState,
                         rows: Optional[np.ndarray] = None):

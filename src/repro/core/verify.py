@@ -5,6 +5,10 @@ Verify-input layout (attention archs):
 
   full/partial step:   [ x_b | tree nodes ]                (S = 1 + T)
   refresh step:        [ pending (padded to Pmax) | tree ] (S = Pmax + T)
+  fused step:          per ROW one of the above, packed inside a single
+                       static shape (``build_verify_inputs_fused``) —
+                       live operands keep their single-mode lane
+                       positions, only trailing zeros are appended
 
 ``pending`` are accepted tokens whose exact full-context KV is not in the
 full cache yet (all tokens accepted under partial verification since the
@@ -84,15 +88,96 @@ def build_verify_inputs(tree: TreeSpec, pending, pending_len, tree_tokens,
                 pend_valid=pend_valid)
 
 
-def commit_slots(tree: TreeSpec, pend_valid, path_nodes, p: int):
+def build_verify_inputs_fused(tree: TreeSpec, pending, pending_len, p_eff,
+                              tree_tokens, seq_len, active=None):
+    """Per-row-layout verify input for the fused multi-mode step.
+
+    Every row packs its sequence as ``[pend (p_eff) | tree (T) | pad]``
+    inside one static width ``S = P + T``: refresh rows use the full
+    pending width (``p_eff = P``, the grouped refresh layout), while
+    full/partial rows collapse the pend region to one slot
+    (``p_eff = 1``), so their live tokens occupy the *same contiguous
+    prefix* a narrow per-mode step would use, followed by zero padding.
+    Keeping live operands in identical lane positions (only trailing
+    zeros appended) is what makes the fused step's reductions — and
+    therefore its greedy outputs — bit-identical to the grouped
+    per-mode path; scattering them (e.g. tree always at offset P) would
+    reassociate the key-axis sums and break losslessness.
+
+    pending: [B, P] (P = 1 when no refresh row steps this tick);
+    pending_len: [B] valid pend count per row (<= p_eff);
+    p_eff: [B] int32 per-row pend width in {1, P};
+    tree_tokens: [B, T]; seq_len: [B]; active: optional [B] bool.
+
+    Returns the same dict as ``build_verify_inputs`` — positions, self
+    mask, root/node slots are all per-row, so downstream gathers
+    (acceptance, commits, the refresh q_weight scatter) need no layout
+    knowledge beyond ``node_slots``/``root_slot``.
+    """
+    b, p = pending.shape
+    t = tree.size
+    s = p + t
+    p_eff = p_eff[:, None]                                        # [B, 1]
+    sidx = jnp.arange(s)[None]                                    # [1, S]
+    pend_q = sidx < p_eff                                         # [B, S]
+    tree_q = (sidx >= p_eff) & (sidx < p_eff + t)
+    tidx = jnp.clip(sidx - p_eff, 0, t - 1)                       # [B, S]
+
+    pend_pad = jnp.pad(pending, ((0, 0), (0, t)))                 # [B, S]
+    tree_g = jnp.take_along_axis(tree_tokens, tidx, axis=1)
+    tokens = jnp.where(pend_q, pend_pad, jnp.where(tree_q, tree_g, 0))
+
+    pend_valid_w = pend_q & (sidx < pending_len[:, None])         # [B, S]
+    if active is not None:
+        pend_valid_w = pend_valid_w & active[:, None]
+
+    # positions: pend slot i at seq_len - pending_len + i; tree node n
+    # at seq_len + depth(n) — per row, exactly as the grouped layouts
+    depths = jnp.asarray(tree.depths_arr())
+    pend_pos = seq_len[:, None] - pending_len[:, None] + sidx
+    node_pos = seq_len[:, None] + jnp.take(depths, tidx)
+    positions = jnp.where(pend_q, pend_pos,
+                          jnp.where(tree_q, node_pos, 0))
+    positions = jnp.maximum(positions, 0)
+
+    anc = jnp.asarray(tree.ancestor_mask())                       # [T, T]
+    anc_q = anc[tidx]                                             # [B, S, T]
+    anc_qk = jnp.take_along_axis(
+        anc_q, jnp.broadcast_to(tidx[:, None, :], (b, s, s)), axis=2)
+    causal = sidx[:, :, None] >= sidx[:, None, :]                 # [1, S, S]
+    m_pp = (causal & pend_valid_w[:, None, :] & pend_valid_w[:, :, None])
+    m_tp = tree_q[:, :, None] & pend_valid_w[:, None, :]
+    m_tt = tree_q[:, :, None] & tree_q[:, None, :] & anc_qk
+    m = m_pp | m_tp | m_tt
+    if active is not None:
+        m = m & active[:, None, None]
+
+    valid = pend_valid_w | tree_q
+    if active is not None:
+        valid = valid & active[:, None]
+    root_slot = pending_len - 1                                   # [B]
+    node_slots = p_eff + jnp.arange(t)[None]                      # [B, T]
+    return dict(tokens=tokens, positions=positions, self_mask=m,
+                q_valid=valid, root_slot=root_slot, node_slots=node_slots,
+                pend_valid=pend_valid_w[:, :p])
+
+
+def commit_slots(tree: TreeSpec, pend_valid, path_nodes, p):
     """Input slots to commit, compacted: valid pending first, then the
-    accepted path.  Returns (slots [B, P+D], slot_valid [B, P+D])."""
-    b = pend_valid.shape[0]
+    accepted path.  Returns (slots [B, P+D], slot_valid [B, P+D]).
+
+    ``p`` is the tree-region offset — a scalar for the uniform layouts,
+    or a per-row [B] vector for the fused step's per-row layouts (the
+    pend region is always the leading ``pend_valid.shape[1]`` slots)."""
+    b, pw = pend_valid.shape
     d = tree.depth
     path_valid = path_nodes >= 0
+    p = jnp.asarray(p, jnp.int32)
+    p = p[:, None] if p.ndim else p
     path_slots = p + jnp.maximum(path_nodes, 0)
     slots = jnp.concatenate(
-        [jnp.broadcast_to(jnp.arange(p)[None], (b, p)), path_slots], axis=1)
+        [jnp.broadcast_to(jnp.arange(pw)[None], (b, pw)), path_slots],
+        axis=1)
     valid = jnp.concatenate([pend_valid, path_valid], axis=1)
     # stable compaction: valid entries to the front, order preserved
     order = jnp.argsort(jnp.where(valid, 0, 1), axis=1, stable=True)

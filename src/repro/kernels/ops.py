@@ -70,8 +70,18 @@ def paged_verify_attention(q, pool_k, pool_v, page_table, length,
     view is never materialised.  Per-block valid lengths are derived
     from `length`, so pages past the filled region contribute nothing.
 
+    The per-row page counts are *ragged*: a row only streams the
+    ``ceil(length / block)`` leading table entries that actually hold
+    tokens — every empty block's index is rewritten to the reserved
+    null page 0 before prefetch, so the decode reserve and (in the
+    fused multi-mode step, where partial-mode rows pass ``length = 0``)
+    entire rows collapse to re-reads of one resident page instead of
+    pulling their whole table through the pipeline.
+
     q: [B, T, H, Dh]; pool_k/pool_v: [NP, block, Hk, Dh] (one layer's
-    pool); page_table: [B, NB] int32; length: [B].
+    pool); page_table: [B, NB] int32; length: [B] — the fused step
+    passes a per-row *effective* length (0 for rows whose verification
+    reads the partial cache instead).
     Returns (m [B, H, T], l [B, H, T], acc [B, H, T, Dh]) fp32 —
     combinable with the tree self-segment via
     ``models.common.combine_attn_parts``."""
@@ -80,7 +90,10 @@ def paged_verify_attention(q, pool_k, pool_v, page_table, length,
     k_flat = pool_k.reshape(np_ * bs, hk, dh)
     v_flat = pool_v.reshape(np_ * bs, hk, dh)
     vlen = jnp.clip(length[:, None] - jnp.arange(nb)[None] * bs, 0, bs)
-    idx = jnp.broadcast_to(page_table[:, None], (b, hk, nb)).astype(jnp.int32)
+    # ragged routing: empty blocks stream the null page (their valid
+    # length is 0, so the masked tile contributes nothing either way)
+    routed = jnp.where(vlen > 0, page_table, 0)
+    idx = jnp.broadcast_to(routed[:, None], (b, hk, nb)).astype(jnp.int32)
     vlen_h = jnp.broadcast_to(vlen[:, None], (b, hk, nb)).astype(jnp.int32)
     fn = (functools.partial(sparse_verify_attention_pallas, block_size=bs,
                             interpret=_interpret())

@@ -346,13 +346,24 @@ class PageAllocator:
         Returns ``(old_page, new_page)``; ``old == new`` when the slot
         already owned the page alone.  Otherwise a private page is taken
         (the caller must copy pool contents old -> new and update the
-        device page table) and the shared page loses one reference."""
+        device page table) and the shared page loses one reference.
+
+        The slot's share of the old page is dropped *before* the new
+        page is taken (after an explicit free-list check, so exhaustion
+        still raises with state unchanged): the copy replaces a page
+        1:1, and counting both sides simultaneously would bump the
+        committed high-water for a working set that never grew — e.g. a
+        tail-entry registration whose old page becomes cache-only."""
         old = self._slot_pages[slot][block]
         if self._ref[old] == 1:
             return old, old
+        if not self._free:
+            raise RuntimeError(
+                f"page pool exhausted: want 1, have 0 free of "
+                f"{self.capacity}")
+        self._ref[old] -= 1             # ref > 1, so never frees here
         [new] = self._take(1)
         self._slot_pages[slot][block] = new
-        self._ref[old] -= 1             # ref > 1, so never frees here
         return old, new
 
     def free_slot(self, slot: int) -> List[int]:
@@ -380,6 +391,27 @@ class _PrefixEntry:
         self.tick = tick            # LRU stamp
 
 
+class _TailEntry:
+    """A whole-prompt entry for a prompt ending in a *partial* block:
+    the pages holding the final sub-block tokens plus the boot state a
+    greedy admission needs to skip prefill entirely (the fused boundary
+    feature at the last prompt position and the argmax first token)."""
+
+    __slots__ = ("key", "depth", "tail_len", "page", "draft_page", "feat",
+                 "first_token", "tick")
+
+    def __init__(self, key, depth, tail_len, page, draft_page, feat,
+                 first_token, tick):
+        self.key = key              # digest(parent chain key, tail tokens)
+        self.depth = depth          # logical block index of the tail block
+        self.tail_len = tail_len    # prompt tokens inside the tail block
+        self.page = page
+        self.draft_page = draft_page
+        self.feat = feat
+        self.first_token = first_token
+        self.tick = tick
+
+
 class PrefixCache:
     """Host-side prompt-prefix index over the paged pools.
 
@@ -401,12 +433,17 @@ class PrefixCache:
     def __init__(self, block_size: int):
         self.block = block_size
         self._entries: Dict[bytes, _PrefixEntry] = {}
+        self._tails: Dict[bytes, _TailEntry] = {}
         self._tick = 0
         self.lookups = 0
         self.blocks_matched = 0
         self.blocks_seen = 0
         self.inserted = 0
         self.evicted = 0
+        self.tail_lookups = 0
+        self.tail_hits = 0
+        self.tails_inserted = 0
+        self.tails_evicted = 0
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -485,38 +522,119 @@ class PrefixCache:
         """The cached entry for a chain hash, if any (no LRU touch)."""
         return self._entries.get(key)
 
+    # -- speculative last-partial-block sharing --------------------------
+    _ROOT = b"specpv-prefix"
+
+    def _tail_key(self, parent: bytes, tail_tokens: np.ndarray) -> bytes:
+        return self._digest(b"tail:" + parent, tail_tokens)
+
+    def register_tail(self, parent: bytes, tail_tokens: np.ndarray,
+                      depth: int, page: int, draft_page: int, feat,
+                      first_token: int, trunk_alloc: PageAllocator,
+                      draft_alloc: PageAllocator) -> Optional[_TailEntry]:
+        """Register a prompt's final *partial* block (the sub-block tail
+        a block-aligned chain can never cover).  Keyed by the parent
+        chain hash plus the exact tail tokens, so a hit certifies the
+        whole prompt; the entry additionally stores the boot state
+        (boundary feature + greedy first token) that lets an identical
+        admission skip its prefill entirely.  Takes one cache reference
+        per pool page; the caller must immediately hand the registering
+        slot a private copy of the block (``PageAllocator.cow_write``) —
+        its very next decode commit writes *into* this block, and the
+        cached KV must stay frozen.  Returns None when already cached."""
+        key = self._tail_key(parent, tail_tokens)
+        if key in self._tails:
+            return None
+        trunk_alloc.add_ref([page], cache=True)
+        draft_alloc.add_ref([draft_page], cache=True)
+        e = _TailEntry(key, depth, len(tail_tokens), int(page),
+                       int(draft_page), feat, int(first_token),
+                       self.new_tick())
+        self._tails[key] = e
+        self.tails_inserted += 1
+        return e
+
+    def match_tail(self, prompt: np.ndarray, *, touch: bool = True,
+                   count: bool = True
+                   ) -> Optional[Tuple[List[_PrefixEntry], _TailEntry]]:
+        """Whole-prompt lookup for a prompt ending in a partial block:
+        hit iff every full block chains AND a tail entry matches the
+        exact remaining tokens.  Returns (chain entries, tail entry) on
+        hit; ``touch`` re-stamps chain + tail as one unit (LRU keeps a
+        parent no older than its tail)."""
+        bs = self.block
+        n_full = len(prompt) // bs
+        rem = len(prompt) - n_full * bs
+        if rem == 0:
+            return None
+        if count:
+            self.tail_lookups += 1
+        chain = self.match(prompt, n_full, touch=False, count=False)
+        if len(chain) < n_full:
+            return None
+        parent = chain[-1].key if n_full else self._ROOT
+        e = self._tails.get(self._tail_key(parent, prompt[n_full * bs:]))
+        if e is None:
+            return None
+        if count:
+            self.tail_hits += 1
+        if touch:
+            tick = self.new_tick()
+            for c in chain:
+                c.tick = tick
+            e.tick = tick
+        return chain, e
+
     def evict_lru(self, trunk_alloc: PageAllocator,
                   draft_alloc: PageAllocator, n_pages: int) -> int:
         """Drop least-recently-used *unreferenced* entries (pages held
         only by the cache) until `n_pages` trunk pages have been freed or
-        no candidate remains.  Returns trunk pages freed."""
+        no candidate remains.  Returns trunk pages freed.
+
+        Tail entries compete in the same LRU order; their depth sorts
+        just below their parent block's (deepest-first tie-break), so
+        within one stamp a tail always evicts before the chain that
+        certifies it."""
         freed = 0
-        for e in sorted(self._entries.values(),
-                        key=lambda e: (e.tick, -e.depth)):
+        cands = sorted(
+            list(self._entries.values()) + list(self._tails.values()),
+            key=lambda e: (e.tick, -e.depth, 0 if isinstance(e, _TailEntry)
+                           else 1))
+        for e in cands:
             if freed >= n_pages:
                 break
             if (trunk_alloc.refcount(e.page) == 1
                     and draft_alloc.refcount(e.draft_page) == 1):
-                del self._entries[e.key]
+                if isinstance(e, _TailEntry):
+                    del self._tails[e.key]
+                    self.tails_evicted += 1
+                else:
+                    del self._entries[e.key]
+                    self.evicted += 1
                 freed += len(trunk_alloc.dec_ref([e.page], cache=True))
                 draft_alloc.dec_ref([e.draft_page], cache=True)
-                self.evicted += 1
         return freed
 
     def clear(self, trunk_alloc: PageAllocator,
               draft_alloc: PageAllocator) -> None:
         """Release every entry's references (engine reset)."""
-        for e in self._entries.values():
+        for e in list(self._entries.values()) + list(self._tails.values()):
             trunk_alloc.dec_ref([e.page], cache=True)
             draft_alloc.dec_ref([e.draft_page], cache=True)
         self._entries.clear()
+        self._tails.clear()
 
     def stats(self) -> Dict[str, int]:
         return dict(entries=len(self._entries), lookups=self.lookups,
                     blocks_matched=self.blocks_matched,
                     blocks_seen=self.blocks_seen,
                     tokens_reused=self.blocks_matched * self.block,
-                    inserted=self.inserted, evicted=self.evicted)
+                    inserted=self.inserted, evicted=self.evicted,
+                    tails=len(self._tails),
+                    tail_lookups=self.tail_lookups,
+                    tail_hits=self.tail_hits,
+                    tails_inserted=self.tails_inserted,
+                    tails_evicted=self.tails_evicted)
 
     def reset_stats(self) -> None:
         """Zero the hit/reuse counters (benchmark warmup); entries and
@@ -526,6 +644,10 @@ class PrefixCache:
         self.blocks_seen = 0
         self.inserted = 0
         self.evicted = 0
+        self.tail_lookups = 0
+        self.tail_hits = 0
+        self.tails_inserted = 0
+        self.tails_evicted = 0
 
 
 def init_paged_pool(num_layers: int, num_pages: int, block: int,

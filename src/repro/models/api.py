@@ -7,9 +7,11 @@
   advance(cfg, params, tokens, cache, valid)         -> cache   (ssm/hybrid)
   train_loss(cfg, params, batch, extra)  -> (loss, metrics)
 
-Attention archs (dense/moe/vlm/audio) expose the three SpecPV verification
-modes through ``decode(mode=...)``; state archs (ssm/hybrid) expose chain
-verification (read-only decode) + explicit ``advance``.
+Attention archs (dense/moe/vlm/audio) expose the SpecPV verification
+modes through ``decode(mode=...)`` — "full", "partial", and the fused
+per-row multi-mode step ("fused", with a ``partial_rows`` row mask);
+state archs (ssm/hybrid) expose chain verification (read-only decode)
++ explicit ``advance``.
 """
 from __future__ import annotations
 
@@ -184,11 +186,16 @@ def decode(cfg: ModelConfig, params, tokens, positions, cache, *,
            spec: Optional[SpecPVConfig] = None,
            select_partial: bool = False,
            emit_queries: bool = False,
-           q_weight=None) -> DecodeOut:
+           q_weight=None,
+           partial_rows=None) -> DecodeOut:
     """Forward T new (tree/chain) tokens.
 
-    mode: "full" | "partial" — attention archs only; state archs always do
-    read-only chain verification.
+    mode: "full" | "partial" | "fused" — attention archs only; state
+    archs always do read-only chain verification.  ``"fused"`` is the
+    multi-mode verification step: ``partial_rows`` ([B] bool) marks the
+    rows that attend the materialised partial cache (``pkv``), every
+    other row attends the full cache over its real length — one trunk
+    launch serves an arbitrary per-row mode mix.
     self_mask: [B, T, T] bool — tree/chain visibility among the new tokens.
     select_partial: emit a freshly retrieved partial cache (Refresh/init).
     """
@@ -209,12 +216,14 @@ def decode(cfg: ModelConfig, params, tokens, positions, cache, *,
                          None, None, zero_aux)
 
     h = dn.embed_tokens(cfg, params, tokens)
-    trunk_mode = "decode_full" if mode == "full" else "decode_partial"
+    trunk_mode = {"full": "decode_full", "partial": "decode_partial",
+                  "fused": "decode_fused"}[mode]
     out = dn.trunk_fwd(cfg, params["decoder"], h, positions, mode=trunk_mode,
                        self_mask=self_mask, cache=cache, pkv=pkv,
                        spec=spec or SpecPVConfig(),
                        select_partial=select_partial,
-                       emit_queries=emit_queries, q_weight=q_weight)
+                       emit_queries=emit_queries, q_weight=q_weight,
+                       partial_rows=partial_rows)
     logits = dn.lm_head(cfg, params, out.h)
     return DecodeOut(logits, Features(*out.features), out.new_kv,
                      out.partial, out.aux_loss, out.queries)

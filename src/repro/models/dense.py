@@ -19,6 +19,9 @@ Five forward modes share one scan body:
                  optionally performs Quest retrieval and emits a gathered
                  partial cache (this is the paper's Full/Refresh step)
   decode_partial T new tokens vs the materialised PartialKV + tree mask
+  decode_fused   per-row source select (the fused multi-mode step):
+                 rows flagged partial attend the PartialKV, all other
+                 rows the full cache at their real length — one launch
 
 Decode modes never mutate the cache: they return the new tokens' per-layer
 K/V and (for refresh) the gathered partial segments; the SpecPV engine in
@@ -301,17 +304,28 @@ def _paged_kernel_ok() -> bool:
 def _self_attention(cfg: ModelConfig, mode: str,
                     lp: Dict, h, positions, self_mask, cache_kv, pkv,
                     length, inv_freq, mscale, page_table=None,
-                    paged_kernel: bool = False):
+                    paged_kernel: bool = False, partial_rows=None):
     """One self-attention sublayer under the given mode.
 
-    cache_kv: (k_layer, v_layer) for prefill/decode_full or None; with
-              page_table set these are the layer's *pool* slices
-              [NP, block, Hk, Dh] read (and, for prefill, written)
-              through the table
-    pkv:      (pk, pv, ppos) per-kv-head slots for decode_partial or None
-    paged_kernel: decode_full + page_table only — stream the resident
-              pages through ``kernels.ops.paged_verify_attention``
-              instead of materialising the gathered logical view
+    cache_kv: (k_layer, v_layer) for prefill/decode_full/decode_fused
+              or None; with page_table set these are the layer's *pool*
+              slices [NP, block, Hk, Dh] read (and, for prefill,
+              written) through the table
+    pkv:      (pk, pv, ppos) per-kv-head slots for
+              decode_partial/decode_fused or None
+    paged_kernel: decode_full/decode_fused + page_table only — stream
+              the resident pages through
+              ``kernels.ops.paged_verify_attention`` instead of
+              materialising the gathered logical view
+    partial_rows: [B] bool, decode_fused only — rows whose context is
+              the materialised partial cache; all other rows attend the
+              full cache over their real length.  The two context
+              partials are computed in one launch and row-selected
+              *before* the softmax combine, so each row's result is
+              bit-identical to the corresponding single-mode step
+              (partial rows see the full cache at effective length 0,
+              so neither the gathered view's mask nor the paged
+              kernel's ragged page routing streams their pages).
     Returns (attn_out, updates_dict).
     """
     x = cm.rmsnorm(h, lp["norm1"], cfg.norm_eps)
@@ -407,6 +421,49 @@ def _self_attention(cfg: ModelConfig, mode: str,
         out = cm.combine_attn_parts([part_ctx, part_self], h.dtype)
         upd["new_k"] = k_new
         upd["new_v"] = v_new
+    elif mode == "decode_fused":
+        # one launch, two context sources, row-selected partials: the
+        # full-cache part runs at per-row *effective* length (0 for
+        # partial rows — the paged kernel's ragged routing then streams
+        # none of their pages), the partial-cache part over the pkv
+        # slots; each row keeps exactly the partial its mode dictates.
+        len_eff = jnp.where(partial_rows, 0, length)
+        if page_table is not None and paged_kernel:
+            from repro.kernels import ops as kops
+            part_full = kops.paged_verify_attention(
+                q, cache_kv[0], cache_kv[1], page_table, len_eff)
+        else:
+            if page_table is not None:
+                from repro.kvcache.cache import gather_page_view
+                k_layer = gather_page_view(cache_kv[0], page_table)
+                v_layer = gather_page_view(cache_kv[1], page_table)
+                ksc = vsc = None
+            else:
+                k_layer, v_layer = cache_kv[:2]
+                ksc, vsc = (cache_kv[2], cache_kv[3]) if len(cache_kv) > 2 \
+                    else (None, None)
+            s = k_layer.shape[1]
+            kv_pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+            kv_valid = kv_pos < len_eff[:, None]
+            part_full = cm.flash_attention(q, k_layer, v_layer,
+                                           q_positions=positions,
+                                           kv_positions=kv_pos, causal=True,
+                                           kv_valid=kv_valid, chunk=512,
+                                           return_partials=True,
+                                           k_scale=ksc, v_scale=vsc)
+        pk, pv, ppos = pkv[:3]
+        pks, pvs = (pkv[3], pkv[4]) if len(pkv) > 3 else (None, None)
+        part_part = cm.dense_attn_part_perhead(q, pk, pv, ppos >= 0,
+                                               k_scale=pks, v_scale=pvs)
+        sel = partial_rows[:, None, None]                 # m/l: [B, H, T]
+        part_ctx = (jnp.where(sel, part_part[0], part_full[0]),
+                    jnp.where(sel, part_part[1], part_full[1]),
+                    jnp.where(sel[..., None], part_part[2], part_full[2]))
+        part_self = cm.dense_attn_part(q, k_new, v_new,
+                                       mask=self_mask[:, None])
+        out = cm.combine_attn_parts([part_ctx, part_self], h.dtype)
+        upd["new_k"] = k_new
+        upd["new_v"] = v_new
     else:
         raise ValueError(mode)
 
@@ -487,6 +544,7 @@ def trunk_fwd(cfg: ModelConfig, stack_params: Dict, h, positions, *,
               select_partial: bool = False,
               emit_queries: bool = False,
               q_weight=None,
+              partial_rows=None,
               kinds: Optional[Tuple[str, ...]] = None,
               collect_features: bool = True):
     """Run the layer stack.  See module docstring for modes.
@@ -509,13 +567,14 @@ def trunk_fwd(cfg: ModelConfig, stack_params: Dict, h, positions, *,
     length = cache["length"] if cache is not None else jnp.zeros((b,), jnp.int32)
     paged = cache is not None and "page_table" in cache
     page_table = cache["page_table"] if paged else None
-    paged_kernel = (paged and mode == "decode_full" and spec is not None
+    paged_kernel = (paged and mode in ("decode_full", "decode_fused")
+                    and spec is not None
                     and spec.use_pallas and _paged_kernel_ok())
     if q_weight is None:
         q_weight = jnp.ones((b, t), jnp.float32)
 
-    needs_cache = mode in ("prefill", "decode_full")
-    decode_mode = mode in ("decode_full", "decode_partial")
+    needs_cache = mode in ("prefill", "decode_full", "decode_fused")
+    decode_mode = mode in ("decode_full", "decode_partial", "decode_fused")
 
     # ---- assemble scan xs --------------------------------------------------
     xs: Dict[str, Any] = {"slot_params": stack_params["slots"]}
@@ -530,7 +589,7 @@ def trunk_fwd(cfg: ModelConfig, stack_params: Dict, h, positions, *,
         if select_partial or mode == "prefill":
             xs["kmax"] = rs(cache["kmax"])
             xs["kmin"] = rs(cache["kmin"])
-    if mode == "decode_partial" and n_attn_per:
+    if mode in ("decode_partial", "decode_fused") and n_attn_per:
         def rp(a):
             return a.reshape((n_super, n_attn_per) + a.shape[1:])
         xs["pk"], xs["pv"], xs["ppos"] = (rp(pkv[0]), rp(pkv[1]), rp(pkv[2]))
@@ -607,7 +666,7 @@ def trunk_fwd(cfg: ModelConfig, stack_params: Dict, h, positions, *,
                         cache_kv += (x["cks"][a_i], x["cvs"][a_i])
                 else:
                     cache_kv = None
-                if mode == "decode_partial":
+                if mode in ("decode_partial", "decode_fused"):
                     pkv_l = (x["pk"][a_i], x["pv"][a_i], x["ppos"][a_i])
                     if "pks" in x:
                         pkv_l += (x["pks"][a_i], x["pvs"][a_i])
@@ -616,7 +675,7 @@ def trunk_fwd(cfg: ModelConfig, stack_params: Dict, h, positions, *,
                 att, upd, q = _self_attention(
                     cfg, mode, lp, h, positions, self_mask, cache_kv, pkv_l,
                     length, inv_freq, mscale, page_table=page_table,
-                    paged_kernel=paged_kernel)
+                    paged_kernel=paged_kernel, partial_rows=partial_rows)
                 h = h + att
                 if mode == "prefill":
                     if paged:

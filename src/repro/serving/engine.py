@@ -47,6 +47,13 @@ class ServingConfig:
     # admission injects while outputs stay token-identical
     # (see docs/serving.md).
     prefill_budget: Optional[int] = None
+    # fused multi-mode decode (continuous scheduler only): one jitted
+    # masked step per tick regardless of how the slots' SpecPV automata
+    # diverge (the per-row mode vector is an operand of the step).
+    # False keeps the grouped per-mode loop — one dispatch per distinct
+    # mode per tick — as the A/B baseline
+    # (``benchmarks/bench_serving.py --fused``).
+    fused_step: bool = True
     partial_verification: bool = True
     pad_id: int = 0
     # "continuous" | "wave".  Continuous batching drives the per-slot
@@ -156,15 +163,18 @@ class ServingEngine:
             sched = ContinuousScheduler(
                 self._engine_for(self.scfg.batch, paged=self.scfg.paged_kv),
                 prefill_chunk=self.scfg.prefill_chunk,
-                prefill_budget=self.scfg.prefill_budget)
+                prefill_budget=self.scfg.prefill_budget,
+                fused=self.scfg.fused_step)
             self._continuous = sched
         while self.queue:
             sched.submit(self.queue.pop(0))
         done = sched.run()
         self.outputs.update({o.request_id: o for o in done})
-        for k in ("tokens", "wall_s", "steps", "admissions", "page_stalls",
-                  "prefix_evictions", "prefill_tokens"):
-            self.stats[k] += sched.stats.pop(k, 0.0)
+        for k in list(sched.stats):
+            if k in ("tokens", "wall_s", "steps", "admissions",
+                     "page_stalls", "prefix_evictions", "prefill_tokens") \
+                    or k.startswith(("mode_rows_", "ticks_modes_")):
+                self.stats[k] += sched.stats.pop(k)
         return done
 
     # ------------------------------------------------------------------

@@ -8,11 +8,16 @@ evicted the moment it finishes, cancels, or misses its deadline — the
 next waiting request takes the slot immediately, so divergent request
 lengths never idle the batch the way wave draining does.
 
-Each tick groups the active slots by the mode their automaton wants and
-runs one masked engine step per distinct mode; rows are computationally
-independent, so every request's output is token-identical to running it
-alone through ``SpecPVEngine.generate`` (greedy).  Admission order is
-priority desc, then earliest deadline, then arrival.
+Each tick runs **one fused masked engine step** for all decoding slots
+regardless of how their automata diverge: the per-slot modes ride into
+the jitted step as a ``[B] int8`` vector (``SpecPVEngine.step_fused``),
+so a tick whose slots want three different modes costs one dispatch
+instead of three batch-wide masked steps.  ``fused=False`` keeps the
+grouped path — one masked step per distinct mode per tick — for A/B
+(``benchmarks/bench_serving.py --fused``).  Rows are computationally
+independent either way, so every request's output is token-identical to
+running it alone through ``SpecPVEngine.generate`` (greedy).  Admission
+order is priority desc, then earliest deadline, then arrival.
 
 With a paged engine (``SpecPVEngine(paged=True)``) admission is
 additionally gated on free *pages*: a request is only admitted when the
@@ -61,7 +66,7 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
-from repro.core.engine import PrefillCursor, SpecPVEngine
+from repro.core.engine import MODE_NAMES, PrefillCursor, SpecPVEngine
 from repro.serving.request import Request, RequestOutput, RequestPhase
 
 
@@ -114,11 +119,20 @@ class ContinuousScheduler:
     whenever a cursor is open).  ``record_steps`` appends
     ``(clock(), request_id, n_tokens)`` to ``step_log`` for every slot
     that decodes in a tick — the per-request inter-step gap trace the
-    jitter benchmark (``bench_serving.py --interleave``) is built on."""
+    jitter benchmark (``bench_serving.py --interleave``) is built on.
+
+    ``fused=True`` (default) decodes every tick with a single fused
+    multi-mode dispatch; ``fused=False`` runs the grouped per-mode loop
+    (one masked step per distinct mode) for A/B.  Stats distinguish the
+    two costs explicitly: ``stats["steps"]`` counts *jitted dispatches*,
+    ``stats["mode_rows_<mode>"]`` counts per-mode stepped rows (the
+    logical per-mode work), and ``stats["ticks_modes_<k>"]`` histograms
+    decode ticks by their number of distinct modes."""
 
     def __init__(self, engine: SpecPVEngine, *, prefill_chunk: int = 256,
                  prefill_budget: Optional[int] = None,
                  record_steps: bool = False,
+                 fused: bool = True,
                  clock: Callable[[], float] = time.time):
         assert engine.is_attn, \
             "continuous batching drives the per-slot SpecPV automaton " \
@@ -131,6 +145,7 @@ class ContinuousScheduler:
         self.prefill_chunk = prefill_chunk
         self.prefill_budget = prefill_budget
         self.record_steps = record_steps
+        self.fused = fused
         self.clock = clock
         self.st = engine.empty_state()
         self.slots: List[Optional[_Slot]] = [None] * engine.batch
@@ -286,13 +301,16 @@ class ContinuousScheduler:
         for _, i in order:
             s = self.slots[i]
             while s.cursor is not None:
-                if spent and spent + s.cursor.next_tokens > \
-                        self.prefill_budget:
-                    break
-                self.st, n = self.engine.prefill_step_into_slot(
-                    self.st, s.cursor)
-                spent += n
+                if not s.cursor.done:
+                    if spent and spent + s.cursor.next_tokens > \
+                            self.prefill_budget:
+                        break
+                    self.st, n = self.engine.prefill_step_into_slot(
+                        self.st, s.cursor)
+                    spent += n
                 if s.cursor.done:
+                    # incl. cursors born exhausted: a whole-prompt
+                    # tail-entry hit opens with zero chunks to run
                     self.st, first = self.engine.prefill_finalize_slot(
                         self.st, s.cursor)
                     s.cursor = None
@@ -337,21 +355,39 @@ class ContinuousScheduler:
                            for s in self.slots], bool)
         if not active.any():
             return prefilled > 0
-        groups = self.engine.select_mode_rows(self.st, active)
-        for mode in sorted(groups):
-            mask = groups[mode]
-            self.st, so = self.engine.step_rows(self.st, mode, mask)
+        modes = self.engine.modes_for_rows(self.st, active)
+        distinct = sorted({int(m) for m in modes[active]})
+        self.stats[f"ticks_modes_{len(distinct)}"] += 1
+        for mid in distinct:
+            self.stats["mode_rows_" + MODE_NAMES[mid]] += int(
+                np.sum(active & (modes == mid)))
+        if self.fused:
+            # the whole mode mix in ONE jitted dispatch
+            self.st, so = self.engine.step_fused(self.st, active, modes)
             self.stats["steps"] += 1
-            t_step = self.clock() if self.record_steps else 0.0
-            for i in np.nonzero(mask)[0]:
-                s = self.slots[i]
-                s.append([int(x) for x in so.tokens[i, : so.counts[i]]])
-                s.accepts.append(int(so.accept_len[i]))
-                s.steps += 1
-                if self.record_steps:
-                    self.step_log.append((t_step, s.req.request_id,
-                                          int(so.counts[i])))
+            self._harvest(so, active)
+        else:
+            # grouped A/B path: one masked dispatch per distinct mode
+            for mid in distinct:
+                mask = active & (modes == mid)
+                self.st, so = self.engine.step_rows(self.st,
+                                                    MODE_NAMES[mid], mask)
+                self.stats["steps"] += 1
+                self._harvest(so, mask)
         return True
+
+    def _harvest(self, so, mask: np.ndarray) -> None:
+        """Collect one step's tokens into the stepped slots (+ the
+        step-gap log when ``record_steps``)."""
+        t_step = self.clock() if self.record_steps else 0.0
+        for i in np.nonzero(mask)[0]:
+            s = self.slots[i]
+            s.append([int(x) for x in so.tokens[i, : so.counts[i]]])
+            s.accepts.append(int(so.accept_len[i]))
+            s.steps += 1
+            if self.record_steps:
+                self.step_log.append((t_step, s.req.request_id,
+                                      int(so.counts[i])))
 
     def run(self) -> List[RequestOutput]:
         """Drive ticks until the queue and all slots drain.  Returns this

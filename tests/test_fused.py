@@ -1,0 +1,385 @@
+"""Fused multi-mode decode step (the mode vector as an operand).
+
+The invariants under test:
+
+* ``vf.build_verify_inputs_fused`` reproduces the grouped builders'
+  values exactly — uniform layouts (p_eff = P, p_eff = 1) match
+  ``build_verify_inputs`` bit-for-bit, and mixed per-row layouts match
+  the corresponding uniform row (live operands in identical lane
+  positions, only trailing zeros appended).
+* A tick with ANY per-row mode mix executes exactly ONE jitted engine
+  dispatch (``SpecPVEngine.dispatches``), with greedy outputs
+  token-identical to the grouped per-mode path — in the contiguous,
+  paged, and paged+prefix-shared layouts.
+* A hypothesis sweep over randomized per-row mode vectors checks the
+  stronger per-row independence property: ``step_fused(st, rows, modes)``
+  equals stepping each mode group separately via ``step_rows``, for
+  arbitrary (even automaton-invalid) mode assignments.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import SpecPVEngine
+from repro.core.draft import init_draft_params
+from repro.core.engine import (MODE_FULL, MODE_NAMES, MODE_PARTIAL,
+                               MODE_REFRESH)
+from repro.core import tree as tr
+from repro.core import verify as vf
+from repro.models import api
+from repro.serving import Request
+from repro.serving.scheduler import ContinuousScheduler, trim_output
+
+pytestmark = pytest.mark.fused
+
+
+# ---------------------------------------------------------------------------
+# builder equivalence (pure functions, quick-loop friendly)
+# ---------------------------------------------------------------------------
+
+def _rand_inputs(rng, b, p, tree):
+    pending = jnp.asarray(rng.integers(0, 100, (b, p)), jnp.int32)
+    plen = jnp.asarray(rng.integers(1, p + 1, (b,)), jnp.int32)
+    tree_tokens = jnp.asarray(rng.integers(0, 100, (b, tree.size)),
+                              jnp.int32)
+    seq_len = jnp.asarray(rng.integers(p + 1, 50, (b,)), jnp.int32)
+    return pending, plen, tree_tokens, seq_len
+
+
+def test_fused_builder_matches_uniform_layouts(rng):
+    """p_eff uniform (all P / all 1) must equal build_verify_inputs."""
+    tree = tr.TreeSpec.from_branch((2, 2, 1))
+    b, p = 3, 6
+    pending, plen, tree_tokens, seq_len = _rand_inputs(rng, b, p, tree)
+    active = jnp.asarray([True, True, False])
+    for pend, pl, pe in (
+            (pending, plen, jnp.full((b,), p, jnp.int32)),     # refresh
+            (pending[:, :1], jnp.ones((b,), jnp.int32),
+             jnp.ones((b,), jnp.int32))):                      # narrow
+        ref = vf.build_verify_inputs(tree, pend, pl, tree_tokens, seq_len,
+                                     active=active)
+        got = vf.build_verify_inputs_fused(tree, pend, pl, pe, tree_tokens,
+                                           seq_len, active=active)
+        for k in ("tokens", "positions", "self_mask", "root_slot",
+                  "node_slots", "pend_valid"):
+            assert np.array_equal(np.asarray(ref[k]), np.asarray(got[k])), k
+
+
+def test_fused_builder_mixed_rows_match_uniform_rows(rng):
+    """A mixed p_eff build equals, row by row, the uniform build that
+    row would get — the bit-identity anchor of the fused step."""
+    tree = tr.TreeSpec.from_branch((2, 1))
+    b, p = 4, 5
+    pending, plen, tree_tokens, seq_len = _rand_inputs(rng, b, p, tree)
+    p_eff = jnp.asarray([p, 1, p, 1], jnp.int32)
+    # narrow rows carry plen 1 and their token in pend slot 0
+    plen = jnp.where(p_eff == 1, 1, plen)
+    mixed = vf.build_verify_inputs_fused(tree, pending, plen, p_eff,
+                                         tree_tokens, seq_len)
+    wide = vf.build_verify_inputs_fused(tree, pending, plen,
+                                        jnp.full((b,), p, jnp.int32),
+                                        tree_tokens, seq_len)
+    narrow = vf.build_verify_inputs(tree, pending[:, :1],
+                                    jnp.ones((b,), jnp.int32),
+                                    tree_tokens, seq_len)
+    s_narrow = 1 + tree.size
+    for i in range(b):
+        if int(p_eff[i]) == p:
+            for k in ("tokens", "positions", "root_slot", "node_slots"):
+                assert np.array_equal(np.asarray(mixed[k])[i],
+                                      np.asarray(wide[k])[i]), (k, i)
+            assert np.array_equal(np.asarray(mixed["self_mask"])[i],
+                                  np.asarray(wide["self_mask"])[i]), i
+        else:
+            # narrow rows: the live prefix matches the narrow layout,
+            # everything beyond it is zero padding / all-False mask
+            for k in ("tokens", "positions"):
+                got = np.asarray(mixed[k])[i]
+                assert np.array_equal(got[:s_narrow],
+                                      np.asarray(narrow[k])[i]), (k, i)
+                assert not got[s_narrow:].any(), (k, i)
+            gm = np.asarray(mixed["self_mask"])[i]
+            assert np.array_equal(gm[:s_narrow, :s_narrow],
+                                  np.asarray(narrow["self_mask"])[i]), i
+            assert not gm[s_narrow:].any() and not gm[:, s_narrow:].any(), i
+            assert np.asarray(mixed["node_slots"])[i, 0] == 1
+
+
+def test_commit_slots_scalar_and_per_row_offsets(rng):
+    tree = tr.TreeSpec.from_branch((2, 2))
+    b, p = 3, 4
+    pend_valid = jnp.asarray(rng.integers(0, 2, (b, p)), bool)
+    path = jnp.asarray(rng.integers(-1, tree.size, (b, tree.depth)),
+                       jnp.int32)
+    s_ref, v_ref = vf.commit_slots(tree, pend_valid, path, p)
+    s_got, v_got = vf.commit_slots(tree, pend_valid, path,
+                                   jnp.full((b,), p, jnp.int32))
+    assert np.array_equal(np.asarray(s_ref), np.asarray(s_got))
+    assert np.array_equal(np.asarray(v_ref), np.asarray(v_got))
+
+
+# ---------------------------------------------------------------------------
+# engine-level identity + dispatch accounting
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny(key, small_dcfg):
+    cfg = get_config("tiny-dense")
+    params = api.init_params(cfg, key)
+    dparams = init_draft_params(cfg, small_dcfg, jax.random.PRNGKey(1))
+    return cfg, params, dparams
+
+
+def _mk_engine(tiny, small_spec, small_dcfg, batch, **kw):
+    cfg, params, dparams = tiny
+    return SpecPVEngine(cfg, small_spec, small_dcfg, params, dparams,
+                        batch=batch, max_len=512,
+                        partial_verification=True, **kw)
+
+
+def _mk_req(cfg, rid, length, max_new, seed, **kw):
+    rng = np.random.default_rng(seed)
+    prompt = rng.integers(0, cfg.vocab_size, (length,)).astype(np.int32)
+    return Request(request_id=rid, prompt=prompt, max_new_tokens=max_new,
+                   **kw)
+
+
+def _run_sched(engine, reqs, fused):
+    sched = ContinuousScheduler(engine, prefill_chunk=64, fused=fused)
+    for r in reqs:
+        sched.submit(r)
+    sched.run()
+    return sched
+
+
+@pytest.mark.slow
+@pytest.mark.serving
+@pytest.mark.parametrize("paged", [False, True], ids=["contig", "paged"])
+def test_fused_vs_grouped_token_identity(tiny, small_spec, small_dcfg,
+                                         paged):
+    """Mixed lengths straddling the partial budget: fused ticks must be
+    token-identical to grouped per-mode ticks (and to solo), with
+    strictly fewer dispatches whenever modes diverged."""
+    cfg, params, dparams = tiny
+    eng = _mk_engine(tiny, small_spec, small_dcfg, batch=3, paged=paged)
+
+    def reqs():
+        return [_mk_req(cfg, "a", 48, 12, seed=2),
+                _mk_req(cfg, "b", 160, 12, seed=3),
+                _mk_req(cfg, "c", 96, 12, seed=4),
+                _mk_req(cfg, "d", 200, 12, seed=5)]
+
+    grouped = _run_sched(eng, reqs(), fused=False)
+    fused = _run_sched(eng, reqs(), fused=True)
+    for rid in ("a", "b", "c", "d"):
+        assert np.array_equal(grouped.outputs[rid].tokens,
+                              fused.outputs[rid].tokens), rid
+    # the stats split: dispatches vs per-mode rows
+    assert fused.stats["steps"] < grouped.stats["steps"]
+    for k in list(grouped.stats) + list(fused.stats):
+        if k.startswith(("mode_rows_", "ticks_modes_")):
+            assert grouped.stats[k] == fused.stats[k], k
+    # fused: one dispatch per decode tick, exactly
+    ticks = sum(v for k, v in fused.stats.items()
+                if k.startswith("ticks_modes_"))
+    assert fused.stats["steps"] == ticks
+
+    solo = SpecPVEngine(cfg, small_spec, small_dcfg, params, dparams,
+                        batch=1, max_len=512, partial_verification=True)
+    for r in reqs():
+        toks, _ = solo.generate(r.prompt[None], r.max_new_tokens,
+                                eos_id=r.eos_id, prefill_chunk=64)
+        row = toks[0]
+        ref = trim_output([int(x) for x in row[row >= 0]],
+                          r.max_new_tokens, r.eos_id)
+        assert np.array_equal(fused.outputs[r.request_id].tokens, ref), \
+            r.request_id
+
+
+@pytest.mark.slow
+@pytest.mark.serving
+@pytest.mark.paged
+@pytest.mark.prefix
+def test_fused_vs_grouped_prefix_shared(tiny, small_spec, small_dcfg):
+    """Fused ticks over prefix-shared paged slots (CoW pages in play)
+    stay token-identical to the grouped path."""
+    cfg, _, _ = tiny
+    eng = _mk_engine(tiny, small_spec, small_dcfg, batch=3, paged=True)
+    shared = np.random.default_rng(7).integers(
+        0, cfg.vocab_size, (128,)).astype(np.int32)
+
+    def reqs():
+        out = []
+        for i in range(3):
+            tail = np.random.default_rng(20 + i).integers(
+                0, cfg.vocab_size, (32 + 16 * i,)).astype(np.int32)
+            out.append(Request(request_id=f"s{i}",
+                               prompt=np.concatenate([shared, tail]),
+                               max_new_tokens=10))
+        return out
+
+    grouped = _run_sched(eng, reqs(), fused=False)
+    fused = _run_sched(eng, reqs(), fused=True)
+    for i in range(3):
+        assert np.array_equal(grouped.outputs[f"s{i}"].tokens,
+                              fused.outputs[f"s{i}"].tokens), i
+    assert eng.prefix_stats()["blocks_matched"] > 0  # sharing was live
+
+
+@pytest.mark.slow
+@pytest.mark.serving
+def test_three_mode_tick_is_one_dispatch(tiny, small_spec, small_dcfg):
+    """The acceptance regression: a tick whose three slots want FULL,
+    REFRESH and PARTIAL executes exactly one jitted engine step, with
+    outputs token-identical to the grouped path."""
+    cfg, _, _ = tiny
+
+    def run(fused):
+        eng = _mk_engine(tiny, small_spec, small_dcfg, batch=3)
+        st = eng.empty_state()
+        rng = np.random.default_rng(9)
+        pa = rng.integers(0, cfg.vocab_size, (48,)).astype(np.int32)
+        pb = rng.integers(0, cfg.vocab_size, (160,)).astype(np.int32)
+        pc = rng.integers(0, cfg.vocab_size, (176,)).astype(np.int32)
+        st, ta = eng.prefill_into_slot(st, 0, pa, chunk=64)   # FULL
+        st, tc = eng.prefill_into_slot(st, 2, pc, chunk=64)
+        # step rows 0+2 once: slot 2 refreshes -> its pkv goes live
+        rows02 = np.array([True, False, True])
+        outs = {0: [ta], 2: [tc]}
+        if fused:
+            st, so = eng.step_fused(st, rows02,
+                                    eng.modes_for_rows(st, rows02))
+            for i in (0, 2):
+                outs[i].extend(int(x) for x in so.tokens[i, :so.counts[i]])
+        else:
+            for m, mask in sorted(
+                    eng.select_mode_rows(st, rows02).items()):
+                st, so = eng.step_rows(st, m, mask)
+                for i in np.nonzero(mask)[0]:
+                    outs[i].extend(int(x)
+                                   for x in so.tokens[i, :so.counts[i]])
+        # admit slot 1 (long, fresh): it wants REFRESH while slot 2
+        # wants PARTIAL and slot 0 wants FULL -> a genuine 3-mode tick
+        st, tb = eng.prefill_into_slot(st, 1, pb, chunk=64)
+        outs[1] = [tb]
+        rows = np.ones((3,), bool)
+        modes = eng.modes_for_rows(st, rows)
+        assert sorted(MODE_NAMES[int(m)] for m in modes) == \
+            ["full", "partial", "refresh"]
+        if fused:
+            before = eng.dispatches
+            st, so = eng.step_fused(st, rows, modes)
+            assert eng.dispatches == before + 1      # ONE jitted step
+            assert so.mode == "fused"
+            assert np.array_equal(so.modes, modes)
+            for i in range(3):
+                outs[i].extend(int(x) for x in so.tokens[i, :so.counts[i]])
+        else:
+            before = eng.dispatches
+            for m, mask in sorted(eng.select_mode_rows(st, rows).items()):
+                st, so = eng.step_rows(st, m, mask)
+                for i in np.nonzero(mask)[0]:
+                    outs[i].extend(int(x)
+                                   for x in so.tokens[i, :so.counts[i]])
+            assert eng.dispatches == before + 3      # grouped pays 3
+        return outs
+
+    grouped = run(fused=False)
+    fused = run(fused=True)
+    assert grouped == fused
+
+
+@pytest.mark.slow
+@pytest.mark.paged
+def test_fused_paged_kernel_route_matches(tiny, small_spec, small_dcfg,
+                                          monkeypatch):
+    """A mixed FULL/PARTIAL fused tick through the forced Pallas route
+    (ragged per-row page counts: partial rows pass effective length 0
+    and stream only the null page) must reproduce the gathered-view
+    tokens."""
+    from repro.models import dense as dn
+    cfg, params, dparams = tiny
+    rng = np.random.default_rng(13)
+    pa = rng.integers(0, cfg.vocab_size, (48,)).astype(np.int32)
+    pb = rng.integers(0, cfg.vocab_size, (160,)).astype(np.int32)
+
+    def run(spec):
+        eng = SpecPVEngine(cfg, spec, small_dcfg, params, dparams,
+                           batch=2, max_len=512,
+                           partial_verification=True, paged=True)
+        st = eng.empty_state()
+        st, ta = eng.prefill_into_slot(st, 0, pa, chunk=64)
+        st, tb = eng.prefill_into_slot(st, 1, pb, chunk=64)
+        outs = {0: [ta], 1: [tb]}
+        rows = np.ones((2,), bool)
+        for _ in range(4):          # refresh, then mixed full+partial
+            st, so = eng.step_fused(st, rows, eng.modes_for_rows(st, rows))
+            for i in (0, 1):
+                outs[i].extend(int(x) for x in so.tokens[i, :so.counts[i]])
+        return outs
+
+    ref = run(small_spec)
+    monkeypatch.setattr(dn, "_paged_kernel_ok", lambda: True)
+    kern = run(small_spec.replace(use_pallas=True))
+    assert ref == kern
+
+
+@pytest.mark.slow
+def test_fused_random_mode_mixes_hypothesis(tiny, small_spec, small_dcfg):
+    """Per-row independence: for ARBITRARY per-row mode vectors (even
+    ones the automaton would never emit), one fused dispatch equals
+    stepping each mode group separately on the same start state."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st_
+
+    cfg, _, _ = tiny
+    eng = _mk_engine(tiny, small_spec, small_dcfg, batch=3)
+    base = eng.empty_state()
+    rng = np.random.default_rng(11)
+    for slot, n in enumerate((48, 160, 176)):
+        prompt = rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+        base, _ = eng.prefill_into_slot(base, slot, prompt, chunk=64)
+    # one refresh step so partial mode has a live pkv to read
+    base, _ = eng.step_fused(base, np.ones((3,), bool),
+                             eng.modes_for_rows(base, np.ones((3,), bool)))
+    base_pkv_active = eng._pkv_active_rows.copy()
+
+    def snapshot(st):
+        return jax.tree_util.tree_map(jnp.copy, st)
+
+    @given(modes=st_.lists(st_.sampled_from(
+               [MODE_FULL, MODE_REFRESH, MODE_PARTIAL]),
+               min_size=3, max_size=3),
+           rows=st_.lists(st_.booleans(), min_size=3, max_size=3))
+    @settings(max_examples=8, deadline=None)
+    def check(modes, rows):
+        rows = np.asarray(rows, bool)
+        if not rows.any():
+            rows = np.array([True, False, False])
+        modes = np.asarray(modes, np.int8)
+
+        eng._pkv_active_rows[:] = base_pkv_active
+        st_f, so_f = eng.step_fused(snapshot(base), rows, modes)
+
+        eng._pkv_active_rows[:] = base_pkv_active
+        st_g = snapshot(base)
+        toks_g = np.zeros_like(so_f.tokens)
+        counts_g = np.zeros_like(so_f.counts)
+        for mid in sorted({int(m) for m in modes[rows]}):
+            mask = rows & (modes == mid)
+            st_g, so = eng.step_rows(st_g, MODE_NAMES[mid], mask)
+            toks_g[mask] = so.tokens[mask]
+            counts_g[mask] = so.counts[mask]
+
+        for i in np.nonzero(rows)[0]:
+            n = counts_g[i]
+            assert so_f.counts[i] == n, (i, modes, rows)
+            assert np.array_equal(so_f.tokens[i, :n], toks_g[i, :n]), \
+                (i, modes, rows)
+        for name in ("seq_len", "pending_len", "buf_len"):
+            assert np.array_equal(np.asarray(getattr(st_f, name)),
+                                  np.asarray(getattr(st_g, name))), name
+
+    check()

@@ -363,9 +363,12 @@ def test_shared_prefix_token_identity_and_single_copy(tiny, share_engine,
     cold = sum(share_engine.pages_needed(len(r.prompt), MAX_NEW)
                for r in reqs)
     assert al.high_water == cold - 6
-    # the cache still pins the registered blocks after both slots freed
-    assert al.in_use == len(share_engine._prefix) > 0
-    share_engine.reclaim_pages(1 << 30)        # drop idle prefixes
+    # the cache still pins the registered blocks — plus each prompt's
+    # final-partial-block tail entry — after both slots freed
+    ps2 = share_engine.prefix_stats()
+    assert ps2["tails"] == 2
+    assert al.in_use == len(share_engine._prefix) + ps2["tails"] > 0
+    share_engine.reclaim_pages(1 << 30)        # drop idle prefixes + tails
     assert al.in_use == 0 and share_engine._draft_alloc.in_use == 0
 
 
@@ -445,7 +448,8 @@ def test_fork_slot_cow_isolation(tiny, share_engine):
         al.refcount(p) > 1 for p in al.pages_of(0))
     st = eng.reset_slot(st, 0)
     st = eng.reset_slot(st, 1)
-    assert al.in_use == len(eng._prefix)       # only cached prefixes stay
+    # only cached prefixes (chain blocks + whole-prompt tails) stay
+    assert al.in_use == len(eng._prefix) + eng.prefix_stats()["tails"]
     eng.reclaim_pages(1 << 30)
     assert al.in_use == 0 and dal.in_use == 0
 
@@ -479,6 +483,58 @@ def test_admission_shortfall_rolls_back_attach(tiny, small_spec, small_dcfg):
     assert all(al.refcount(p) == 1 for p in pages)   # only the cache ref
     eng.reclaim_pages(1 << 30)
     assert al.in_use == 0 and dal.in_use == 0
+
+
+@pytest.mark.slow
+@pytest.mark.serving
+def test_tail_entry_whole_prompt_attach(tiny, small_spec, small_dcfg,
+                                        solo_contig):
+    """Speculative last-partial-block sharing: a prompt ending in a
+    partial block registers a tail entry at prefill finalise; an
+    identical later prompt attaches the WHOLE prompt (chain + tail) by
+    reference, skips prefill entirely, and still produces bit-identical
+    outputs — even though the first request kept decoding (its commits
+    write into the very block it registered, which CoW must freeze)."""
+    cfg, params, dparams = tiny
+    eng = SpecPVEngine(cfg, small_spec, small_dcfg, params, dparams,
+                       batch=2, max_len=MAX_LEN, partial_verification=True,
+                       paged=True)
+    bs = small_spec.block_size
+    prompt = _prompt(cfg, 9 * bs + 6, seed=31)     # 9 full blocks + 6 tail
+    other = _prompt(cfg, 90, seed=32)
+
+    sched = ContinuousScheduler(eng, prefill_chunk=64)
+    sched.submit(Request(request_id="cold", prompt=prompt,
+                         max_new_tokens=MAX_NEW))
+    sched.submit(Request(request_id="other", prompt=other,
+                         max_new_tokens=MAX_NEW))
+    sched.run()
+    ps = eng.prefix_stats()
+    assert ps["tails"] == 2 and ps["tail_hits"] == 0
+
+    skipped0 = ps["prefill_tokens_skipped"]
+    sched.submit(Request(request_id="warm", prompt=prompt.copy(),
+                         max_new_tokens=MAX_NEW))
+    sched.run()
+    ps = eng.prefix_stats()
+    assert ps["tail_hits"] == 1
+    # the whole prompt was attached: zero prefill FLOPs for "warm"
+    assert ps["prefill_tokens_skipped"] - skipped0 == len(prompt)
+
+    cold = sched.outputs["cold"].tokens
+    warm = sched.outputs["warm"].tokens
+    assert np.array_equal(cold, warm)
+    ref = _solo_ref(solo_contig, Request(request_id="x", prompt=prompt,
+                                         max_new_tokens=MAX_NEW))
+    assert np.array_equal(warm, ref)
+    # admission accounting: every full block is discounted, the tail
+    # block stays billed (its attach is a fresh-page copy, so the gate
+    # exactly covers _attach_tail_slot's allocation — no deferred debt)
+    assert eng.pages_needed_shared(prompt, MAX_NEW) == \
+        max(eng.pages_needed(len(prompt), MAX_NEW) - len(prompt) // bs, 0)
+    # everything reclaims: no leaked references from attach/register/CoW
+    eng.reclaim_pages(1 << 30)
+    assert eng._page_alloc.in_use == 0 and eng._draft_alloc.in_use == 0
 
 
 # ---------------------------------------------------------------------------
