@@ -19,7 +19,7 @@ from repro.core import SpecPVEngine  # noqa
 from repro.data import continuation_task  # noqa
 from repro.kvcache.offload import full_step_bytes, partial_step_bytes  # noqa
 
-PCIE_GBPS = 25.0  # paper's RTX-4090 host link
+PCIE_GB_S = 25.0  # paper's RTX-4090 host link, gigaBYTES/s (PCIe 4.0 x16)
 
 
 def main(quick: bool = False):
@@ -39,22 +39,27 @@ def main(quick: bool = False):
         tm = eng.traffic
         total_mib = tm.total() / 2**20
         steps = stats["steps"]
-        modelled_ms = tm.modelled_time_s(PCIE_GBPS) / max(steps, 1) * 1e3
+        modelled_ms = tm.modelled_time_s(PCIE_GB_S) / max(steps, 1) * 1e3
         rows.append(["partial" if partial else "full-verify",
                      steps,
                      {k: f"{v/2**20:.1f}MiB"
                       for k, v in tm.bytes_by_mode.items()},
                      f"{total_mib:.1f}", f"{modelled_ms:.3f}"])
-    # projected at the paper's 60K context for an 8B-class model
+    # projected at the paper's 60K context for an 8B-class model; the
+    # partial-step tokens are the paper-default partial cache size —
+    # budget (sink+retrieval+local blocks) + buffer — derived from
+    # SpecPVConfig, not hardcoded (4480 + 96 = 4576 at the defaults)
+    paper_spec = SpecPVConfig()
+    partial_tokens = paper_spec.partial_budget_tokens + paper_spec.buffer_size
     proj = []
     for name, fn, arg in [
             ("full@60K", full_step_bytes, 61440),
-            ("partial@60K", partial_step_bytes, 4576)]:
+            ("partial@60K", partial_step_bytes, partial_tokens)]:
         nbytes = fn(32, 1, arg, 8, 128, 2)
         proj.append([name, "-", "-", f"{nbytes/2**20:.1f}",
-                     f"{nbytes/ (PCIE_GBPS*1e9) * 1e3:.2f}"])
+                     f"{nbytes/ (PCIE_GB_S*1e9) * 1e3:.2f}"])
     header = ["mode", "steps", "bytes_by_mode", "total_MiB",
-              "modelled_ms/step@25GBps"]
+              "modelled_ms/step@25GB/s"]
     print_table("Fig.4 — cache-traffic (offload analogue)", header,
                 rows + proj)
     write_rows(os.path.join(RESULTS_DIR, "fig4_offload.csv"), header,

@@ -48,6 +48,20 @@ distinct-modes-per-tick histogram, jitted dispatches per decode tick,
 per-mode stepped rows, and decode-step gap p50/p95, and verifies the
 two schedules produce token-identical outputs.
 
+``--tiered`` is the memory-pressure A/B for tiered KV residency
+(``ServingConfig(tiered_kv=...)``): long-context requests (every prompt
+far past the partial budget) are served four ways on two engines —
+(a) untiered with a full-parity pool (the working-set W and decode-gap
+baseline), (b) untiered with the pool shrunk to ~W/4 (admission
+collapses to ~1 concurrent slot), (c) tiered-lossless on the same
+shrunken pool (cold pages demote to host after each refresh, so the
+pool only has to seat the hot working set — concurrency comes back at a
+flat decode-gap p95, token-identical to (a)), and (d) tiered-int8 (the
+quality/traffic trade: ~half the host bytes, outputs may diverge — the
+mismatch count is reported).  Reports peak concurrent slots, page
+high-water, decode-gap p50/p95, admission stalls/defers, and the
+demote/promote/prefetch counters.
+
 Run:  PYTHONPATH=src python benchmarks/bench_serving.py --requests 8
       PYTHONPATH=src python benchmarks/bench_serving.py --requests 8 --paged
       PYTHONPATH=src python benchmarks/bench_serving.py --requests 8 \
@@ -56,6 +70,7 @@ Run:  PYTHONPATH=src python benchmarks/bench_serving.py --requests 8
           --interleave
       PYTHONPATH=src python benchmarks/bench_serving.py --requests 8 \
           --fused
+      PYTHONPATH=src python benchmarks/bench_serving.py --tiered
 """
 import argparse
 import time
@@ -353,6 +368,158 @@ def run_fused(args, cfg, dcfg, params, dparams, corpus, spec, contexts):
                 for m, r in results.items()])
 
 
+def run_tiered(args, cfg, dcfg, params, dparams, corpus, spec, contexts):
+    """Tiered-residency memory-pressure A/B (see module docstring): the
+    same long-context Poisson request set through (a) untiered/parity
+    pool, (b) untiered/shrunken pool, (c) tiered-lossless/shrunken,
+    (d) tiered-int8/shrunken.  Two engines total: (b) swaps (a)'s trunk
+    allocator, (d) flips (c)'s quantization — so each pair shares its
+    jit compiles and the arms differ only in residency policy."""
+    from repro.kvcache.cache import PageAllocator
+
+    rng = np.random.default_rng(args.seed)
+    reqs = make_requests(corpus, contexts, args.requests, args.rate, rng,
+                         args.max_new)
+    max_len = max(contexts) + args.max_new + 128
+    nb_seq = -(-max_len // spec.block_size)
+    parity = args.batch * nb_seq + 1
+    emax = TreeSpec.from_branch(dcfg.tree_branch[: dcfg.tree_depth]).max_path
+    need_max = -(-request_token_need(max(contexts), args.max_new,
+                                     spec.buffer_size, emax)
+                 // spec.block_size)
+    print(f"tiered A/B: {args.requests} requests, contexts {contexts} "
+          f"(all past the {spec.partial_budget_tokens}-token partial "
+          f"budget), batch {args.batch}, max_new {args.max_new}; "
+          f"largest request needs {need_max} pages")
+
+    def build(tiered):
+        return SpecPVEngine(cfg, spec, dcfg, params, dparams,
+                            batch=args.batch, max_len=max_len,
+                            partial_verification=True, paged=True,
+                            num_pages=(parity if not tiered else small[0]),
+                            num_draft_pages=parity, prefix_cache=False,
+                            tiered=tiered, tier_lossless=True)
+
+    def drive(eng, label, warm=True):
+        if warm and not args.no_warmup:
+            # replay the whole set once so every fused mode-mix variant
+            # the real schedule produces is compiled outside the timed
+            # region (the scheduler boot resets allocators afterwards)
+            warm = ContinuousScheduler(eng, prefill_chunk=64,
+                                       prefill_budget=args.prefill_budget)
+            for _, r in reqs:
+                warm.submit(Request(request_id=f"warm-{r.request_id}",
+                                    prompt=r.prompt,
+                                    max_new_tokens=r.max_new_tokens))
+            warm.run()
+        tier0 = eng.tier_stats()
+        if eng.tiered:      # per-run peak (deltas can't subtract a max)
+            eng._tier.host_bytes_peak = 0
+        # chunked-prefill interleaving in every arm: under memory pressure
+        # admissions happen mid-run, and a blocking 700+-token prefill
+        # would dominate the decode-gap tail for reasons unrelated to
+        # residency (exactly the PR-4 jitter --interleave measures)
+        sched = ContinuousScheduler(eng, prefill_chunk=64,
+                                    prefill_budget=args.prefill_budget,
+                                    record_steps=True)
+        t0 = time.time()
+        for off, r in reqs:
+            sched.submit(Request(request_id=r.request_id, prompt=r.prompt,
+                                 max_new_tokens=r.max_new_tokens,
+                                 eos_id=r.eos_id, arrival_s=t0 + off))
+        outs = sched.run()
+        wall = time.time() - t0
+        toks = sum(len(o.tokens) for o in outs)
+        gaps = step_gap_stats(sched.step_log)
+        g50, g95 = percentiles(gaps) if gaps.size else (0.0, 0.0)
+        ps = eng.page_stats()
+        tier = {k: v - tier0.get(k, 0) for k, v in eng.tier_stats().items()}
+        if eng.tiered:
+            tier["tier_host_bytes_peak"] = \
+                eng.tier_stats()["tier_host_bytes_peak"]
+        r = dict(outs={o.request_id: o.tokens for o in outs},
+                 tput=toks / wall, g50=g50, g95=g95,
+                 peak=int(sched.stats.get("peak_active", 0)),
+                 stalls=int(sched.stats.get("page_stalls", 0)),
+                 defers=int(sched.stats.get("tier_defers", 0)),
+                 hw=ps["resident_high_water"], cap=ps["capacity"],
+                 tier=tier)
+        print(f"{label:>16}: {toks} tokens in {wall:.1f}s -> "
+              f"{r['tput']:.1f} tok/s; peak concurrent slots {r['peak']}, "
+              f"pages high-water {r['hw']}/{r['cap']}, decode-gap "
+              f"p50={g50 * 1e3:.1f}ms p95={g95 * 1e3:.1f}ms, "
+              f"stalls {r['stalls']}, defers {r['defers']}")
+        if tier.get("tier_demoted_pages"):
+            print(f"{'':>16}  tier: demoted {tier['tier_demoted_pages']} / "
+                  f"promoted {tier['tier_promoted_pages']} pages, prefetch "
+                  f"hits {tier['tier_prefetch_hits']}, sync promotes "
+                  f"{tier['tier_sync_promotes']}, host bytes peak "
+                  f"{tier['tier_host_bytes_peak'] / 2 ** 20:.2f}MiB")
+        return r
+
+    results = {}
+    small = [0]                                    # filled after baseline
+    eng_flat = build(tiered=False)
+    results["untiered/parity"] = drive(eng_flat, "untiered/parity")
+    W = results["untiered/parity"]["hw"]
+    small[0] = max(int(np.ceil(W / args.tier_shrink)), need_max + 2) + 1
+    shrink = W / (small[0] - 1)
+    print(f"working set W = {W} pages -> shrunken pool "
+          f"{small[0] - 1} usable ({shrink:.1f}x below W)")
+    eng_flat._page_alloc = PageAllocator(small[0])
+    try:
+        results["untiered/small"] = drive(eng_flat, "untiered/small",
+                                          warm=False)
+    finally:
+        eng_flat._page_alloc = PageAllocator(parity)
+
+    eng_tier = build(tiered=True)
+    results["tiered/small"] = drive(eng_tier, "tiered-lossless/small")
+    if not args.skip_int8:
+        eng_tier._tier.lossless = False
+        results["tiered-int8/small"] = drive(eng_tier, "tiered-int8/small",
+                                             warm=False)
+
+    base = results["untiered/parity"]
+    mism = {}
+    for name in ("untiered/small", "tiered/small", "tiered-int8/small"):
+        if name in results:
+            mism[name] = sum(
+                not np.array_equal(toks, base["outs"][rid])
+                for rid, toks in results[name]["outs"].items())
+    if not args.no_check:
+        assert mism["tiered/small"] == 0, \
+            "tiered-lossless outputs diverged from the untiered baseline"
+        print("losslessness: tiered-lossless outputs token-identical to "
+              "the untiered parity-pool baseline")
+    if "tiered-int8/small" in results:
+        print(f"int8 quality delta: {mism['tiered-int8/small']}"
+              f"/{args.requests} requests diverge from the baseline")
+    rt, rs = results["tiered/small"], results["untiered/small"]
+    print(f"headline: {shrink:.1f}x smaller pool holds "
+          f"{rt['peak']} concurrent long-context slots vs "
+          f"{rs['peak']} untiered "
+          f"({rt['peak'] / max(rs['peak'], 1):.1f}x more) at decode-gap "
+          f"p95 {rt['g95'] * 1e3:.1f}ms vs baseline "
+          f"{base['g95'] * 1e3:.1f}ms "
+          f"({rt['g95'] / max(base['g95'], 1e-9):.2f}x)")
+    out = ensure_dir(RESULTS_DIR)
+    write_rows(f"{out}/bench_serving_tiered.csv",
+               ["mode", "usable_pages", "tok_s", "peak_active",
+                "resident_high_water", "gap_p50_ms", "gap_p95_ms",
+                "page_stalls", "tier_defers", "demoted", "promoted",
+                "prefetch_hits", "sync_promotes", "mismatched_requests"],
+               [[m, r["cap"], f"{r['tput']:.2f}", r["peak"], r["hw"],
+                 f"{r['g50'] * 1e3:.2f}", f"{r['g95'] * 1e3:.2f}",
+                 r["stalls"], r["defers"],
+                 r["tier"].get("tier_demoted_pages", 0),
+                 r["tier"].get("tier_promoted_pages", 0),
+                 r["tier"].get("tier_prefetch_hits", 0),
+                 r["tier"].get("tier_sync_promotes", 0),
+                 mism.get(m, 0)]
+                for m, r in results.items()])
+
+
 def run_prefix_share(args, cfg, dcfg, params, dparams, corpus, spec):
     """Shared-system-prompt workload: paged continuous scheduler with the
     copy-on-write prefix cache on vs off (identical request set)."""
@@ -465,6 +632,20 @@ def main():
                     help="A/B grouped-per-mode vs fused decode ticks: "
                          "distinct-modes-per-tick histogram, jitted "
                          "dispatches per tick, decode-gap p50/p95")
+    ap.add_argument("--tiered", action="store_true",
+                    help="tiered-residency memory-pressure A/B: untiered "
+                         "parity pool vs untiered + tiered (lossless and "
+                         "int8) on a ~4.5x smaller pool; long-context "
+                         "defaults (contexts 768 720 768 736, batch 8, "
+                         "max_new 48) unless overridden")
+    ap.add_argument("--tier-shrink", type=float, default=4.5,
+                    help="tiered: shrink the pool to working-set/THIS "
+                         "(floored at the largest single request; the "
+                         "default leaves the shrunken pool below two "
+                         "untiered long requests, so the untiered arm "
+                         "collapses to sequential admission)")
+    ap.add_argument("--skip-int8", action="store_true",
+                    help="tiered: skip the int8 quality-delta arm")
     ap.add_argument("--prefill-budget", type=int, default=64,
                     help="interleave: prefill tokens per tick (>= the "
                          "64-token prefill chunk; the per-tick bound is "
@@ -501,6 +682,27 @@ def main():
         # short prompts stay in Full, long ones cycle Refresh/Partial
         contexts = args.contexts or [64, 192, 96, 256, 224]
         run_fused(args, cfg, dcfg, params, dparams, corpus, spec, contexts)
+        return
+    if args.tiered:
+        # long contexts only, and near-uniform: each prompt's cold pages
+        # (prompt // block) must dwarf its hot partial working set, or a
+        # pool shrink has nothing to demote its way out of — and a much
+        # shorter straggler would still fit the shrunken pool untiered,
+        # muddying the concurrency collapse the A/B demonstrates.
+        # max_new long enough for a second refresh, so the promote +
+        # prefetch path runs in-band.
+        contexts = args.contexts or [768, 720, 768, 736]
+        if args.batch == ap.get_default("batch"):
+            args.batch = 8
+        if args.max_new == ap.get_default("max_new"):
+            args.max_new = 48
+        if args.prefill_budget == ap.get_default("prefill_budget"):
+            # a pumping cursor pins its whole page bill until its first
+            # refresh-demotion, deferring every debt-holding refresh row
+            # meanwhile — a larger per-tick budget keeps that admission
+            # window to a few ticks instead of a dozen
+            args.prefill_budget = 256
+        run_tiered(args, cfg, dcfg, params, dparams, corpus, spec, contexts)
         return
     args.contexts = args.contexts or [64, 192, 96, 160, 224]
     rng = np.random.default_rng(args.seed)

@@ -49,8 +49,8 @@ from repro.core import tree as tr
 from repro.core import verify as vf
 from repro.utils import pytree_dataclass, cdiv
 from repro.kvcache import cache as kvc
-from repro.kvcache.offload import TrafficMeter, full_step_bytes, \
-    partial_step_bytes
+from repro.kvcache.offload import TierManager, TrafficMeter, \
+    full_step_bytes, partial_step_bytes
 
 
 @pytree_dataclass
@@ -203,7 +203,10 @@ class SpecPVEngine:
                  temperature: float = 0.0,
                  paged: bool = False,
                  num_pages: Optional[int] = None,
-                 prefix_cache: bool = True):
+                 num_draft_pages: Optional[int] = None,
+                 prefix_cache: bool = True,
+                 tiered: bool = False,
+                 tier_lossless: bool = False):
         """``paged=True`` (attention archs only) backs the full KV cache
         with a shared block pool + per-slot page tables: resident memory
         scales with tokens actually held instead of batch x max_len, and
@@ -221,7 +224,21 @@ class SpecPVEngine:
         prefill FLOPs for the shared prefix) and registers freshly
         prefilled blocks back; pages are refcounted, freed only when the
         last holder releases them, and idle cached prefixes are evicted
-        LRU under pool pressure."""
+        LRU under pool pressure.
+
+        ``tiered=True`` (paged only) adds host residency for cold trunk
+        pages (``kvcache.offload.TierManager``): after each refresh the
+        slot's committed blocks are demoted to host RAM as int8 (raw fp
+        when ``tier_lossless=True`` — bit-identical round-trip), their
+        device pages recycled, and they are prefetched back one
+        mode-transition ahead of the next refresh (synchronous promote
+        when a refresh arrives early).  The trunk pool can then be sized
+        near the *hot* working set — decode-reserve blocks + promotion
+        headroom — instead of every live token.  ``num_draft_pages``
+        sizes the draft pool independently (default: ``num_pages``);
+        the draft cache is read every step and never tiered, so a
+        tiered deployment keeps a full-size draft pool (~1/L the bytes
+        per page) under a shrunken trunk pool."""
         self.cfg = cfg
         self.spec = spec
         self.dcfg = dcfg
@@ -237,10 +254,16 @@ class SpecPVEngine:
         self._nb_seq = cdiv(max_len, spec.block_size)
         self.num_pages = (num_pages if num_pages is not None
                           else batch * self._nb_seq + 1)
+        self.num_draft_pages = (num_draft_pages if num_draft_pages is not None
+                                else self.num_pages)
         self._page_alloc = (kvc.PageAllocator(self.num_pages)
                             if self.paged else None)
-        self._draft_alloc = (kvc.PageAllocator(self.num_pages)
+        self._draft_alloc = (kvc.PageAllocator(self.num_draft_pages)
                              if self.paged else None)
+        assert not (tiered and not self.paged), \
+            "tiered KV residency needs the paged cache (paged=True)"
+        self._tier = (TierManager(self._page_alloc, lossless=tier_lossless)
+                      if self.paged and tiered else None)
         self._prefix = (kvc.PrefixCache(spec.block_size)
                         if self.paged and prefix_cache else None)
         # slots with fork-derived sharing still alive: only these can
@@ -261,6 +284,8 @@ class SpecPVEngine:
         self.pmax = spec.buffer_size            # max pending (refresh input)
         self.emax = self.tree.max_path          # max draft-extend per step
         self.traffic = TrafficMeter()
+        if self._tier is not None:
+            self._tier.traffic = self.traffic   # demote/promote link bytes
         self._pkv_active = False
         self._pkv_active_rows = np.zeros((batch,), bool)   # per-slot automaton
         self.dispatches = 0             # jitted engine steps executed
@@ -597,6 +622,8 @@ class SpecPVEngine:
             al = self._page_alloc
             self._clear_prefix()        # a reset pool invalidates entries
             al.reset()
+            if self._tier is not None:
+                self._tier.reset()      # host copies of a dead pool
             if b * self._nb_seq > al.capacity:
                 raise ValueError(
                     f"paged generate needs {b * self._nb_seq} pages but the "
@@ -616,7 +643,7 @@ class SpecPVEngine:
             return dr.init_draft_cache(self.cfg, b, self.max_len)
         dcache = dr.init_paged_draft_cache(self.cfg, b, self.max_len,
                                            self.spec.block_size,
-                                           self.num_pages)
+                                           self.num_draft_pages)
         if full_alloc:
             al = self._draft_alloc
             al.reset()
@@ -742,6 +769,8 @@ class SpecPVEngine:
             self._page_alloc.reset()
             self._draft_alloc.reset()
             self._forked_slots.clear()
+            if self._tier is not None:
+                self._tier.reset()
         return self._neutral_state(self.batch)
 
     def _clear_prefix(self) -> None:
@@ -773,6 +802,8 @@ class SpecPVEngine:
             self._page_alloc.free_slot(slot)
             self._draft_alloc.free_slot(slot)
             self._forked_slots.discard(slot)
+            if self._tier is not None:
+                self._tier.drop_slot(slot)
         return self.clear_slot_rows(st, slot)
 
     # ---- page accounting (host side; no-ops when not paged) ----------
@@ -832,6 +863,124 @@ class SpecPVEngine:
             return 0
         return self._prefix.evict_lru(self._page_alloc, self._draft_alloc, n)
 
+    # ---- tiered residency (no-ops when untiered) ---------------------
+    @property
+    def tiered(self) -> bool:
+        return self._tier is not None
+
+    def tier_stats(self) -> Dict[str, int]:
+        """Demote/promote/prefetch counters ({} when untiered)."""
+        return self._tier.stats() if self._tier is not None else {}
+
+    def _refresh_within(self, pending_len: int, steps: int = 1) -> bool:
+        """Could this slot's automaton demand a refresh within `steps`
+        more partial steps, under worst-case acceptance (every step
+        grows pending by the longest tree path + bonus)?  The prefetch
+        trigger: issued one mode-transition ahead, the host->device copy
+        overlaps the remaining partial step(s)."""
+        return self.mode_for(pending_len + steps * (self.emax + 1),
+                             self.spec.partial_budget_tokens + 1,
+                             True) == "refresh"
+
+    def tier_admit_margin(self, prompt_len: int) -> int:
+        """Extra free pages (beyond the request's own fresh-page bill)
+        tiered admission must leave so no live slot's promotion debt can
+        outgrow what the pool can ever seat again.  A long-context
+        request repays ``prompt_len // block`` pages at its first
+        refresh-demotion, so only the *excess* of the worst live debt
+        over that repayment must stay free; a request that may never
+        cross the partial budget (no refresh, no demotion) reserves the
+        full worst debt.  Guarantees every deferred refresh eventually
+        seats: free pages can always climb back to the worst debt once
+        other slots re-demote."""
+        if self._tier is None:
+            return 0
+        cold_new = (prompt_len // self.spec.block_size
+                    if prompt_len > self.spec.partial_budget_tokens else 0)
+        return max(self._page_alloc.max_hosted() - cold_new, 0)
+
+    def tier_ready_rows(self, rows: np.ndarray, modes: np.ndarray,
+                        force: bool = True) -> Tuple[np.ndarray, int]:
+        """Defer full-cache rows whose promotion cannot seat this tick:
+        returns (rows mask minus the deferred slots, number deferred).
+        A deferred slot simply skips the tick — other slots' post-refresh
+        demotions return pages, and ``tier_admit_margin`` bounds every
+        debt, so it seats within a tick or two.  If *every* active row
+        would defer and ``force`` is set, the smallest debt steps anyway:
+        its promote then reclaims idle prefixes or raises loudly instead
+        of the scheduler spinning forever.  Callers that made progress
+        elsewhere this tick pass ``force=False``: an open chunked-prefill
+        cursor holds its whole worst-case page bill until its first
+        refresh-demotion (``prefill_begin_slot`` seats everything up
+        front), so while one is pumping the pool can be legitimately too
+        tight for ANY promotion — the cursor's completion returns the
+        pages, and forcing a promote meanwhile would be the exhaustion
+        it exists to avoid."""
+        if self._tier is None:
+            return rows, 0
+        al = self._page_alloc
+        budget = al.free + al.idle      # promote reclaims idle prefixes
+        out = rows.copy()
+        deferred = []
+        for i in np.nonzero(rows)[0]:
+            i = int(i)
+            if modes[i] == MODE_PARTIAL:
+                continue
+            need = al.hosted_count(i)
+            if need == 0:
+                continue
+            if need <= budget:
+                budget -= need
+            else:
+                out[i] = False
+                deferred.append((need, i))
+        if deferred and not out.any() and force:
+            _, i = min(deferred)
+            out[i] = True
+            deferred = [d for d in deferred if d[1] != i]
+        return out, len(deferred)
+
+    def _tier_promote_rows(self, st: EngineState, rows: np.ndarray,
+                           modes: np.ndarray) -> EngineState:
+        """Pre-dispatch promotion: every stepping row about to read the
+        full cache (FULL/REFRESH) gets its hosted pages seated first —
+        prefetched segments land free, the rest fall back to synchronous
+        transfer (the early-refresh path)."""
+        al = self._page_alloc
+        for i in np.nonzero(rows)[0]:
+            i = int(i)
+            if modes[i] == MODE_PARTIAL:
+                continue
+            need = al.hosted_count(i)
+            if need == 0:
+                continue
+            if need > al.free:
+                self.reclaim_pages(need - al.free)
+            st = dc_replace(st, cache=self._tier.promote_slot(st.cache, i))
+        return st
+
+    def _tier_epilogue(self, st: EngineState, rows: np.ndarray,
+                       modes: np.ndarray) -> EngineState:
+        """Post-dispatch residency pass: rows that just refreshed return
+        to partial mode, so their committed blocks go cold — demote them
+        (recycling the device pages); partial rows whose automaton says
+        the next refresh is at most one step away start their prefetch."""
+        lengths = pending = None
+        for i in np.nonzero(rows)[0]:
+            i = int(i)
+            if modes[i] == MODE_REFRESH and i not in self._forked_slots:
+                if lengths is None:
+                    lengths = np.asarray(st.cache["length"])
+                st = dc_replace(st, cache=self._tier.demote_slot(
+                    st.cache, i, int(lengths[i])))
+            elif (modes[i] == MODE_PARTIAL
+                    and self._page_alloc.hosted_count(i)):
+                if pending is None:
+                    pending = np.asarray(st.pending_len)
+                if self._refresh_within(int(pending[i])):
+                    self._tier.prefetch_slot(i)
+        return st
+
     def release_slot_pages(self, slot: int) -> None:
         """Release an evicted slot's page references ahead of the
         deferred row reset, so same-tick admission sees any pages whose
@@ -840,6 +989,8 @@ class SpecPVEngine:
             self._page_alloc.free_slot(slot)
             self._draft_alloc.free_slot(slot)
             self._forked_slots.discard(slot)
+            if self._tier is not None:
+                self._tier.drop_slot(slot)
 
     def reset_high_water(self) -> None:
         """Zero the page high-water marks (benchmark warmup)."""
@@ -859,14 +1010,18 @@ class SpecPVEngine:
         al = self._page_alloc
         if al is None:
             return {}
-        return dict(num_pages=self.num_pages, capacity=al.capacity,
-                    in_use=al.in_use, idle=al.idle, committed=al.committed,
-                    high_water=al.high_water,
-                    resident_high_water=al.resident_high_water,
-                    draft_in_use=self._draft_alloc.in_use,
-                    draft_high_water=self._draft_alloc.high_water,
-                    contiguous_pages=self.batch * self._nb_seq,
-                    block_size=self.spec.block_size)
+        out = dict(num_pages=self.num_pages, capacity=al.capacity,
+                   in_use=al.in_use, idle=al.idle, committed=al.committed,
+                   high_water=al.high_water,
+                   resident_high_water=al.resident_high_water,
+                   draft_num_pages=self.num_draft_pages,
+                   draft_in_use=self._draft_alloc.in_use,
+                   draft_high_water=self._draft_alloc.high_water,
+                   contiguous_pages=self.batch * self._nb_seq,
+                   block_size=self.spec.block_size)
+        if self._tier is not None:
+            out.update(self._tier.stats())
+        return out
 
     def prefix_stats(self) -> Dict[str, int]:
         """Prefix-cache counters ({} when sharing is off): hit/seen
@@ -920,6 +1075,8 @@ class SpecPVEngine:
         al.free_slot(slot)                      # stale pages, if any
         dal.free_slot(slot)
         self._forked_slots.discard(slot)        # fresh request, no fork
+        if self._tier is not None:
+            self._tier.drop_slot(slot)          # stale host copies too
         bs = self.spec.block_size
         budget = (max_new_tokens if max_new_tokens is not None
                   else max(self.max_len - len(prompt), 0))
@@ -1423,12 +1580,20 @@ class SpecPVEngine:
         # the per-row selects never see an unrepresented mode
         modes = np.where(rows, modes, active_modes[0]).astype(np.int8)
         st = self.prepare_cow(st, rows)
+        if self._tier is not None:
+            # seat hosted pages before any full-cache read (prefetch
+            # hits land free; early refreshes pay a synchronous copy)
+            st = self._tier_promote_rows(st, rows, modes)
         fn = self._fused_fn(has_full, has_partial, has_refresh)
         st, (toks, counts, acc) = fn(self.params, self.dparams, st,
                                      jnp.asarray(rows), jnp.asarray(modes))
         self.dispatches += 1
         self._pkv_active_rows |= rows & (modes == MODE_REFRESH)
         self._record_traffic_rows(modes, st, rows)
+        if self._tier is not None:
+            # refresh epilogue: committed blocks go cold until the next
+            # refresh — demote them; near-refresh partials prefetch
+            st = self._tier_epilogue(st, rows, modes)
         counts = np.where(rows, np.asarray(counts), 0)
         names = sorted({MODE_NAMES[int(m)] for m in active_modes})
         return st, StepOutput(tokens=np.asarray(toks), counts=counts,
@@ -1488,7 +1653,15 @@ class SpecPVEngine:
     def _record_traffic(self, mode: str, st: EngineState,
                         rows: Optional[np.ndarray] = None):
         """rows: which batch rows actually stepped (masked continuous
-        steps); None = the whole batch (lock-step path)."""
+        steps); None = the whole batch (lock-step path).
+
+        Full-cache bytes are billed per row and *summed* — rows step at
+        heterogeneous KV extents, so ``nrows x max(seq_len[rows])``
+        (the old accounting) overstates the traffic whenever lengths
+        diverge.  Refresh additionally bills its partial-cache rebuild:
+        the retrieval-selected blocks (``partial_budget_tokens`` per
+        row) are re-read on top of the full verify pass (the buffer is
+        re-appended from pending state on-device, not re-read)."""
         cfg, spec = self.cfg, self.spec
         if not self.is_attn:
             return
@@ -1497,21 +1670,25 @@ class SpecPVEngine:
         itemsize = 2 if cfg.dtype == "bfloat16" else 4
         seq_len = np.asarray(st.seq_len)
         if rows is None:
-            nrows, seq = self.batch, int(np.max(seq_len))
+            nrows, seq_sum = self.batch, int(np.sum(seq_len))
         else:
             nrows = int(np.sum(rows))
             if nrows == 0:
                 return
-            seq = int(np.max(seq_len[rows]))
+            seq_sum = int(np.sum(seq_len[rows]))
+        hk, dh = cfg.num_kv_heads, cfg.head_dim_
         if mode == "partial":
             nbytes = partial_step_bytes(
                 l_attn, nrows,
                 spec.partial_budget_tokens + spec.buffer_size,
-                cfg.num_kv_heads, cfg.head_dim_, itemsize)
+                hk, dh, itemsize)
         else:
-            nbytes = full_step_bytes(l_attn, nrows, seq,
-                                     cfg.num_kv_heads, cfg.head_dim_,
-                                     itemsize)
+            # batch=1 + per-row-summed context = the analytic sum
+            nbytes = full_step_bytes(l_attn, 1, seq_sum, hk, dh, itemsize)
+            if mode == "refresh":
+                nbytes += partial_step_bytes(
+                    l_attn, nrows, spec.partial_budget_tokens,
+                    hk, dh, itemsize)
         self.traffic.record(mode, nbytes)
 
     # ------------------------------------------------------------------
@@ -1545,7 +1722,13 @@ class SpecPVEngine:
         for i in range(b):
             n = min(len(out[i]), max_new_tokens)
             toks[i, :n] = out[i][:n]
-        stats = dict(steps=steps, mean_accept=float(np.mean(accepts)),
+        # max_new_tokens=1 is satisfied by the prefill's seed token and
+        # never enters the step loop: guard the empty-accepts mean (the
+        # scheduler's _emit does the same) instead of emitting NaN + a
+        # RuntimeWarning into stats
+        stats = dict(steps=steps,
+                     mean_accept=(float(np.mean(accepts))
+                                  if accepts else 0.0),
                      modes={m: modes.count(m) for m in set(modes)},
                      tokens_per_step=float(np.mean(
                          [len(o) for o in out]) / max(steps, 1)))

@@ -1,6 +1,6 @@
 from repro.kvcache.cache import (KVCache, BlockSummaries, PartialKV,
                                  PageAllocator, PrefixCache)
-from repro.kvcache.offload import TrafficMeter
+from repro.kvcache.offload import TierManager, TrafficMeter
 
 __all__ = ["KVCache", "BlockSummaries", "PartialKV", "PageAllocator",
-           "PrefixCache", "TrafficMeter"]
+           "PrefixCache", "TierManager", "TrafficMeter"]

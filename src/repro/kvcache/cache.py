@@ -203,6 +203,15 @@ class PageAllocator:
     attach of a matched prefix, in-place ``cow_write`` replacement)
     preserves logical-block order, so callers may mirror page tables
     from it.
+
+    Residency tiers (``kvcache/offload.py TierManager``): a logical
+    block whose bytes were offloaded to host RAM is *demoted* — its
+    device page returns to the free list and the slot's entry becomes
+    the null page (0), matching what the device page table shows — and
+    ``_hosted`` remembers which blocks the slot is owed.  ``promote``
+    seats a hosted block on a fresh page.  Only exclusively-owned pages
+    (refcount 1, no prefix-cache pin) are ``demotable``; demoted slots
+    cannot fork (a fork would have to add_ref the null page).
     """
 
     def __init__(self, num_pages: int):
@@ -219,6 +228,7 @@ class PageAllocator:
         self._ref = np.zeros((self.num_pages,), np.int32)
         self._cache_ref = np.zeros((self.num_pages,), np.int32)
         self._slot_pages: dict = {}
+        self._hosted: dict = {}         # slot -> set of demoted blocks
 
     @property
     def capacity(self) -> int:
@@ -262,6 +272,65 @@ class PageAllocator:
     def slot_holds_shared(self, slot: int) -> bool:
         """Does `slot` hold any page it does not own exclusively?"""
         return any(self._ref[p] > 1 for p in self._slot_pages.get(slot, ()))
+
+    # -- residency tiers (see class docstring / offload.TierManager) ---
+    def hosted_count(self, slot: int) -> int:
+        """Demoted blocks `slot` is owed — the pages a promotion ahead
+        of its next full-cache read must be able to seat."""
+        return len(self._hosted.get(slot, ()))
+
+    def hosted_blocks(self, slot: int) -> List[int]:
+        return sorted(self._hosted.get(slot, ()))
+
+    @property
+    def hosted_total(self) -> int:
+        return sum(len(v) for v in self._hosted.values())
+
+    def max_hosted(self) -> int:
+        """Largest single-slot promotion debt (admission headroom)."""
+        return max((len(v) for v in self._hosted.values()), default=0)
+
+    def demotable(self, slot: int, block: int) -> bool:
+        """May logical `block` of `slot` leave the device?  Only pages
+        the slot owns exclusively: a shared page is some other holder's
+        (or the prefix cache's) responsibility and must stay servable
+        without a host round-trip."""
+        pages = self._slot_pages.get(slot)
+        if pages is None or block >= len(pages):
+            return False
+        p = pages[block]
+        return p != 0 and self._ref[p] == 1 and self._cache_ref[p] == 0
+
+    def demote(self, slot: int, block: int) -> int:
+        """Release the device page behind a host-offloaded block: the
+        page returns to the free list, the slot's entry becomes the null
+        page (exactly what the device table must show), and the block
+        joins the slot's hosted set.  Returns the recycled page.  The
+        caller must have captured the page's bytes first."""
+        assert self.demotable(slot, block), \
+            f"demote of non-exclusive block {block} of slot {slot}"
+        p = self._slot_pages[slot][block]
+        self._slot_pages[slot][block] = 0
+        self._ref[p] = 0
+        self._free.append(p)
+        self._free_set.add(p)
+        self._hosted.setdefault(slot, set()).add(block)
+        return p
+
+    def promote(self, slot: int, block: int) -> int:
+        """Seat a hosted block on a fresh device page (refcount 1) and
+        clear its promotion debt.  Raises on pool exhaustion with state
+        unchanged (``_take``); the caller fills the page's bytes and
+        repoints the device table."""
+        hosted = self._hosted.get(slot, set())
+        assert block in hosted, \
+            f"promote of non-hosted block {block} of slot {slot}"
+        [p] = self._take(1)
+        self._slot_pages[slot][block] = p
+        hosted.discard(block)
+        if not hosted:
+            self._hosted.pop(slot, None)
+        return p
 
     # -- high_water tracks peak *committed* pages (live-slot working
     # -- set): it moves only in _track(), called where a page can become
@@ -336,6 +405,8 @@ class PageAllocator:
         (copy-on-write fork).  `dst` must not hold pages."""
         assert not self._slot_pages.get(dst), \
             f"fork target slot {dst} still holds pages"
+        assert not self._hosted.get(src) and not self._hosted.get(dst), \
+            "cannot fork a slot with host-demoted blocks (promote first)"
         pages = self.pages_of(src)
         self.attach(dst, pages)
         return pages
@@ -369,9 +440,12 @@ class PageAllocator:
     def free_slot(self, slot: int) -> List[int]:
         """Release `slot`'s references (idempotent).  Returns only the
         pages actually freed — pages still shared with another slot or
-        with the prefix cache stay resident."""
+        with the prefix cache stay resident.  Host-demoted blocks (null
+        entries) hold no device page and simply drop their debt; the
+        host-side bytes are the ``TierManager``'s to discard."""
         pages = self._slot_pages.pop(slot, [])
-        return self.dec_ref(pages)
+        self._hosted.pop(slot, None)
+        return self.dec_ref([p for p in pages if p != 0])
 
 
 # ---------------------------------------------------------------------------

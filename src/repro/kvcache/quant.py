@@ -2,7 +2,10 @@
 
 Per-(token, head) absmax scaling: k int8 [., S, Hk, Dh] + scale
 [., S, Hk] bf16.  Dequantization happens tile-by-tile inside the chunked
-attention, so no fp copy of the cache ever materialises.
+attention, so no fp copy of the cache ever materialises — except on
+tier promotion (``kvcache/offload.py TierManager``), where a demoted
+page is dequantized straight back into the fp pool in the pool's own
+dtype.
 """
 from __future__ import annotations
 
@@ -11,7 +14,12 @@ import jax.numpy as jnp
 
 
 def quantize_kv(x):
-    """x: [..., Dh] float -> (q int8, scale [...] bf16)."""
+    """x: [..., Dh] float -> (q int8, scale [...] bf16).
+
+    The scale floor (1e-8) keeps all-zero rows — padding, unwritten pool
+    pages — from dividing by zero: they quantize to exact int8 zeros and
+    dequantize back to exact zeros in any dtype.
+    """
     absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
     scale = jnp.maximum(absmax / 127.0, 1e-8)
     q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
@@ -19,5 +27,14 @@ def quantize_kv(x):
     return q, scale.astype(jnp.bfloat16)
 
 
-def dequantize_kv(q, scale):
-    return q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]
+def dequantize_kv(q, scale, dtype=jnp.float32):
+    """Inverse of ``quantize_kv``; returns ``dtype`` (default float32).
+
+    Callers reconstructing into an existing buffer must pass that
+    buffer's dtype — a bf16 pool fed float32 dequants would silently
+    upcast on scatter and poison the jit cache of anything traced over
+    the pool.  The multiply runs in float32 regardless so bf16 scales
+    round identically either way.
+    """
+    out = q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]
+    return out.astype(dtype)

@@ -310,7 +310,14 @@ def _self_attention(cfg: ModelConfig, mode: str,
     cache_kv: (k_layer, v_layer) for prefill/decode_full/decode_fused
               or None; with page_table set these are the layer's *pool*
               slices [NP, block, Hk, Dh] read (and, for prefill,
-              written) through the table
+              written) through the table.  Tiered residency
+              (``kvcache.offload.TierManager``) never changes this
+              contract: host-demoted pages are dequantized back into
+              the fp pool *in pool dtype* before the step that reads
+              them dispatches, and their table entries point at the
+              null page while hosted — so every pool read here (and in
+              the Pallas paged kernel) stays ordinary fp, with no
+              int8 branch in any verify path
     pkv:      (pk, pv, ppos) per-kv-head slots for
               decode_partial/decode_fused or None
     paged_kernel: decode_full/decode_fused + page_table only — stream

@@ -68,6 +68,19 @@ class ServingConfig:
     # memory.  The wave path always runs contiguous.
     paged_kv: bool = False
     num_pages: Optional[int] = None
+    # draft-pool page count (paged only; default: num_pages).  Tiered
+    # deployments shrink the trunk pool but keep a full-size draft pool
+    # — draft pages are ~1/L the bytes and are read every step, so the
+    # draft cache never tiers.
+    num_draft_pages: Optional[int] = None
+    # tiered KV residency (paged only): after each refresh a slot's
+    # cold committed blocks are demoted to host RAM as int8 (raw fp
+    # when tier_lossless=True — bit-identical round-trip) and
+    # prefetched back one mode-transition ahead of the next refresh,
+    # so the trunk pool sizes to the *hot* working set
+    # (benchmarks/bench_serving.py --tiered).
+    tiered_kv: bool = False
+    tier_lossless: bool = False
     # copy-on-write prompt-prefix sharing (paged only): requests whose
     # prompts share block-aligned leading tokens attach the cached pages
     # by reference — one physical copy, zero prefill FLOPs for the
@@ -117,7 +130,10 @@ class ServingEngine:
                 batch=batch, max_len=self.scfg.max_len,
                 partial_verification=self.scfg.partial_verification,
                 paged=paged, num_pages=self.scfg.num_pages,
-                prefix_cache=self.scfg.prefix_cache)
+                num_draft_pages=self.scfg.num_draft_pages,
+                prefix_cache=self.scfg.prefix_cache,
+                tiered=paged and self.scfg.tiered_kv,
+                tier_lossless=self.scfg.tier_lossless)
         return self._engines[key]
 
     def page_stats(self) -> Dict[str, int]:
@@ -170,9 +186,13 @@ class ServingEngine:
             sched.submit(self.queue.pop(0))
         done = sched.run()
         self.outputs.update({o.request_id: o for o in done})
+        # peak concurrency is a max, not a sum (tiered A/B headline)
+        self.stats["peak_active"] = max(self.stats["peak_active"],
+                                        sched.stats.pop("peak_active", 0.0))
         for k in list(sched.stats):
             if k in ("tokens", "wall_s", "steps", "admissions",
-                     "page_stalls", "prefix_evictions", "prefill_tokens") \
+                     "page_stalls", "prefix_evictions", "prefill_tokens",
+                     "tier_defers") \
                     or k.startswith(("mode_rows_", "ticks_modes_")):
                 self.stats[k] += sched.stats.pop(k)
         return done

@@ -243,10 +243,24 @@ class ContinuousScheduler:
             if self.engine.paged:
                 # sharing-aware gate: only the *fresh* pages beyond the
                 # request's prefix-cache hits must be free; under
-                # pressure, idle cached prefixes are LRU-evicted first
+                # pressure, idle cached prefixes are LRU-evicted first.
+                # The gate only COUNTS (touch=False): the single LRU
+                # re-stamp happens inside the actual admission's prefill
+                # attach — a request that stalls here must not re-stamp
+                # its chain every tick (skewing eviction order) nor
+                # inflate the hit counters with probes.  A same-tick
+                # reclaim can therefore evict the counted chain, but the
+                # post-reclaim re-count below re-bills before the gate
+                # decides, and nothing else runs between a passed gate
+                # and the admission's own match.
+                # Tiered engines additionally reserve promotion headroom
+                # (tier_admit_margin): admission must never pack the
+                # pool so tight that a live slot's demoted pages can no
+                # longer be seated for its next refresh.
+                margin = self.engine.tier_admit_margin(len(req.prompt))
                 need_fresh = self.engine.pages_needed_shared(
-                    req.prompt, req.max_new_tokens, touch=True)
-                short = need_fresh - self.engine.free_pages()
+                    req.prompt, req.max_new_tokens, touch=False)
+                short = need_fresh + margin - self.engine.free_pages()
                 if short > 0:
                     self.stats["prefix_evictions"] += \
                         self.engine.reclaim_pages(short)
@@ -254,8 +268,8 @@ class ContinuousScheduler:
                     # matched chain (LRU has no pin) — re-count so the
                     # gate never passes on a stale, smaller bill
                     need_fresh = self.engine.pages_needed_shared(
-                        req.prompt, req.max_new_tokens, touch=True)
-                if need_fresh > self.engine.free_pages():
+                        req.prompt, req.max_new_tokens, touch=False)
+                if need_fresh + margin > self.engine.free_pages():
                     # the request stays queued; smaller waiters may fit
                     self.stats["page_stalls"] += 1
                     continue
@@ -353,9 +367,22 @@ class ContinuousScheduler:
         # treat them exactly like empty slots)
         active = np.array([s is not None and s.cursor is None
                            for s in self.slots], bool)
+        self.stats["peak_active"] = max(self.stats["peak_active"],
+                                        float(np.sum(active)))
         if not active.any():
             return prefilled > 0
         modes = self.engine.modes_for_rows(self.st, active)
+        # tiered engines: refresh rows whose promotion cannot seat this
+        # tick sit it out (pages return as other slots re-demote).  Only
+        # force the all-deferred fallback when nothing else progressed:
+        # a pumping prefill cursor holds its full page bill until its
+        # first refresh, and its completion is what unblocks the pool.
+        active, deferred = self.engine.tier_ready_rows(
+            active, modes, force=(prefilled == 0))
+        if deferred:
+            self.stats["tier_defers"] += deferred
+        if not active.any():
+            return prefilled > 0
         distinct = sorted({int(m) for m in modes[active]})
         self.stats[f"ticks_modes_{len(distinct)}"] += 1
         for mid in distinct:
