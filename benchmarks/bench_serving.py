@@ -48,6 +48,17 @@ distinct-modes-per-tick histogram, jitted dispatches per decode tick,
 per-mode stepped rows, and decode-step gap p50/p95, and verifies the
 two schedules produce token-identical outputs.
 
+``--prefill-batch`` A/Bs the serial vs fused prefill pump on a
+long-prompt burst (``ServingConfig(fused_prefill=...)``): a burst of
+long prompts opens several prefill cursors at once; the serial pump
+advances them one chunk per jitted dispatch (N open cursors = N
+launches per round), the fused pump packs every cursor that fits the
+per-tick budget into ONE multi-row dispatch
+(``SpecPVEngine.prefill_step_fused``).  Reports prefill dispatches per
+prefill tick, admission-to-first-token p50/p95, and decode-step gap
+p50/p95, and verifies the two pumps produce token-identical outputs
+(absolute chunk boundaries + zero-pad-only packing).
+
 ``--tiered`` is the memory-pressure A/B for tiered KV residency
 (``ServingConfig(tiered_kv=...)``): long-context requests (every prompt
 far past the partial budget) are served four ways on two engines —
@@ -368,6 +379,118 @@ def run_fused(args, cfg, dcfg, params, dparams, corpus, spec, contexts):
                 for m, r in results.items()])
 
 
+class _PrefillTraceScheduler(ContinuousScheduler):
+    """ContinuousScheduler + the two measurements the prefill-batch A/B
+    needs: per-request admission-to-first-token (admit to finalize) and
+    the number of ticks that made prefill progress (denominator for
+    dispatches/tick)."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.ttft = {}                  # request_id -> seconds
+        self.prefill_ticks = 0
+
+    def _pump_prefill(self):
+        n = super()._pump_prefill()
+        if n:
+            self.prefill_ticks += 1
+        return n
+
+    def _finalize_prefill(self, i):
+        s = self.slots[i]
+        super()._finalize_prefill(i)
+        self.ttft[s.req.request_id] = self.clock() - s.admit_s
+
+
+def run_prefill_batch(args, cfg, dcfg, params, dparams, corpus, spec,
+                      contexts):
+    """Serial vs fused prefill pump on a long-prompt burst (one engine,
+    shared jit compiles): identical request set, token-identity
+    verified.  The burst opens several cursors at once, so the serial
+    pump pays one jitted dispatch per open cursor per round while the
+    fused pump folds the whole row set into one."""
+    rng = np.random.default_rng(args.seed)
+    reqs = make_requests(corpus, contexts, args.requests, args.rate, rng,
+                         args.max_new)
+    max_len = max(contexts) + args.max_new + 128
+    eng = SpecPVEngine(cfg, spec, dcfg, params, dparams, batch=args.batch,
+                       max_len=max_len, partial_verification=True,
+                       paged=args.paged,
+                       num_pages=args.num_pages or None)
+    budget = args.prefill_budget
+    print(f"prefill-batch A/B: {args.requests} long prompts (contexts "
+          f"{contexts}) bursting into {args.batch} slots, chunk 64, "
+          f"prefill budget {budget} tokens/tick"
+          + (" (paged)" if args.paged else ""))
+    if not args.no_warmup:
+        # replay the set through both pumps so each arm's jit variants
+        # (serial batch-1 chunks AND every fused (K, Tmax) shape the
+        # schedule produces) compile outside the timed region
+        for fp in (False, True):
+            warm = ContinuousScheduler(eng, prefill_chunk=64,
+                                       prefill_budget=budget,
+                                       fused_prefill=fp)
+            for _, r in reqs:
+                warm.submit(Request(request_id=f"warm-{r.request_id}",
+                                    prompt=r.prompt,
+                                    max_new_tokens=r.max_new_tokens))
+            warm.run()
+
+    results = {}
+    for mode, fp in (("serial", False), ("fused", True)):
+        sched = _PrefillTraceScheduler(eng, prefill_chunk=64,
+                                       prefill_budget=budget,
+                                       fused_prefill=fp,
+                                       record_steps=True)
+        t0 = time.time()
+        for off, r in reqs:
+            sched.submit(Request(request_id=r.request_id, prompt=r.prompt,
+                                 max_new_tokens=r.max_new_tokens,
+                                 eos_id=r.eos_id, arrival_s=t0 + off))
+        outs = sched.run()
+        wall = time.time() - t0
+        toks = sum(len(o.tokens) for o in outs)
+        disp = int(sched.stats["prefill_dispatches"])
+        ticks = max(sched.prefill_ticks, 1)
+        t50, t95 = percentiles(list(sched.ttft.values()))
+        gaps = step_gap_stats(sched.step_log)
+        g50, g95 = percentiles(gaps) if gaps.size else (0.0, 0.0)
+        results[mode] = dict(outs=outs, tput=toks / wall, disp=disp,
+                             ticks=ticks, t50=t50, t95=t95,
+                             g50=g50, g95=g95)
+        print(f"{mode:>8}: {toks} tokens in {wall:.1f}s -> "
+              f"{toks / wall:.1f} tok/s; {disp} prefill dispatches over "
+              f"{ticks} prefill ticks ({disp / ticks:.2f}/tick)")
+        print(f"{'':>8}  admission-to-first-token p50={t50:.2f}s "
+              f"p95={t95:.2f}s; decode-step gap p50={g50 * 1e3:.1f}ms "
+              f"p95={g95 * 1e3:.1f}ms over {gaps.size} gaps")
+
+    if not args.no_check:
+        ser = {o.request_id: o.tokens for o in results["serial"]["outs"]}
+        for o in results["fused"]["outs"]:
+            assert np.array_equal(o.tokens, ser[o.request_id]), \
+                f"{o.request_id}: fused prefill != serial prefill"
+        print("losslessness: fused-prefill outputs token-identical to "
+              "the serial pump")
+    rs, rf = results["serial"], results["fused"]
+    print(f"prefill dispatches/tick: {rf['disp'] / rf['ticks']:.2f} fused "
+          f"vs {rs['disp'] / rs['ticks']:.2f} serial "
+          f"({rs['disp'] / max(rf['disp'], 1):.2f}x fewer launches); "
+          f"admission-to-first-token p95 {rf['t95']:.2f}s vs "
+          f"{rs['t95']:.2f}s; decode-gap p95 {rf['g95'] * 1e3:.1f}ms vs "
+          f"{rs['g95'] * 1e3:.1f}ms")
+    out = ensure_dir(RESULTS_DIR)
+    write_rows(f"{out}/bench_serving_prefill_batch.csv",
+               ["mode", "tok_s", "prefill_dispatches", "prefill_ticks",
+                "dispatches_per_tick", "ttft_p50_s", "ttft_p95_s",
+                "gap_p50_ms", "gap_p95_ms"],
+               [[m, f"{r['tput']:.2f}", r["disp"], r["ticks"],
+                 f"{r['disp'] / r['ticks']:.3f}", f"{r['t50']:.2f}",
+                 f"{r['t95']:.2f}", f"{r['g50'] * 1e3:.2f}",
+                 f"{r['g95'] * 1e3:.2f}"]
+                for m, r in results.items()])
+
+
 def run_tiered(args, cfg, dcfg, params, dparams, corpus, spec, contexts):
     """Tiered-residency memory-pressure A/B (see module docstring): the
     same long-context Poisson request set through (a) untiered/parity
@@ -632,6 +755,12 @@ def main():
                     help="A/B grouped-per-mode vs fused decode ticks: "
                          "distinct-modes-per-tick histogram, jitted "
                          "dispatches per tick, decode-gap p50/p95")
+    ap.add_argument("--prefill-batch", action="store_true",
+                    help="A/B serial vs fused prefill pump on a "
+                         "long-prompt burst: prefill dispatches/tick, "
+                         "admission-to-first-token p50/p95, decode-gap "
+                         "p50/p95 (long-prompt burst defaults: contexts "
+                         "512 448 512 384, batch 4, rate 0, budget 256)")
     ap.add_argument("--tiered", action="store_true",
                     help="tiered-residency memory-pressure A/B: untiered "
                          "parity pool vs untiered + tiered (lossless and "
@@ -682,6 +811,21 @@ def main():
         # short prompts stay in Full, long ones cycle Refresh/Partial
         contexts = args.contexts or [64, 192, 96, 256, 224]
         run_fused(args, cfg, dcfg, params, dparams, corpus, spec, contexts)
+        return
+    if args.prefill_batch:
+        # long prompts, bursty arrivals: several cursors must be open at
+        # once or the serial and fused pumps degenerate to the same
+        # schedule.  rate 0 queues the whole burst at t0; the budget
+        # covers ~4 chunks so a fused round packs the full row set.
+        contexts = args.contexts or [512, 448, 512, 384]
+        if args.batch == ap.get_default("batch"):
+            args.batch = 4
+        if args.rate == ap.get_default("rate"):
+            args.rate = 0.0
+        if args.prefill_budget == ap.get_default("prefill_budget"):
+            args.prefill_budget = 256
+        run_prefill_batch(args, cfg, dcfg, params, dparams, corpus, spec,
+                          contexts)
         return
     if args.tiered:
         # long contexts only, and near-uniform: each prompt's cold pages

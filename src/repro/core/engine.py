@@ -35,7 +35,7 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass, field, replace as dc_replace
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -206,7 +206,8 @@ class SpecPVEngine:
                  num_draft_pages: Optional[int] = None,
                  prefix_cache: bool = True,
                  tiered: bool = False,
-                 tier_lossless: bool = False):
+                 tier_lossless: bool = False,
+                 tier_codec: str = "int8"):
         """``paged=True`` (attention archs only) backs the full KV cache
         with a shared block pool + per-slot page tables: resident memory
         scales with tokens actually held instead of batch x max_len, and
@@ -228,8 +229,10 @@ class SpecPVEngine:
 
         ``tiered=True`` (paged only) adds host residency for cold trunk
         pages (``kvcache.offload.TierManager``): after each refresh the
-        slot's committed blocks are demoted to host RAM as int8 (raw fp
-        when ``tier_lossless=True`` — bit-identical round-trip), their
+        slot's committed blocks are demoted to host RAM as int8
+        (``tier_codec="fp8"`` casts to e4m3 at the same byte footprint;
+        raw fp when ``tier_lossless=True`` — bit-identical round-trip),
+        their
         device pages recycled, and they are prefetched back one
         mode-transition ahead of the next refresh (synchronous promote
         when a refresh arrives early).  The trunk pool can then be sized
@@ -262,7 +265,8 @@ class SpecPVEngine:
                              if self.paged else None)
         assert not (tiered and not self.paged), \
             "tiered KV residency needs the paged cache (paged=True)"
-        self._tier = (TierManager(self._page_alloc, lossless=tier_lossless)
+        self._tier = (TierManager(self._page_alloc, lossless=tier_lossless,
+                                  codec=tier_codec)
                       if self.paged and tiered else None)
         self._prefix = (kvc.PrefixCache(spec.block_size)
                         if self.paged and prefix_cache else None)
@@ -289,6 +293,8 @@ class SpecPVEngine:
         self._pkv_active = False
         self._pkv_active_rows = np.zeros((batch,), bool)   # per-slot automaton
         self.dispatches = 0             # jitted engine steps executed
+        self.prefill_dispatches = 0     # jitted prefill chunks launched
+        self._prefix_dedups = 0         # duplicate blocks collapsed
         self._build_jits()
         # the destination state dies at the call site (callers rebind), so
         # donate it instead of materialising a second copy of the caches
@@ -320,6 +326,56 @@ class SpecPVEngine:
             return (cache, dcache, logits, fused)
 
         self._prefill_chunk = _prefill_chunk
+
+        # fused multi-cursor prefill: every open cursor's next chunk is
+        # packed into ONE ragged [K, Tmax] dispatch — per-row absolute
+        # offsets ride in `length` and per-row real token counts in
+        # `t_valid` (trailing zero-pads are excluded from KV writes,
+        # summaries and length advancement).  Contiguous engines pass a
+        # LIST of per-cursor batch-1 cache dicts, concatenated along the
+        # batch axes inside the jit and split back on return; paged
+        # engines pass one dict over the shared pools with stacked
+        # per-row tables.  Keyed by (K, Tmax) via ordinary jit shape
+        # specialisation — K is bounded by the engine batch.
+        @functools.partial(jax.jit, donate_argnums=(2, 3))
+        def _prefill_chunk_fused(params, dparams, cache, dcache, tokens,
+                                 t_valid, prev_feat):
+            rows = isinstance(cache, (list, tuple))
+            if rows:
+                cache_in = {n: jnp.concatenate(
+                    [r[n] for r in cache],
+                    axis=kvc.CACHE_BATCH_AXIS.get(n, 0)) for n in cache[0]}
+                dcache_in = {n: jnp.concatenate([r[n] for r in dcache],
+                                                axis=0) for n in dcache[0]}
+            else:
+                cache_in, dcache_in = cache, dcache
+            logits, feats, cache_out = api.prefill(
+                cfg, params, tokens, cache_in, spec=spec, t_valid=t_valid)
+            fused = feats.fused_input()                   # [K, Tmax, 3d]
+            shifted = jnp.concatenate([prev_feat[:, None], fused[:, :-1]],
+                                      axis=1)
+            kb, t = tokens.shape
+            valid = jnp.arange(t)[None] < t_valid[:, None]
+            dcache_out, h_last, dlogits = dr.draft_extend(
+                cfg, dcfg, dparams, params, dcache_in, tokens, shifted,
+                valid)
+            # per-row boundary feature at the last REAL token — the
+            # ragged counterpart of the serial path's fused[:, -1]
+            last = jnp.clip(t_valid - 1, 0)
+            feat_last = jnp.take_along_axis(fused, last[:, None, None],
+                                            axis=1)[:, 0]  # [K, 3d]
+            if rows:
+                def srow(a, i, ax):
+                    return jax.lax.slice_in_dim(a, i, i + 1, axis=ax)
+                cache_out = [
+                    {n: srow(cache_out[n], i, kvc.CACHE_BATCH_AXIS.get(n, 0))
+                     for n in cache_out} for i in range(len(cache))]
+                dcache_out = [{n: srow(dcache_out[n], i, 0)
+                               for n in dcache_out}
+                              for i in range(len(dcache))]
+            return (cache_out, dcache_out, logits, fused, feat_last)
+
+        self._prefill_chunk_fused = _prefill_chunk_fused
 
         sample = self.temperature > 0.0
 
@@ -1003,6 +1059,7 @@ class SpecPVEngine:
         """Zero the prefix-cache hit/reuse counters (benchmark warmup);
         cached entries themselves are untouched."""
         self._prefill_skipped_tokens = 0
+        self._prefix_dedups = 0
         if self._prefix is not None:
             self._prefix.reset_stats()
 
@@ -1030,6 +1087,7 @@ class SpecPVEngine:
             return {}
         out = self._prefix.stats()
         out["prefill_tokens_skipped"] = self._prefill_skipped_tokens
+        out["dedups"] = self._prefix_dedups
         return out
 
     # ------------------------------------------------------------------
@@ -1310,32 +1368,10 @@ class SpecPVEngine:
         cache, dcache, logits_last, fused = self._prefill_chunk(
             self.params, self.dparams, sub_cache, sub_dcache, toks,
             cur.prev_feat, cur.extra)
-
-        # ---- register prompt blocks completed by this chunk -----------
-        if self.paged and self._prefix is not None and cur.n_full:
-            lo, hi = off // self.spec.block_size, \
-                min(end // self.spec.block_size, cur.n_full)
-            if hi > lo:
-                # one stamp for the WHOLE chain, matched ancestors and
-                # earlier chunks' blocks included: a parent may never be
-                # older than its children, or LRU eviction could drop a
-                # chain head and orphan the tail
-                tick = self._prefix.new_tick()
-                for e in cur.chain_entries:
-                    e.tick = tick
-                for j in range(lo, hi):
-                    p = (j + 1) * self.spec.block_size - 1
-                    e = self._prefix.insert(
-                        cur.chain_keys[j], j, int(cur.pt_host[j]),
-                        int(cur.dpt_host[j]), np.asarray(fused[0, p - off]),
-                        self._page_alloc, self._draft_alloc, tick=tick)
-                    cur.chain_entries.append(
-                        e if e is not None
-                        else self._prefix.entry(cur.chain_keys[j]))
+        self.prefill_dispatches += 1
 
         cur.prev_feat = fused[:, -1]
         cur.logits_last = logits_last
-        cur.off = end
         if self.paged:
             # the pools were written in place (batch-1 view); rebind them
             # into the batched state so interleaved decode steps see the
@@ -1350,7 +1386,163 @@ class SpecPVEngine:
                             dcache=dict(st.dcache, **dpool))
         else:
             cur.row_cache, cur.row_dcache = cache, dcache
+        # registration runs AFTER the row-cache rebind: a hash-equal
+        # dedupe repoints the cursor's page table, and that edit must
+        # land on the rebound row cache, not be clobbered by it
+        self._register_blocks(cur, off, end, fused[0])
+        cur.off = end
         return st, end - off
+
+    def _register_blocks(self, cur: PrefillCursor, off: int, end: int,
+                         fused_row) -> None:
+        """Register the prompt blocks completed by the chunk
+        ``[off, end)`` into the prefix cache, re-stamping the whole
+        chain with one LRU tick (a parent may never be older than its
+        children, or eviction could drop a chain head and orphan the
+        tail).  ``fused_row`` is the chunk's [T, 3d] fused features for
+        this cursor's row — block-boundary columns are harvested as the
+        entries' draft boot features.
+
+        A block some concurrent admission already registered under the
+        same chain key is *deduplicated* instead: this cursor's freshly
+        computed page is collapsed onto the cached entry's page (see
+        ``_dedupe_block``), so same-tick cold admissions of a shared
+        prompt converge on ONE physical copy."""
+        if not (self.paged and self._prefix is not None and cur.n_full):
+            return
+        bs = self.spec.block_size
+        lo, hi = off // bs, min(end // bs, cur.n_full)
+        if hi <= lo:
+            return
+        tick = self._prefix.new_tick()
+        for e in cur.chain_entries:
+            e.tick = tick
+        for j in range(lo, hi):
+            p = (j + 1) * bs - 1
+            e = self._prefix.insert(
+                cur.chain_keys[j], j, int(cur.pt_host[j]),
+                int(cur.dpt_host[j]), np.asarray(fused_row[p - off]),
+                self._page_alloc, self._draft_alloc, tick=tick)
+            if e is None:
+                e = self._prefix.entry(cur.chain_keys[j])
+                self._dedupe_block(cur, j, e)
+            cur.chain_entries.append(e)
+
+    def _dedupe_block(self, cur: PrefillCursor, j: int,
+                      e: "kvc._PrefixEntry") -> None:
+        """Collapse block ``j`` of a mid-prefill cursor onto an existing
+        prefix-cache entry for the same chain key.  Hash-equal blocks
+        hold bit-identical KV (same prompt prefix, deterministic
+        compute, absolute chunk boundaries), so repointing is lossless:
+        the slot takes a reference on the entry's page, releases its own
+        duplicate back to the pool, and rewrites the host + device page
+        tables.  This is how two cold admissions of the same prompt that
+        race past each other's ``match()`` still end up sharing."""
+        if int(cur.pt_host[j]) == e.page:
+            return                      # already shared (admission match)
+        self._page_alloc.rebind_block(cur.slot, j, e.page)
+        self._draft_alloc.rebind_block(cur.slot, j, e.draft_page)
+        cur.pt_host[j] = e.page
+        cur.dpt_host[j] = e.draft_page
+        cur.row_cache = dict(cur.row_cache,
+                             page_table=cur.row_cache["page_table"]
+                             .at[0, j].set(e.page))
+        cur.row_dcache = dict(cur.row_dcache,
+                              page_table=cur.row_dcache["page_table"]
+                              .at[0, j].set(e.draft_page))
+        self._prefix_dedups += 1
+
+    def prefill_step_fused(self, st: EngineState,
+                           cursors: Sequence[PrefillCursor]
+                           ) -> Tuple[EngineState, int]:
+        """Advance EVERY open cursor by one chunk in a single fused
+        dispatch (``_prefill_chunk_fused``) — the prefill counterpart of
+        the fused decode step: the per-row chunk offsets and ragged
+        token counts travel as operands, so N open admissions cost one
+        kernel launch per tick instead of N.
+
+        Each row runs the identical absolute chunk schedule the serial
+        path would (``end = min(len, (off//chunk + 1)*chunk)``), pads
+        are zero-packed on the right and masked out of every KV write,
+        summary and length update, and no key-axis reassociation occurs
+        — so the resulting caches and tokens are bit-identical to
+        stepping the cursors one at a time.  Prefix-cache registration
+        harvests block features per row in cursor order, so two cursors
+        completing the same prompt block in one tick dedupe exactly as
+        they would across serial steps.
+
+        Per-request ``extra`` conditioning cannot be batched (each row
+        would need its own encoder states) — callers route such cursors
+        through ``prefill_step_into_slot``.  Returns
+        (state, total tokens processed).  Consumes `st`."""
+        cursors = [c for c in cursors if not c.done]
+        assert cursors, "no open prefill cursor"
+        assert all(c.extra is None for c in cursors), \
+            "fused prefill cannot batch per-request `extra` conditioning"
+        k = len(cursors)
+        offs = [c.off for c in cursors]
+        ends = [min(len(c.prompt), (c.off // c.chunk + 1) * c.chunk)
+                for c in cursors]
+        nvalid = [e - o for o, e in zip(offs, ends)]
+        tmax = max(nvalid)
+        toks = np.zeros((k, tmax), np.int32)
+        for i, c in enumerate(cursors):
+            toks[i, : nvalid[i]] = c.prompt[offs[i]: ends[i]]
+        t_valid = jnp.asarray(np.asarray(nvalid, np.int32))
+        prev_feat = jnp.concatenate([c.prev_feat for c in cursors], axis=0)
+        if self.paged:
+            # one sub-state over the shared pools: every per-row cursor
+            # key (page table, `length` = the row's pre-chunk token
+            # count — the cursor invariant off == resident length —
+            # plus any conditioning rows) concatenated along its batch
+            # axis, exactly the serial sub_cache stacked K-high
+            ax = kvc.CACHE_BATCH_AXIS
+            sub_cache = {n: st.cache[n] for n in kvc.PAGED_POOL_KEYS}
+            sub_cache.update(
+                {n: jnp.concatenate([c.row_cache[n] for c in cursors],
+                                    axis=ax.get(n, 0))
+                 for n in cursors[0].row_cache})
+            sub_dcache = {n: st.dcache[n] for n in kvc.DRAFT_POOL_KEYS}
+            sub_dcache.update(
+                {n: jnp.concatenate([c.row_dcache[n] for c in cursors],
+                                    axis=0)
+                 for n in cursors[0].row_dcache})
+        else:
+            sub_cache = [c.row_cache for c in cursors]
+            sub_dcache = [c.row_dcache for c in cursors]
+        cache, dcache, logits, fused, feat_last = self._prefill_chunk_fused(
+            self.params, self.dparams, sub_cache, sub_dcache,
+            jnp.asarray(toks), t_valid, prev_feat)
+        self.prefill_dispatches += 1
+
+        total = 0
+        for i, cur in enumerate(cursors):
+            cur.prev_feat = feat_last[i: i + 1]
+            cur.logits_last = logits[i: i + 1]
+            if self.paged:
+                ax = kvc.CACHE_BATCH_AXIS
+                cur.row_cache = {
+                    n: jax.lax.slice_in_dim(cache[n], i, i + 1,
+                                            axis=ax.get(n, 0))
+                    for n in cache if n not in kvc.PAGED_POOL_KEYS}
+                cur.row_dcache = {
+                    n: jax.lax.slice_in_dim(dcache[n], i, i + 1, axis=0)
+                    for n in dcache if n not in kvc.DRAFT_POOL_KEYS}
+            else:
+                cur.row_cache = cache[i]
+                cur.row_dcache = dcache[i]
+            # cursor order = admission (FIFO) order: cursor B completing
+            # a block cursor A just registered this same tick collapses
+            # onto A's page here
+            self._register_blocks(cur, offs[i], ends[i], fused[i])
+            cur.off = ends[i]
+            total += ends[i] - offs[i]
+        if self.paged:
+            pool = {n: cache[n] for n in kvc.PAGED_POOL_KEYS}
+            dpool = {n: dcache[n] for n in kvc.DRAFT_POOL_KEYS}
+            st = dc_replace(st, cache=dict(st.cache, **pool),
+                            dcache=dict(st.dcache, **dpool))
+        return st, total
 
     def prefill_finalize_slot(self, st: EngineState, cur: PrefillCursor
                               ) -> Tuple[EngineState, int]:

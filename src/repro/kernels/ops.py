@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.block_summary import block_summary_pallas
+from repro.kernels.prefill_attention import paged_prefill_attention_pallas
 from repro.kernels.retrieval_score import retrieval_score_pallas
 from repro.kernels.sparse_attention import sparse_verify_attention_pallas
 from repro.kernels import ref
@@ -101,3 +102,48 @@ def paged_verify_attention(q, pool_k, pool_v, page_table, length,
           functools.partial(ref.sparse_verify_attention_ref, block_size=bs))
     return jax.vmap(fn, in_axes=(0, None, None, 0, 0))(q, k_flat, v_flat,
                                                        idx, vlen_h)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def paged_prefill_attention(q, pool_k, pool_v, page_table, length, t_valid,
+                            use_pallas: bool = True):
+    """Blockwise-parallel paged prefill attention over the shared block
+    pool — the batched-prefill counterpart of ``paged_verify_attention``.
+
+    The caller has already scattered the chunk's K/V into the pool
+    (``kvcache.cache.paged_write_tokens``), so each row's context —
+    previous chunks AND the chunk itself — is exactly the filled prefix
+    of its page table.  The kernel scans the row's logical blocks with
+    carry-based softmax rescaling and an absolute-position causal mask
+    (key ``j*bs + s`` vs query ``length + i``), so in-chunk
+    self-attention needs no separate part and the contiguous
+    ``[B, S, ...]`` gathered view never materialises.  Blocks past the
+    filled region route to the reserved null page 0 and are fully
+    masked.
+
+    q: [B, T, H, Dh] (the tick's packed chunk queries);
+    pool_k/pool_v: [NP, block, Hk, Dh] (one layer's pool);
+    page_table: [B, NB] int32; length: [B] tokens already resident
+    *before* this chunk; t_valid: [B] real (non-pad) chunk tokens per
+    row — pad queries produce garbage rows the caller's feature masking
+    discards.
+    Returns normalised attention [B, T, H, Dh] in q's dtype (same
+    contract as the flash fallback)."""
+    np_, bs, hk, dh = pool_k.shape
+    b, nb = page_table.shape
+    k_flat = pool_k.reshape(np_ * bs, hk, dh)
+    v_flat = pool_v.reshape(np_ * bs, hk, dh)
+    end = length + t_valid
+    vlen = jnp.clip(end[:, None] - jnp.arange(nb)[None] * bs, 0, bs)
+    routed = jnp.where(vlen > 0, page_table, 0)
+    idx = jnp.broadcast_to(routed[:, None], (b, hk, nb)).astype(jnp.int32)
+    vlen_h = jnp.broadcast_to(vlen[:, None], (b, hk, nb)).astype(jnp.int32)
+    qoff = length.astype(jnp.int32)[:, None]               # [B, 1]
+    fn = (functools.partial(paged_prefill_attention_pallas, block_size=bs,
+                            interpret=_interpret())
+          if use_pallas else
+          functools.partial(ref.paged_prefill_attention_ref, block_size=bs))
+    m, l, acc = jax.vmap(fn, in_axes=(0, None, None, 0, 0, 0))(
+        q, k_flat, v_flat, idx, vlen_h, qoff)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]           # [B, H, T, Dh]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)

@@ -1,0 +1,136 @@
+"""Pallas TPU kernel: blockwise-parallel paged prefill attention.
+
+Chunked prefill's attention reads the *whole* filled prefix of a row —
+previous chunks plus the chunk being written — so the gathered logical
+view it falls back to off-TPU materialises a `[B, S_max]` staging
+buffer per layer.  This kernel streams the row's resident pages
+HBM->VMEM instead (same scalar-prefetch routing as
+``sparse_attention.py``): the caller writes the chunk's K/V into the
+paged pool first, then the kernel scans the row's logical blocks with
+carry-based softmax rescaling, applying the causal mask in absolute
+positions — key position ``j*bs + s`` against query position
+``qoff + i`` — so in-chunk self-attention falls out of the same scan
+and no separate self part is needed.
+
+Grid: (Hk, NB).  Per step: one routed KV page tile [bs, Dh] against the
+head's grouped queries [rep, T, Dh]; running (m, l, acc) live in VMEM
+scratch and the final grid step emits the finished partials.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(idx_ref, vlen_ref, qoff_ref, q_ref, k_ref, v_ref,
+            m_out, l_out, acc_out, m_s, l_s, acc_s, *,
+            block_size: int, nblk: int):
+    h = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q = q_ref[0].astype(jnp.float32)                      # [rep, T, Dh]
+    k = k_ref[0, :, 0].astype(jnp.float32)                # [bs, Dh]
+    v = v_ref[0, :, 0].astype(jnp.float32)                # [bs, Dh]
+    rep, t, dh = q.shape
+
+    logits = jnp.einsum("rtd,sd->rts", q, k)              # [rep, T, bs]
+    # grid coord j IS the logical block, so key absolute positions are
+    # j*bs + s; query absolute positions are qoff + i.  Combined with
+    # the fill mask (s < vlen) this is exactly the fallback's
+    # causal-over-valid-keys mask.
+    nvalid = vlen_ref[h, j]
+    qoff = qoff_ref[0]
+    s_pos = jax.lax.broadcasted_iota(jnp.int32, (1, t, block_size), 2)
+    t_pos = jax.lax.broadcasted_iota(jnp.int32, (1, t, block_size), 1)
+    ok = (s_pos < nvalid) & (j * block_size + s_pos <= qoff + t_pos)
+    logits = jnp.where(ok, logits, NEG)
+
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+    p = jnp.exp(logits - m_new[..., None]) * ok
+    corr = jnp.exp(m_prev - m_new)
+    l_s[...] = l_s[...] * corr + jnp.sum(p, axis=-1)
+    acc_s[...] = (acc_s[...] * corr[..., None]
+                  + jax.lax.dot_general(
+                      p.reshape(rep * t, block_size), v,
+                      (((1,), (0,)), ((), ()))).reshape(rep, t, dh))
+    m_s[...] = m_new
+
+    @pl.when(j == nblk - 1)
+    def _emit():
+        m_out[0] = m_s[...]
+        l_out[0] = l_s[...]
+        acc_out[0] = acc_s[...]
+
+
+def paged_prefill_attention_pallas(q, k_cache, v_cache, block_idx,
+                                   block_valid_len, q_offset,
+                                   block_size: int, *,
+                                   interpret: bool = True):
+    """q: [T, H, Dh] (one chunk's queries); k_cache/v_cache: [S, Hk, Dh]
+    flattened pool; block_idx/block_valid_len: [Hk, NB] routed pages and
+    per-block fill counts (0 = nothing resident); q_offset: [1] int32 —
+    the row's absolute position of query 0.
+
+    Returns softmax partials (m [H, T], l [H, T], acc [H, T, Dh]) fp32."""
+    t, h, dh = q.shape
+    s, hk, _ = k_cache.shape
+    nblk = block_idx.shape[1]
+    rep = h // hk
+    nb = s // block_size
+    scale = 1.0 / math.sqrt(dh)
+    qg = (q.reshape(t, hk, rep, dh).transpose(1, 2, 0, 3)
+          * scale)                                         # [Hk, rep, T, Dh]
+    kb = k_cache[: nb * block_size].reshape(nb, block_size, hk, dh)
+    vb = v_cache[: nb * block_size].reshape(nb, block_size, hk, dh)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(hk, nblk),
+        in_specs=[
+            pl.BlockSpec((1, rep, t, dh),
+                         lambda hh, jj, idx, vl, qo: (hh, 0, 0, 0)),
+            pl.BlockSpec((1, block_size, 1, dh),
+                         lambda hh, jj, idx, vl, qo: (idx[hh, jj], 0, hh, 0)),
+            pl.BlockSpec((1, block_size, 1, dh),
+                         lambda hh, jj, idx, vl, qo: (idx[hh, jj], 0, hh, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, rep, t),
+                         lambda hh, jj, idx, vl, qo: (hh, 0, 0)),
+            pl.BlockSpec((1, rep, t),
+                         lambda hh, jj, idx, vl, qo: (hh, 0, 0)),
+            pl.BlockSpec((1, rep, t, dh),
+                         lambda hh, jj, idx, vl, qo: (hh, 0, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((rep, t), jnp.float32),
+            pltpu.VMEM((rep, t), jnp.float32),
+            pltpu.VMEM((rep, t, dh), jnp.float32),
+        ],
+    )
+    out_shape = [
+        jax.ShapeDtypeStruct((hk, rep, t), jnp.float32),
+        jax.ShapeDtypeStruct((hk, rep, t), jnp.float32),
+        jax.ShapeDtypeStruct((hk, rep, t, dh), jnp.float32),
+    ]
+    fn = pl.pallas_call(
+        functools.partial(_kernel, block_size=block_size, nblk=nblk),
+        grid_spec=grid_spec, out_shape=out_shape, interpret=interpret)
+    idx = jnp.clip(block_idx.astype(jnp.int32), 0, nb - 1)
+    m, l, acc = fn(idx, block_valid_len.astype(jnp.int32),
+                   q_offset.astype(jnp.int32), qg, kb, vb)
+    return (m.reshape(h, t), l.reshape(h, t), acc.reshape(h, t, dh))

@@ -50,6 +50,53 @@ def retrieval_score_ref(q, kmax, kmin, q_weight):
     return jnp.sum(s * w, axis=0) / jnp.maximum(jnp.sum(w), 1e-9)
 
 
+def paged_prefill_attention_ref(q, k_cache, v_cache, block_idx,
+                                block_valid_len, q_offset,
+                                block_size: int):
+    """Blockwise paged prefill attention — softmax partials over the
+    row's resident logical blocks with an absolute-position causal mask.
+
+    q: [T, H, Dh] (one chunk, query 0 at absolute position
+    ``q_offset[0]``); k_cache/v_cache: [S, Hk, Dh] flattened pool;
+    block_idx: [Hk, NB] routed page ids (logical block j reads page
+    ``block_idx[h, j]``); block_valid_len: [Hk, NB] filled tokens per
+    block; q_offset: [1] int32.
+
+    Returns partials (m [H, T], l [H, T], acc [H, T, Dh]) fp32."""
+    t, h, dh = q.shape
+    s, hk, _ = k_cache.shape
+    nblk = block_idx.shape[1]
+    rep = h // hk
+    scale = 1.0 / math.sqrt(dh)
+    nb = s // block_size
+    kb = k_cache[: nb * block_size].reshape(nb, block_size, hk, dh)
+    vb = v_cache[: nb * block_size].reshape(nb, block_size, hk, dh)
+    kg = jnp.take_along_axis(
+        kb.transpose(2, 0, 1, 3), block_idx[:, :, None, None]
+        .astype(jnp.int32).clip(0), axis=1)                # [Hk, NB, bs, Dh]
+    vg = jnp.take_along_axis(
+        vb.transpose(2, 0, 1, 3), block_idx[:, :, None, None]
+        .astype(jnp.int32).clip(0), axis=1)
+    k_pos = (jnp.arange(nblk)[:, None] * block_size
+             + jnp.arange(block_size)[None])               # [NB, bs] absolute
+    q_pos = q_offset[0] + jnp.arange(t)                    # [T] absolute
+    filled = (jnp.arange(block_size)[None, None]
+              < block_valid_len[:, :, None])               # [Hk, NB, bs]
+    causal = k_pos[None, :, :] <= q_pos[:, None, None]     # [T, NB, bs]
+    valid = filled[:, None] & causal[None]                 # [Hk, T, NB, bs]
+    qg = q.reshape(t, hk, rep, dh).astype(jnp.float32) * scale
+    logits = jnp.einsum("tkrd,knbd->krtnb", qg, kg.astype(jnp.float32))
+    logits = jnp.where(valid[:, None], logits, -1e30)
+    logits = logits.reshape(hk, rep, t, nblk * block_size)
+    m = jnp.max(logits, axis=-1)
+    p = jnp.exp(logits - m[..., None])
+    p = p * (logits > -1e29)
+    l = jnp.sum(p, axis=-1)
+    vflat = vg.reshape(hk, nblk * block_size, dh).astype(jnp.float32)
+    acc = jnp.einsum("krts,ksd->krtd", p, vflat)
+    return (m.reshape(h, t), l.reshape(h, t), acc.reshape(h, t, dh))
+
+
 def sparse_verify_attention_ref(q, k_cache, v_cache, block_idx,
                                 block_valid_len, block_size: int):
     """Block-sparse verification attention — softmax partials over the

@@ -400,6 +400,20 @@ class PageAllocator:
         self._slot_pages.setdefault(slot, []).extend(int(p) for p in pages)
         self._track()
 
+    def rebind_block(self, slot: int, block: int, page: int) -> List[int]:
+        """Repoint logical `block` of `slot` onto an existing shared
+        `page` (prefix-cache dedupe of concurrently prefilled blocks):
+        the slot takes a reference on `page` and releases its own —
+        the duplicate returns to the free list once no one holds it.
+        Returns the pages actually freed."""
+        old = self._slot_pages[slot][block]
+        assert old != page, "rebind onto the page already held"
+        assert old != 0 and block not in self._hosted.get(slot, ()), \
+            "rebind of a hosted/null block"
+        self.add_ref([page])
+        self._slot_pages[slot][block] = page
+        return self.dec_ref([old])
+
     def fork(self, src: int, dst: int) -> List[int]:
         """`dst` becomes a full reference-holder of `src`'s pages
         (copy-on-write fork).  `dst` must not hold pages."""
@@ -746,20 +760,25 @@ def gather_page_view(pool_l: jax.Array, page_table: jax.Array) -> jax.Array:
 
 
 def paged_write_tokens(pool_l: jax.Array, page_table: jax.Array, start,
-                       new: jax.Array) -> jax.Array:
+                       new: jax.Array, valid=None) -> jax.Array:
     """Scatter `new` tokens at per-row logical offsets through the table.
 
     pool_l: [NP, block, Hk, Dh]; page_table: [B, NB]; start: [B];
     new: [B, T, Hk, Dh].  Positions beyond the table span are clamped
     into the last logical block (an upstream admission error); positions
     whose table entry is unallocated land in the null page and are never
-    read unmasked."""
+    read unmasked.  ``valid`` ([B, T] bool, optional) routes ragged pad
+    positions into the null page instead — fused multi-cursor prefill
+    packs rows of unequal chunk lengths and must not let a short row's
+    zero-padding clobber an allocated page."""
     np_, blk = pool_l.shape[:2]
     b, nb = page_table.shape
     t = new.shape[1]
     idx = start[:, None] + jnp.arange(t)[None]               # [B, T] logical
     idx = jnp.minimum(idx, nb * blk - 1)
     pg = jnp.take_along_axis(page_table, idx // blk, axis=1)
+    if valid is not None:
+        pg = jnp.where(valid, pg, 0)
     flat = (pg * blk + idx % blk).reshape(-1)
     pool_flat = pool_l.reshape((np_ * blk,) + pool_l.shape[2:])
     pool_flat = pool_flat.at[flat].set(

@@ -21,10 +21,12 @@ asynchronous ``jax.device_put`` prefetch issued one mode-transition ahead
 of the refresh that reads them (the SpecPV automaton makes that tick
 predictable).  Promotion dequantizes straight into the fp pool in pool
 dtype, so the verify path never changes: models keep reading the ordinary
-pool (``models/dense.py``).  ``lossless=True`` offloads raw fp bytes
-instead of int8 — twice the link traffic, bit-identical round-trip (the
-token-identity anchor for the tiered serving tests).  The draft pool is
-never tiered: the draft cache is read every step, so it is never cold.
+pool (``models/dense.py``).  ``codec="fp8"`` swaps the int8 grid for an
+e4m3 cast at the same byte footprint (per-token absmax/448 scale — see
+``quantize_kv_fp8``); ``lossless=True`` offloads raw fp bytes instead —
+twice the link traffic, bit-identical round-trip (the token-identity
+anchor for the tiered serving tests).  The draft pool is never tiered:
+the draft cache is read every step, so it is never cold.
 """
 from __future__ import annotations
 
@@ -36,7 +38,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.kvcache.quant import quantize_kv, dequantize_kv
+from repro.kvcache.quant import quantize_kv, quantize_kv_fp8, dequantize_kv
 
 
 @dataclass
@@ -117,9 +119,12 @@ class TierManager:
     prefix cache must keep hits servable without a host round-trip.
     """
 
-    def __init__(self, alloc, *, lossless: bool = False, traffic=None):
+    def __init__(self, alloc, *, lossless: bool = False,
+                 codec: str = "int8", traffic=None):
+        assert codec in ("int8", "fp8"), f"unknown tier codec {codec!r}"
         self.alloc = alloc
         self.lossless = lossless
+        self.codec = codec
         self.traffic = traffic
         self._host: Dict[int, List[_HostSegment]] = {}
         # slot -> list aligned with _host[slot]: device-side arrays from
@@ -173,8 +178,9 @@ class TierManager:
             k, v = jax.device_get(sub_k), jax.device_get(sub_v)
             ks = vs = None
         else:
-            qk, sk = quantize_kv(sub_k)
-            qv, sv = quantize_kv(sub_v)
+            qfn = quantize_kv_fp8 if self.codec == "fp8" else quantize_kv
+            qk, sk = qfn(sub_k)
+            qv, sv = qfn(sub_v)
             k, ks = jax.device_get(qk), jax.device_get(sk)
             v, vs = jax.device_get(qv), jax.device_get(sv)
         seg = _HostSegment(blocks, k, v, ks, vs,

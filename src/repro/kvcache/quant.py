@@ -27,8 +27,25 @@ def quantize_kv(x):
     return q, scale.astype(jnp.bfloat16)
 
 
+def quantize_kv_fp8(x):
+    """x: [..., Dh] float -> (q float8_e4m3fn, scale [...] bf16).
+
+    Same per-(token, head) absmax scheme and byte footprint as the int8
+    codec, but the payload is an fp8 cast instead of a rounded integer
+    grid: e4m3 keeps ~3 mantissa bits everywhere on its exponent range,
+    so small-magnitude components inside a large-absmax row — which int8
+    collapses onto a coarse uniform grid — retain relative precision.
+    The scale maps the row absmax onto e4m3's largest finite (448); the
+    same 1e-8 floor makes all-zero rows round-trip exactly."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(absmax / 448.0, 1e-8)
+    q = (x.astype(jnp.float32) / scale[..., None]).astype(jnp.float8_e4m3fn)
+    return q, scale.astype(jnp.bfloat16)
+
+
 def dequantize_kv(q, scale, dtype=jnp.float32):
-    """Inverse of ``quantize_kv``; returns ``dtype`` (default float32).
+    """Inverse of ``quantize_kv`` / ``quantize_kv_fp8`` (the payload's
+    own dtype drives the upcast); returns ``dtype`` (default float32).
 
     Callers reconstructing into an existing buffer must pass that
     buffer's dtype — a bf16 pool fed float32 dequants would silently

@@ -143,17 +143,27 @@ def _encoder_out(cfg: ModelConfig, params, extra):
 def prefill(cfg: ModelConfig, params, tokens, cache, *,
             extra: Optional[Dict] = None,
             spec: Optional[SpecPVConfig] = None,
-            return_logits: str = "last"):
+            return_logits: str = "last",
+            t_valid=None):
     """Process a chunk of prompt tokens.  Returns (logits, features, cache);
     logits are [B, V] for the last position by default ("last") — computing
     the full [B, T, V] tensor ("all") at 32K x 150K-vocab scale is a
-    multi-GiB allocation reserved for tests/teacher-forcing."""
+    multi-GiB allocation reserved for tests/teacher-forcing.
+
+    ``t_valid`` ([B] int32, optional; attention archs only) marks the
+    chunk ragged: row ``i`` carries ``t_valid[i] >= 1`` real tokens and
+    ``t - t_valid[i]`` trailing zero-pads.  Pads are excluded from KV
+    writes / summaries / ``length`` advancement, and "last" logits are
+    gathered per row at ``t_valid[i] - 1`` — the fused multi-cursor
+    prefill step packs cursors of unequal chunk lengths this way."""
     b, t = tokens.shape
 
     if cfg.arch_type == "ssm":
+        assert t_valid is None, "ragged prefill is attention-arch only"
         h, feats, cache = rw.forward(cfg, params, tokens, cache)
         lm = rw.lm_head
     elif cfg.arch_type == "hybrid":
+        assert t_valid is None, "ragged prefill is attention-arch only"
         positions = cache["length"][:, None] + jnp.arange(t)[None]
         h, feats, cache = gf.forward(cfg, params, tokens, positions, cache,
                                      mode="advance")
@@ -164,12 +174,17 @@ def prefill(cfg: ModelConfig, params, tokens, cache, *,
         enc = _encoder_out(cfg, params, extra) if extra else None
         out = dn.trunk_fwd(cfg, params["decoder"], hh, positions,
                            mode="prefill", cache=cache, encoder_out=enc,
-                           spec=spec or SpecPVConfig())
+                           spec=spec or SpecPVConfig(), t_valid=t_valid)
         h, feats, cache = out.h, out.features, out.cache
         lm = dn.lm_head
 
     if return_logits == "all":
         logits = lm(cfg, params, h)
+    elif t_valid is not None:
+        last = jnp.clip(t_valid - 1, 0)[:, None, None]       # [B, 1, 1]
+        h_last = jnp.take_along_axis(
+            h, jnp.broadcast_to(last, (b, 1, h.shape[-1])), axis=1)
+        logits = lm(cfg, params, h_last)[:, 0]
     else:
         logits = lm(cfg, params, h[:, -1:])[:, 0]
     return logits, Features(*feats), cache

@@ -304,7 +304,8 @@ def _paged_kernel_ok() -> bool:
 def _self_attention(cfg: ModelConfig, mode: str,
                     lp: Dict, h, positions, self_mask, cache_kv, pkv,
                     length, inv_freq, mscale, page_table=None,
-                    paged_kernel: bool = False, partial_rows=None):
+                    paged_kernel: bool = False, partial_rows=None,
+                    t_valid=None):
     """One self-attention sublayer under the given mode.
 
     cache_kv: (k_layer, v_layer) for prefill/decode_full/decode_fused
@@ -326,7 +327,13 @@ def _self_attention(cfg: ModelConfig, mode: str,
               materialising the gathered logical view
     partial_rows: [B] bool, decode_fused only — rows whose context is
               the materialised partial cache; all other rows attend the
-              full cache over their real length.  The two context
+              full cache over their real length.
+    t_valid:  [B] int32, prefill only — ragged chunk: row i carries
+              ``t_valid[i]`` real tokens then zero-pads.  Pad positions
+              are excluded from KV writes (paged: routed to the null
+              page; contiguous: zero-masked, bit-identical to the
+              untouched init zeros a serial schedule leaves) and from
+              the attention key mask.  The two context
               partials are computed in one launch and row-selected
               *before* the softmax combine, so each row's result is
               bit-identical to the corresponding single-mode step
@@ -352,26 +359,47 @@ def _self_attention(cfg: ModelConfig, mode: str,
                                  kv_positions=positions, causal=False,
                                  chunk=min(512, max(128, t)))
     elif mode == "prefill":
+        t_eff = t_valid if t_valid is not None else t
+        valid = (jnp.arange(t)[None] < t_valid[:, None]
+                 if t_valid is not None else None)
         if page_table is not None:
             from repro.kvcache.cache import (paged_write_tokens,
                                              gather_page_view)
             pool_k, pool_v = cache_kv[:2]     # [NP, block, Hk, Dh]
-            pool_k = paged_write_tokens(pool_k, page_table, length, k_new)
-            pool_v = paged_write_tokens(pool_v, page_table, length, v_new)
-            k_layer = gather_page_view(pool_k, page_table)
-            v_layer = gather_page_view(pool_v, page_table)
+            pool_k = paged_write_tokens(pool_k, page_table, length, k_new,
+                                        valid)
+            pool_v = paged_write_tokens(pool_v, page_table, length, v_new,
+                                        valid)
             upd["k_layer"] = pool_k
             upd["v_layer"] = pool_v
+            if paged_kernel:
+                # blockwise-parallel Pallas prefill: K/V were just
+                # written, so the kernel's causal scan over the row's
+                # resident pages covers in-chunk self-attention too —
+                # the contiguous [B, S, ...] view never materialises
+                from repro.kernels import ops as kops
+                tv = (t_valid if t_valid is not None
+                      else jnp.full((b,), t, jnp.int32))
+                out = kops.paged_prefill_attention(
+                    q, pool_k, pool_v, page_table, length, tv)
+                return bk.attn_output(cfg, lp["attn"], out), upd, q
+            k_layer = gather_page_view(pool_k, page_table)
+            v_layer = gather_page_view(pool_v, page_table)
         else:
             k_layer, v_layer = cache_kv[:2]  # (int8 caches are decode-only)
             from repro.kvcache.cache import append_layer_kv
-            k_layer, v_layer = append_layer_kv(k_layer, v_layer, k_new,
-                                               v_new, length)
+            if valid is not None:
+                k_new_w = jnp.where(valid[..., None, None], k_new, 0)
+                v_new_w = jnp.where(valid[..., None, None], v_new, 0)
+            else:
+                k_new_w, v_new_w = k_new, v_new
+            k_layer, v_layer = append_layer_kv(k_layer, v_layer, k_new_w,
+                                               v_new_w, length)
             upd["k_layer"] = k_layer
             upd["v_layer"] = v_layer
         s = k_layer.shape[1]
         kv_pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
-        kv_valid = kv_pos < (length + t)[:, None]
+        kv_valid = kv_pos < (length + t_eff)[:, None]
         out = cm.flash_attention(q, k_layer, v_layer, q_positions=positions,
                                  kv_positions=kv_pos, causal=True,
                                  window=cfg.window_size,
@@ -553,7 +581,8 @@ def trunk_fwd(cfg: ModelConfig, stack_params: Dict, h, positions, *,
               q_weight=None,
               partial_rows=None,
               kinds: Optional[Tuple[str, ...]] = None,
-              collect_features: bool = True):
+              collect_features: bool = True,
+              t_valid=None):
     """Run the layer stack.  See module docstring for modes.
 
     cache: dict with "k"/"v": [L_attn,B,S,Hk,Dh], "length": [B],
@@ -574,9 +603,11 @@ def trunk_fwd(cfg: ModelConfig, stack_params: Dict, h, positions, *,
     length = cache["length"] if cache is not None else jnp.zeros((b,), jnp.int32)
     paged = cache is not None and "page_table" in cache
     page_table = cache["page_table"] if paged else None
-    paged_kernel = (paged and mode in ("decode_full", "decode_fused")
-                    and spec is not None
-                    and spec.use_pallas and _paged_kernel_ok())
+    paged_kernel = (paged and spec is not None
+                    and spec.use_pallas and _paged_kernel_ok()
+                    and (mode in ("decode_full", "decode_fused")
+                         or (mode == "prefill" and cfg.window_size == 0)))
+    t_eff = t_valid if t_valid is not None else t
     if q_weight is None:
         q_weight = jnp.ones((b, t), jnp.float32)
 
@@ -682,7 +713,8 @@ def trunk_fwd(cfg: ModelConfig, stack_params: Dict, h, positions, *,
                 att, upd, q = _self_attention(
                     cfg, mode, lp, h, positions, self_mask, cache_kv, pkv_l,
                     length, inv_freq, mscale, page_table=page_table,
-                    paged_kernel=paged_kernel, partial_rows=partial_rows)
+                    paged_kernel=paged_kernel, partial_rows=partial_rows,
+                    t_valid=t_valid)
                 h = h + att
                 if mode == "prefill":
                     if paged:
@@ -690,13 +722,13 @@ def trunk_fwd(cfg: ModelConfig, stack_params: Dict, h, positions, *,
                         blk = upd["k_layer"].shape[1]
                         nkmax, nkmin = paged_update_summaries(
                             x["kmax"][a_i], x["kmin"][a_i], upd["k_layer"],
-                            page_table, length, length + t,
+                            page_table, length, length + t_eff,
                             n_touch=cdiv(t, blk) + 1)
                     else:
                         from repro.kvcache.cache import update_layer_summaries
                         nkmax, nkmin = update_layer_summaries(
                             x["kmax"][a_i], x["kmin"][a_i], upd["k_layer"],
-                            length, length + t, spec.block_size)
+                            length, length + t_eff, spec.block_size)
                     ys["uk"].append(upd["k_layer"])
                     ys["uv"].append(upd["v_layer"])
                     ys["ukmax"].append(nkmax)
@@ -802,7 +834,7 @@ def trunk_fwd(cfg: ModelConfig, stack_params: Dict, h, positions, *,
         new_cache["v"] = flat("uv")
         new_cache["kmax"] = flat("ukmax")
         new_cache["kmin"] = flat("ukmin")
-        new_cache["length"] = length + t
+        new_cache["length"] = length + t_eff
         if "cxk" in ys:
             new_cache["cross_k"] = flat("cxk")
             new_cache["cross_v"] = flat("cxv")

@@ -54,6 +54,13 @@ class ServingConfig:
     # mode per tick — as the A/B baseline
     # (``benchmarks/bench_serving.py --fused``).
     fused_step: bool = True
+    # fused multi-row prefill (continuous scheduler only): each tick's
+    # prefill budget is spent as a *row set* — every open admission's
+    # next chunk runs in one ragged fused dispatch instead of one
+    # dispatch per cursor.  False keeps the serial oldest-first pump as
+    # the A/B baseline (``benchmarks/bench_serving.py --prefill-batch``).
+    # Token outputs are bit-identical either way.
+    fused_prefill: bool = True
     partial_verification: bool = True
     pad_id: int = 0
     # "continuous" | "wave".  Continuous batching drives the per-slot
@@ -81,6 +88,11 @@ class ServingConfig:
     # (benchmarks/bench_serving.py --tiered).
     tiered_kv: bool = False
     tier_lossless: bool = False
+    # host-side page codec for demoted blocks (paged + tiered only):
+    # "int8" (absmax per-token symmetric) or "fp8" (e4m3 cast with a
+    # per-token absmax/448 scale — same byte footprint, no integer
+    # rounding grid).  Ignored when tier_lossless=True.
+    tier_codec: str = "int8"
     # copy-on-write prompt-prefix sharing (paged only): requests whose
     # prompts share block-aligned leading tokens attach the cached pages
     # by reference — one physical copy, zero prefill FLOPs for the
@@ -133,7 +145,8 @@ class ServingEngine:
                 num_draft_pages=self.scfg.num_draft_pages,
                 prefix_cache=self.scfg.prefix_cache,
                 tiered=paged and self.scfg.tiered_kv,
-                tier_lossless=self.scfg.tier_lossless)
+                tier_lossless=self.scfg.tier_lossless,
+                tier_codec=self.scfg.tier_codec)
         return self._engines[key]
 
     def page_stats(self) -> Dict[str, int]:
@@ -180,7 +193,8 @@ class ServingEngine:
                 self._engine_for(self.scfg.batch, paged=self.scfg.paged_kv),
                 prefill_chunk=self.scfg.prefill_chunk,
                 prefill_budget=self.scfg.prefill_budget,
-                fused=self.scfg.fused_step)
+                fused=self.scfg.fused_step,
+                fused_prefill=self.scfg.fused_prefill)
             self._continuous = sched
         while self.queue:
             sched.submit(self.queue.pop(0))
@@ -192,7 +206,7 @@ class ServingEngine:
         for k in list(sched.stats):
             if k in ("tokens", "wall_s", "steps", "admissions",
                      "page_stalls", "prefix_evictions", "prefill_tokens",
-                     "tier_defers") \
+                     "prefill_dispatches", "tier_defers") \
                     or k.startswith(("mode_rows_", "ticks_modes_")):
                 self.stats[k] += sched.stats.pop(k)
         return done

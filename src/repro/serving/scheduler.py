@@ -127,12 +127,22 @@ class ContinuousScheduler:
     two costs explicitly: ``stats["steps"]`` counts *jitted dispatches*,
     ``stats["mode_rows_<mode>"]`` counts per-mode stepped rows (the
     logical per-mode work), and ``stats["ticks_modes_<k>"]`` histograms
-    decode ticks by their number of distinct modes."""
+    decode ticks by their number of distinct modes.
+
+    ``fused_prefill=True`` (default) spends the prefill budget as a
+    per-round *row set*: every open cursor that fits advances one chunk
+    in a single fused dispatch (``SpecPVEngine.prefill_step_fused``) —
+    N concurrent admissions cost one kernel launch per round instead of
+    N.  ``fused_prefill=False`` keeps the serial oldest-first pump for
+    A/B (``bench_serving.py --prefill-batch``).  Outputs are
+    token-identical either way (absolute chunk boundaries, zero-pad-only
+    packing); ``stats["prefill_dispatches"]`` counts the launches."""
 
     def __init__(self, engine: SpecPVEngine, *, prefill_chunk: int = 256,
                  prefill_budget: Optional[int] = None,
                  record_steps: bool = False,
                  fused: bool = True,
+                 fused_prefill: bool = True,
                  clock: Callable[[], float] = time.time):
         assert engine.is_attn, \
             "continuous batching drives the per-slot SpecPV automaton " \
@@ -146,6 +156,7 @@ class ContinuousScheduler:
         self.prefill_budget = prefill_budget
         self.record_steps = record_steps
         self.fused = fused
+        self.fused_prefill = fused_prefill
         self.clock = clock
         self.st = engine.empty_state()
         self.slots: List[Optional[_Slot]] = [None] * engine.batch
@@ -300,16 +311,81 @@ class ContinuousScheduler:
             self.st = self.engine.reset_slot(self.st, i)
         self._dirty.clear()
 
+    def _finalize_prefill(self, i: int) -> None:
+        """Commit an exhausted cursor: scatter the sub-state into the
+        slot row, append the first token, enter DECODING — eligible for
+        a decode step in this same tick."""
+        s = self.slots[i]
+        self.st, first = self.engine.prefill_finalize_slot(self.st, s.cursor)
+        s.cursor = None
+        s.req.phase = RequestPhase.DECODING
+        s.append([first])
+        self.trace.append(("prefill_done", s.req.request_id, i))
+
     def _pump_prefill(self) -> int:
-        """Advance open prefill cursors, oldest admission first, by whole
-        chunks until the per-tick budget is spent (the first chunk always
-        runs, so a budget below the chunk size still progresses — the
-        per-tick bound is ``max(prefill_budget, prefill_chunk)`` tokens).
-        A cursor that exhausts its prompt is finalised: the sub-state is
-        scattered into the slot row, the first token appended, and the
-        request enters DECODING — eligible for a decode step in this same
-        tick.  Returns prefill tokens processed."""
-        spent = 0
+        """Spend the per-tick prefill budget on the open cursors.
+
+        Fused (default): each round selects the oldest-first *row set*
+        whose next chunks fit the remaining budget (the first row always
+        runs, so a budget below the chunk size still progresses) and
+        advances the whole set in ONE fused dispatch
+        (``prefill_step_fused``); cursors carrying per-request ``extra``
+        conditioning cannot batch and step serially within their round.
+        Serial (``fused_prefill=False``): the classic pump — one cursor
+        at a time, oldest admission first, one dispatch per chunk.
+
+        Both spend at most ``max(prefill_budget, prefill_chunk)`` tokens
+        per tick (fused: per selected row) and produce token-identical
+        outputs; cursors that exhaust their prompt are finalised
+        (incl. cursors born exhausted: a whole-prompt tail-entry hit
+        opens with zero chunks to run).  Returns tokens processed."""
+        if not self.fused_prefill:
+            return self._pump_prefill_serial()
+        spent, d0 = 0, self.engine.prefill_dispatches
+        while True:
+            order = sorted((s.seq, i) for i, s in enumerate(self.slots)
+                           if s is not None and s.cursor is not None)
+            for _, i in order:
+                if self.slots[i].cursor.done:
+                    self._finalize_prefill(i)
+            open_rows = [i for _, i in order
+                         if self.slots[i].cursor is not None]
+            if not open_rows or (spent and spent >= self.prefill_budget):
+                break
+            # oldest-first row set under the remaining budget; the first
+            # row is unconditional only while nothing ran this tick
+            batch, planned = [], spent
+            for i in open_rows:
+                nxt = self.slots[i].cursor.next_tokens
+                if (spent or batch) and planned + nxt > self.prefill_budget:
+                    break
+                batch.append(i)
+                planned += nxt
+            if not batch:
+                break                       # budget exhausted mid-tick
+            fused_rows = [i for i in batch
+                          if self.slots[i].cursor.extra is None]
+            if fused_rows:
+                self.st, n = self.engine.prefill_step_fused(
+                    self.st, [self.slots[i].cursor for i in fused_rows])
+                spent += n
+            for i in batch:                 # `extra` rows: serial fallback
+                if i not in fused_rows:
+                    self.st, n = self.engine.prefill_step_into_slot(
+                        self.st, self.slots[i].cursor)
+                    spent += n
+        if spent:
+            self.stats["prefill_tokens"] += spent
+            self.stats["prefill_dispatches"] += \
+                self.engine.prefill_dispatches - d0
+        return spent
+
+    def _pump_prefill_serial(self) -> int:
+        """A/B reference pump: advance open prefill cursors, oldest
+        admission first, by whole chunks until the per-tick budget is
+        spent (the first chunk always runs).  One jitted dispatch per
+        chunk per cursor."""
+        spent, d0 = 0, self.engine.prefill_dispatches
         order = sorted((s.seq, i) for i, s in enumerate(self.slots)
                        if s is not None and s.cursor is not None)
         for _, i in order:
@@ -323,18 +399,13 @@ class ContinuousScheduler:
                         self.st, s.cursor)
                     spent += n
                 if s.cursor.done:
-                    # incl. cursors born exhausted: a whole-prompt
-                    # tail-entry hit opens with zero chunks to run
-                    self.st, first = self.engine.prefill_finalize_slot(
-                        self.st, s.cursor)
-                    s.cursor = None
-                    s.req.phase = RequestPhase.DECODING
-                    s.append([first])
-                    self.trace.append(("prefill_done", s.req.request_id, i))
+                    self._finalize_prefill(i)
             if spent and spent >= self.prefill_budget:
                 break
         if spent:
             self.stats["prefill_tokens"] += spent
+            self.stats["prefill_dispatches"] += \
+                self.engine.prefill_dispatches - d0
         return spent
 
     # ------------------------------------------------------------------

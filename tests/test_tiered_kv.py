@@ -294,6 +294,50 @@ def test_quantize_scale_floor_tiny_bf16():
     assert not bool(jnp.any(jnp.isnan(out.astype(jnp.float32))))
 
 
+def test_fp8_codec_roundtrip_closeness():
+    from repro.kvcache.quant import quantize_kv_fp8
+    rng = np.random.default_rng(8)
+    x = rng.normal(size=(2, 5, 3, 8)).astype(np.float32) * 4.0
+    q, s = quantize_kv_fp8(jnp.asarray(x))
+    assert q.dtype == jnp.float8_e4m3fn and s.dtype == jnp.bfloat16
+    assert q.nbytes == x.size                   # 1 byte/elem, int8 parity
+    out = dequantize_kv(q, s)
+    # e4m3 keeps ~3 mantissa bits: elementwise error bounded relative to
+    # the row absmax (448-step scale), not the int8 uniform grid
+    amax = np.max(np.abs(x), axis=-1, keepdims=True)
+    assert np.all(np.abs(np.asarray(out) - x) < 0.08 * amax + 1e-6)
+    z = jnp.zeros((2, 3, 8))
+    qz, sz = quantize_kv_fp8(z)                 # all-zero rows exact
+    np.testing.assert_array_equal(np.asarray(dequantize_kv(qz, sz)),
+                                  np.zeros((2, 3, 8), np.float32))
+
+
+def test_fp8_tier_roundtrip_same_host_bytes():
+    """codec="fp8" demote/promote round-trips within fp8 tolerance at
+    exactly the int8 codec's host-byte footprint."""
+    peaks = {}
+    for codec in ("int8", "fp8"):
+        al = PageAllocator(NP)
+        tm = TierManager(al, codec=codec, traffic=TrafficMeter())
+        cache = _mk_pool(seed=9)
+        cache, pages = _seat(cache, al, 0, 5)
+        ref = {n: np.asarray(cache[n]) for n in ("k", "v")}
+        cache = tm.demote_slot(cache, 0, length=5 * BS)
+        peaks[codec] = tm.host_bytes_peak
+        cache = tm.promote_slot(cache, 0)
+        pt = np.asarray(cache["page_table"])[0, :5]
+        for n in ("k", "v"):
+            np.testing.assert_allclose(np.asarray(cache[n])[:, pt],
+                                       ref[n][:, pages], atol=0.2)
+        assert tm.host_bytes == 0
+    assert peaks["fp8"] == peaks["int8"]        # same bytes on the host
+
+
+def test_tier_codec_validated():
+    with pytest.raises(AssertionError):
+        TierManager(PageAllocator(NP), codec="int4")
+
+
 # ---------------------------------------------------------------------------
 # traffic accounting (per-row sums, refresh rebuild, fig4 derivation)
 # ---------------------------------------------------------------------------
