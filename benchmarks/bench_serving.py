@@ -73,6 +73,21 @@ mismatch count is reported).  Reports peak concurrent slots, page
 high-water, decode-gap p50/p95, admission stalls/defers, and the
 demote/promote/prefetch counters.
 
+``--sharded`` A/Bs single-host vs data-sharded serving on a forced
+multi-device CPU mesh (the top-of-file XLA_FLAGS guard materialises 8
+host devices before jax initialises): the identical mixed Poisson
+request set runs through one unsharded paged engine and one with
+``ServingConfig(mesh_shape=(data, 1))`` — slots, page tables and
+per-shard page-pool ranges split over the ``data`` mesh axis while the
+fused decode tick stays ONE SPMD dispatch.  Verifies token identity
+(data-sharded rows are computationally independent, so sharding them is
+lossless), checks the worst single host's resident pages against
+pool/shards + one request's slack, pins dispatches per decode tick at
+1.00, and reports the modelled per-tick cross-shard verify traffic of
+the model-axis softmax-partials merge vs the gathered-block baseline
+(``repro.distributed.verify_traffic_report``; >= 10x at paper scale is
+the acceptance bar).
+
 Run:  PYTHONPATH=src python benchmarks/bench_serving.py --requests 8
       PYTHONPATH=src python benchmarks/bench_serving.py --requests 8 --paged
       PYTHONPATH=src python benchmarks/bench_serving.py --requests 8 \
@@ -82,7 +97,19 @@ Run:  PYTHONPATH=src python benchmarks/bench_serving.py --requests 8
       PYTHONPATH=src python benchmarks/bench_serving.py --requests 8 \
           --fused
       PYTHONPATH=src python benchmarks/bench_serving.py --tiered
+      PYTHONPATH=src python benchmarks/bench_serving.py --sharded
 """
+import os
+import sys
+
+if "--sharded" in sys.argv and "xla_force_host_platform_device_count" \
+        not in os.environ.get("XLA_FLAGS", ""):
+    # must land before jax initialises (i.e. before the repro imports
+    # below), or the forced 8-CPU-device mesh never exists
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=8").strip()
+
 import argparse
 import time
 
@@ -722,6 +749,164 @@ def run_prefix_share(args, cfg, dcfg, params, dparams, corpus, spec):
                 for m, r in results.items()])
 
 
+def run_sharded(args, cfg, dcfg, params, dparams, corpus, spec, contexts):
+    """Single-host vs data-sharded serving on the forced CPU mesh: the
+    identical mixed Poisson request set runs through an unsharded paged
+    engine and one with ``ServingConfig(mesh_shape=(data, 1))``.  Token
+    identity, the worst host's resident pages vs pool/shards + slack,
+    dispatches/tick pinned at 1.00, and the modelled cross-shard verify
+    traffic (merge path vs gathered blocks) are all checked here — this
+    is the acceptance driver for the sharded-serving work."""
+    import jax
+    from repro.distributed import verify_traffic_report
+
+    ndev = jax.device_count()
+    data = max(d for d in (8, 4, 2, 1)
+               if d <= ndev and args.batch % d == 0)
+    if data < 2:
+        print(f"sharded A/B skipped: only {ndev} device(s) visible and/or "
+              f"batch {args.batch} not divisible; run with "
+              f"XLA_FLAGS=--xla_force_host_platform_device_count=8")
+        return
+    rng = np.random.default_rng(args.seed)
+    reqs = make_requests(corpus, contexts, args.requests, args.rate, rng,
+                         args.max_new)
+    max_len = max(contexts) + args.max_new + 128
+    nb_seq = -(-max_len // spec.block_size)
+    emax = TreeSpec.from_branch(dcfg.tree_branch[: dcfg.tree_depth]).max_path
+    need_max = -(-request_token_need(max(contexts), args.max_new,
+                                     spec.buffer_size, emax)
+                 // spec.block_size)
+    # pool under pressure (below the contiguous reservation), but every
+    # SHARD must seat the largest single request — the per-shard ranges
+    # are what admission gates on — and the usable count rounds up to a
+    # multiple of the data axis so the ranges split evenly
+    usable = args.num_pages or max((args.batch * nb_seq * 3) // 5,
+                                   data * (need_max + 1))
+    usable += (-usable) % data
+    print(f"sharded A/B: {args.requests} requests, contexts {contexts}, "
+          f"batch {args.batch}, mesh ({data}, 1) over {ndev} devices, "
+          f"pool {usable} usable pages ({usable // data} per shard)")
+
+    results = {}
+    for arm, mesh_shape in (("single-host", None),
+                            ("data-sharded", (data, 1))):
+        scfg = ServingConfig(batch=args.batch, max_len=max_len,
+                             prefill_chunk=64, partial_verification=True,
+                             paged_kv=True, num_pages=usable + 1,
+                             mesh_shape=mesh_shape)
+        srv = ServingEngine(cfg, spec, dcfg, params, dparams, scfg)
+        if not args.no_warmup:
+            # compile the fused step/prefill jits (and, for the meshed
+            # arm, their SPMD partitions) outside the timed region
+            for j, ctx in enumerate({min(contexts), max(contexts)}):
+                prompt, _ = continuation_task(corpus, batch=1,
+                                              context_len=ctx, seed=1)
+                srv.submit(Request(request_id=f"warm-{j}",
+                                   prompt=prompt[0], max_new_tokens=8))
+            srv.run()
+            srv.reset_warm()
+        run_reqs = [(off, Request(request_id=r.request_id, prompt=r.prompt,
+                                  max_new_tokens=r.max_new_tokens,
+                                  eos_id=r.eos_id))
+                    for off, r in reqs]
+        outs, wall, lat = run_continuous(srv, run_reqs)
+        toks = sum(len(o.tokens) for o in outs)
+        p50, p95 = percentiles(lat)
+        dispatches = int(srv.stats["steps"])
+        hist = {int(k.rsplit("_", 1)[1]): int(v)
+                for k, v in srv.stats.items()
+                if k.startswith("ticks_modes_")}
+        ticks = max(sum(hist.values()), 1)
+        ps = srv.page_stats()
+        results[arm] = dict(outs=outs, reqs=run_reqs, tput=toks / wall,
+                            p50=p50, p95=p95, dispatches=dispatches,
+                            ticks=ticks, ps=ps,
+                            stalls=int(srv.stats.get("page_stalls", 0)))
+        print(f"{arm:>12}: {toks} tokens in {wall:.1f}s -> "
+              f"{toks / wall:.1f} tok/s; {dispatches} dispatches over "
+              f"{ticks} decode ticks ({dispatches / ticks:.2f}/tick); "
+              f"latency p50={p50:.1f}s p95={p95:.1f}s")
+        if mesh_shape is None:
+            print(f"{'':>12}  committed pages high-water: "
+                  f"{ps['high_water']}/{ps['capacity']}")
+        else:
+            per = [int(ps[f"high_water_shard_{s}"]) for s in range(data)]
+            print(f"{'':>12}  per-host pages high-water: {per} "
+                  f"(worst host {int(ps['peak_pages_per_host'])}; bound "
+                  f"{ps['capacity'] // data} + {nb_seq} slack; the "
+                  f"single-host arm held "
+                  f"{results['single-host']['ps']['high_water']})")
+
+    rb, rs = results["single-host"], results["data-sharded"]
+    base = {o.request_id: o.tokens for o in rb["outs"]}
+    for o in rs["outs"]:
+        assert np.array_equal(o.tokens, base[o.request_id]), \
+            f"{o.request_id}: data-sharded != single-host"
+    print("losslessness: data-sharded outputs token-identical to the "
+          "single-host fused baseline")
+    if not args.no_check:
+        scfg = ServingConfig(batch=args.batch, max_len=max_len,
+                             prefill_chunk=64, partial_verification=True)
+        check_lossless(cfg, spec, dcfg, params, dparams, scfg,
+                       rs["reqs"], rs["outs"])
+        print("losslessness: data-sharded outputs token-identical to "
+              "single-request generation")
+
+    peak = int(rs["ps"]["peak_pages_per_host"])
+    bound = rs["ps"]["capacity"] // data + nb_seq
+    assert peak <= bound, \
+        f"worst host's resident pages {peak} > pool/shards+slack {bound}"
+    for arm, r in results.items():
+        assert r["dispatches"] == r["ticks"], \
+            f"{arm}: {r['dispatches']} dispatches over {r['ticks']} ticks"
+    print(f"per-host residency: worst host {peak} pages <= "
+          f"{rs['ps']['capacity']} pool / {data} shards + {nb_seq} slack; "
+          f"dispatches/tick 1.00 both arms")
+
+    # modelled cross-shard verify traffic of the model-axis path: the
+    # softmax-partials merge vs all-gathering the selected KV blocks, at
+    # paper scale (8B-class trunk, 8-way CP, 128x128-token budget) and
+    # at this bench's dimensions
+    dh = cfg.head_dim or cfg.d_model // cfg.num_heads
+    paper = verify_traffic_report(batch=8, q_tokens=8, num_heads=32,
+                                  num_kv_heads=8, head_dim=128,
+                                  num_layers=32, n_shards=8,
+                                  budget_blocks=128, block_size=128)
+    bench = verify_traffic_report(batch=args.batch, q_tokens=emax + 1,
+                                  num_heads=cfg.num_heads,
+                                  num_kv_heads=cfg.num_kv_heads,
+                                  head_dim=dh, num_layers=cfg.num_layers,
+                                  n_shards=data,
+                                  budget_blocks=spec.retrieval_budget_blocks,
+                                  block_size=spec.block_size)
+    assert paper["traffic_ratio"] >= 10.0, paper
+    print(f"cross-shard verify traffic per tick (paper scale, 8-way CP): "
+          f"merge path {paper['merged_partials_bytes'] / 2**20:.1f} MiB vs "
+          f"gathered blocks {paper['gathered_blocks_bytes'] / 2**20:.1f} "
+          f"MiB -> {paper['traffic_ratio']:.1f}x smaller "
+          f"(bench dims: {bench['traffic_ratio']:.1f}x)")
+
+    out = ensure_dir(RESULTS_DIR)
+    write_rows(f"{out}/bench_serving_sharded.csv",
+               ["arm", "data_shards", "tok_s", "p50_s", "p95_s",
+                "dispatches", "decode_ticks", "dispatches_per_tick",
+                "high_water_pages", "peak_pages_per_host",
+                "page_stalls", "merged_partials_bytes_paper",
+                "gathered_blocks_bytes_paper", "traffic_ratio_paper"],
+               [["single-host", 1, f"{rb['tput']:.2f}", f"{rb['p50']:.2f}",
+                 f"{rb['p95']:.2f}", rb["dispatches"], rb["ticks"],
+                 f"{rb['dispatches'] / rb['ticks']:.3f}",
+                 rb["ps"]["high_water"], "", rb["stalls"], "", "", ""],
+                ["data-sharded", data, f"{rs['tput']:.2f}",
+                 f"{rs['p50']:.2f}", f"{rs['p95']:.2f}", rs["dispatches"],
+                 rs["ticks"], f"{rs['dispatches'] / rs['ticks']:.3f}",
+                 rs["ps"]["high_water"], peak, rs["stalls"],
+                 paper["merged_partials_bytes"],
+                 paper["gathered_blocks_bytes"],
+                 f"{paper['traffic_ratio']:.2f}"]])
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=8)
@@ -761,6 +946,13 @@ def main():
                          "admission-to-first-token p50/p95, decode-gap "
                          "p50/p95 (long-prompt burst defaults: contexts "
                          "512 448 512 384, batch 4, rate 0, budget 256)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="A/B single-host vs data-sharded serving on a "
+                         "forced 8-CPU-device mesh (mesh_shape=(8, 1)): "
+                         "token identity, worst-host resident pages vs "
+                         "pool/shards + slack, dispatches/tick, modelled "
+                         "cross-shard verify traffic (defaults: batch 8, "
+                         "mode-mixing contexts 64 192 96 256 224)")
     ap.add_argument("--tiered", action="store_true",
                     help="tiered-residency memory-pressure A/B: untiered "
                          "parity pool vs untiered + tiered (lossless and "
@@ -826,6 +1018,16 @@ def main():
             args.prefill_budget = 256
         run_prefill_batch(args, cfg, dcfg, params, dparams, corpus, spec,
                           contexts)
+        return
+    if args.sharded:
+        # straddle the partial budget (like --fused) so the meshed tick
+        # carries a real mode mix; batch 8 fills the 8-way data axis
+        # one slot per shard
+        contexts = args.contexts or [64, 192, 96, 256, 224]
+        if args.batch == ap.get_default("batch"):
+            args.batch = 8
+        run_sharded(args, cfg, dcfg, params, dparams, corpus, spec,
+                    contexts)
         return
     if args.tiered:
         # long contexts only, and near-uniform: each prompt's cold pages

@@ -207,7 +207,8 @@ class SpecPVEngine:
                  prefix_cache: bool = True,
                  tiered: bool = False,
                  tier_lossless: bool = False,
-                 tier_codec: str = "int8"):
+                 tier_codec: str = "int8",
+                 mesh=None):
         """``paged=True`` (attention archs only) backs the full KV cache
         with a shared block pool + per-slot page tables: resident memory
         scales with tokens actually held instead of batch x max_len, and
@@ -241,7 +242,17 @@ class SpecPVEngine:
         sizes the draft pool independently (default: ``num_pages``);
         the draft cache is read every step and never tiered, so a
         tiered deployment keeps a full-size draft pool (~1/L the bytes
-        per page) under a shrunken trunk pool."""
+        per page) under a shrunken trunk pool.
+
+        ``mesh`` (a ``jax.sharding.Mesh`` with a ``data`` and/or
+        ``model`` axis) shards the serving engine: batch rows split into
+        contiguous per-shard slot ranges over ``data`` (each shard draws
+        pages only from its own range of the pool — see
+        ``PageAllocator`` — so no host materializes the whole cache or
+        batch), trunk weights shard over ``model`` per ``ShardingRules``,
+        and the engine state is placed with matching ``NamedSharding``s
+        so the one fused dispatch per tick runs SPMD across the mesh
+        (docs/architecture.md#mesh--sharding)."""
         self.cfg = cfg
         self.spec = spec
         self.dcfg = dcfg
@@ -259,9 +270,27 @@ class SpecPVEngine:
                           else batch * self._nb_seq + 1)
         self.num_draft_pages = (num_draft_pages if num_draft_pages is not None
                                 else self.num_pages)
-        self._page_alloc = (kvc.PageAllocator(self.num_pages)
+        # ---- mesh / sharding (single-host when mesh is None) ----------
+        self.mesh = mesh
+        self._rules = None
+        self.data_shards = 1
+        self.model_shards = 1
+        if mesh is not None:
+            from repro.distributed.sharding import ShardingRules
+            self._rules = ShardingRules(mesh)
+            self.model_shards = self._rules.model_size
+            ds = self._rules.data_size
+            # graceful degradation (sharding.py _divisible): an
+            # indivisible batch keeps the slot registry unsharded
+            if ds > 1 and batch % ds == 0:
+                self.data_shards = ds
+        self._page_alloc = (kvc.PageAllocator(self.num_pages,
+                                              shards=self.data_shards,
+                                              slot_shard=self.shard_of_slot)
                             if self.paged else None)
-        self._draft_alloc = (kvc.PageAllocator(self.num_draft_pages)
+        self._draft_alloc = (kvc.PageAllocator(self.num_draft_pages,
+                                               shards=self.data_shards,
+                                               slot_shard=self.shard_of_slot)
                              if self.paged else None)
         assert not (tiered and not self.paged), \
             "tiered KV residency needs the paged cache (paged=True)"
@@ -295,6 +324,14 @@ class SpecPVEngine:
         self.dispatches = 0             # jitted engine steps executed
         self.prefill_dispatches = 0     # jitted prefill chunks launched
         self._prefix_dedups = 0         # duplicate blocks collapsed
+        if self._rules is not None and jax.device_count() > 1:
+            # place trunk + draft weights once; GSPMD propagates the
+            # shardings through every jitted step from the operands
+            from repro.distributed.sharding import param_shardings
+            self.params = jax.device_put(
+                self.params, param_shardings(self._rules, self.params))
+            self.dparams = jax.device_put(
+                self.dparams, param_shardings(self._rules, self.dparams))
         self._build_jits()
         # the destination state dies at the call site (callers rebind), so
         # donate it instead of materialising a second copy of the caches
@@ -827,7 +864,7 @@ class SpecPVEngine:
             self._forked_slots.clear()
             if self._tier is not None:
                 self._tier.reset()
-        return self._neutral_state(self.batch)
+        return self.shard_state(self._neutral_state(self.batch))
 
     def _clear_prefix(self) -> None:
         if self._prefix is not None:
@@ -871,43 +908,180 @@ class SpecPVEngine:
         return min(cdiv(toks, self.spec.block_size), self._nb_seq)
 
     def prefix_match_blocks(self, prompt: np.ndarray,
-                            touch: bool = False) -> int:
+                            touch: bool = False,
+                            shard: Optional[int] = None) -> int:
         """Probe: leading full blocks of `prompt` the prefix cache can
         currently serve (capped one block short of the prompt so the
         tail prefill is never empty).  ``touch`` re-stamps the chain MRU
         — admission gating uses it so a same-tick LRU eviction cannot
-        reclaim the blocks it just counted on."""
+        reclaim the blocks it just counted on.  ``shard`` restricts the
+        match to entries resident on that data shard."""
         if self._prefix is None:
             return 0
         bs = self.spec.block_size
-        return len(self._prefix.match(np.asarray(prompt),
-                                      (len(prompt) - 1) // bs,
-                                      touch=touch, count=False))
+        entries = self._prefix.match(np.asarray(prompt),
+                                     (len(prompt) - 1) // bs,
+                                     touch=touch, count=False)
+        return len(self._shard_chain(entries, shard))
 
     def pages_needed_shared(self, prompt: np.ndarray, max_new_tokens: int,
-                            touch: bool = False) -> int:
+                            touch: bool = False,
+                            shard: Optional[int] = None) -> int:
         """Sharing-aware admission accounting: fresh pages the request
         would need right now — the cold-count minus the blocks the
         prefix cache already holds (those attach by reference).  A
         whole-prompt tail-entry hit discounts every *full* block; the
         tail block itself stays billed (its attach is a fresh-page
         copy, so the page bill matches ``_attach_tail_slot`` exactly —
-        admission can never leave the slot owing a page)."""
+        admission can never leave the slot owing a page).  ``shard``
+        makes the discount per-shard-honest: only entries a slot on
+        that shard could actually attach count."""
         need = self.pages_needed(len(prompt), max_new_tokens)
         if self._prefix is not None and self.temperature == 0.0:
             tail = self._prefix.match_tail(np.asarray(prompt), touch=touch,
                                            count=False)
-            if tail is not None:
+            if tail is not None and (shard is None
+                                     or self._tail_on_shard(tail, shard)):
                 bs = self.spec.block_size
                 return max(need - len(prompt) // bs, 0)
-        return max(need - self.prefix_match_blocks(prompt, touch=touch), 0)
+        return max(need - self.prefix_match_blocks(prompt, touch=touch,
+                                                   shard=shard), 0)
 
-    def free_pages(self) -> int:
+    def free_pages(self, shard: Optional[int] = None) -> int:
         """Fresh pages available for admission (paged engines are gated
-        on the tighter of the trunk and draft pools)."""
+        on the tighter of the trunk and draft pools).  With a sharded
+        pool, pass ``shard`` to gate against one shard's range — a
+        request admitted to a shard can only ever draw that shard's
+        pages."""
         if not self.paged:
             return 1 << 30
-        return min(self._page_alloc.free, self._draft_alloc.free)
+        if shard is None or self.data_shards == 1:
+            return min(self._page_alloc.free, self._draft_alloc.free)
+        return min(self._page_alloc.free_in(shard),
+                   self._draft_alloc.free_in(shard))
+
+    # ---- sharded serving (single-host when mesh is None) -------------
+    def shard_of_slot(self, slot: int) -> int:
+        """The data-mesh shard owning batch row `slot`.  Contiguous
+        ranges (``slot * shards // batch``) match how a ``data``-axis
+        NamedSharding splits the batch dimension, so a slot's rows,
+        pages and host bytes all live on the same device."""
+        return slot * self.data_shards // self.batch
+
+    def shard_slots(self, shard: int) -> range:
+        """The batch rows owned by `shard` (contiguous)."""
+        b, n = self.batch, self.data_shards
+        return range(shard * b // n, (shard + 1) * b // n)
+
+    def _shard_chain(self, entries, shard: Optional[int]):
+        """Truncate a matched prefix chain at the first entry whose page
+        lives off `shard`: a cross-shard attach would reference pages a
+        data-parallel host does not hold, breaking per-host residency.
+        (Hash-equal blocks re-prefill per shard instead — each shard
+        converges on its own physical copy via the dedupe path.)"""
+        if shard is None or self.data_shards == 1:
+            return entries
+        out = []
+        for e in entries:
+            if self._page_alloc.page_shard(e.page) != shard:
+                break
+            out.append(e)
+        return out
+
+    def _tail_on_shard(self, tail, shard: int) -> bool:
+        """May this whole-prompt tail hit serve a slot on `shard`?"""
+        if self.data_shards == 1:
+            return True
+        chain, e = tail
+        return (all(self._page_alloc.page_shard(c.page) == shard
+                    for c in chain)
+                and self._page_alloc.page_shard(e.page) == shard)
+
+    def state_shardings(self, st: EngineState) -> Optional[EngineState]:
+        """NamedShardings matching `st` for the engine's mesh (None when
+        unsharded).  Per-row operands (page tables, lengths, modes,
+        pending/extend queues, the partial cache's batch axis) shard
+        over ``data``; the paged pools shard their *page* axis over
+        ``data`` (the allocator's contiguous per-shard ranges line up
+        with the device split, so each host physically holds exactly
+        the pages its slots may reference); contiguous full caches
+        shard batch over ``data`` and sequence over ``model``.  Jitting
+        the fused step with these as input shardings is what makes the
+        one dispatch per tick an SPMD dispatch — one launch *per host*,
+        each covering only its slot range."""
+        if self.mesh is None:
+            return None
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        bax = "data" if self.data_shards > 1 else None
+        max_ = "model" if self.model_shards > 1 else None
+
+        def ns(*spec):
+            return NamedSharding(self.mesh, P(*spec))
+
+        def div(n, shards):
+            return shards > 1 and n % shards == 0
+
+        def pool_spec(v, page_axis):
+            pax = ("data" if bax and div(v.shape[page_axis],
+                                         self.data_shards) else None)
+            spec = [None] * v.ndim
+            spec[page_axis] = pax
+            return ns(*spec)
+
+        cache_sh = {}
+        for k2, v in st.cache.items():
+            if k2 in kvc.PAGED_POOL_KEYS and self.paged:
+                cache_sh[k2] = pool_spec(v, 1)          # [L, NP, ...]
+            elif k2 in ("k", "v", "kmax", "kmin"):      # [L, B, S|NB, ...]
+                sax = max_ if div(v.shape[2], self.model_shards) else None
+                cache_sh[k2] = ns(None, bax, sax, None, None)
+            elif k2 == "page_table":
+                cache_sh[k2] = ns(bax, None)
+            elif k2 in ("length",):
+                cache_sh[k2] = ns(bax)
+            elif k2 in ("cross_k", "cross_v"):
+                cache_sh[k2] = ns(None, bax, *([None] * (v.ndim - 2)))
+            else:
+                cache_sh[k2] = ns(*([None] * v.ndim))
+        dcache_sh = {}
+        for k2, v in st.dcache.items():
+            if k2 in kvc.DRAFT_POOL_KEYS and self.paged:
+                dcache_sh[k2] = pool_spec(v, 0)         # [NPd, ...]
+            elif k2 in ("k", "v"):                      # [B, S, Hk, Dh]
+                dcache_sh[k2] = ns(bax, None, None, None)
+            elif k2 == "page_table":
+                dcache_sh[k2] = ns(bax, None)
+            elif k2 == "length":
+                dcache_sh[k2] = ns(bax)
+            else:
+                dcache_sh[k2] = ns(*([None] * v.ndim))
+
+        def rowlike(a):                                 # [B, ...] fields
+            return ns(bax, *([None] * (a.ndim - 1)))
+
+        def pkv_spec(a):                                # [L, B, Hk, ...]
+            if a.ndim < 2:                              # no-attn placeholder
+                return ns(*([None] * a.ndim))
+            return ns(None, bax, *([None] * (a.ndim - 2)))
+
+        return EngineState(
+            cache=cache_sh, dcache=dcache_sh,
+            pkv_k=pkv_spec(st.pkv_k), pkv_v=pkv_spec(st.pkv_v),
+            pkv_pos=pkv_spec(st.pkv_pos),
+            buf_len=rowlike(st.buf_len), pending=rowlike(st.pending),
+            pending_len=rowlike(st.pending_len),
+            seq_len=rowlike(st.seq_len),
+            ext_tokens=rowlike(st.ext_tokens),
+            ext_feats=rowlike(st.ext_feats), ext_len=rowlike(st.ext_len),
+            key=ns())
+
+    def shard_state(self, st: EngineState) -> EngineState:
+        """Place `st` onto the mesh per ``state_shardings`` (identity
+        when unsharded).  Called once at serving boot; every later step
+        preserves the placement through GSPMD propagation."""
+        sh = self.state_shardings(st)
+        return st if sh is None else jax.device_put(st, sh)
 
     def page_capacity(self) -> int:
         return self._page_alloc.capacity if self.paged else 1 << 30
@@ -1054,6 +1228,7 @@ class SpecPVEngine:
             for al in (self._page_alloc, self._draft_alloc):
                 al.high_water = 0
                 al.resident_high_water = 0
+                al.high_water_by = [0] * al.shards
 
     def reset_prefix_stats(self) -> None:
         """Zero the prefix-cache hit/reuse counters (benchmark warmup);
@@ -1076,6 +1251,11 @@ class SpecPVEngine:
                    draft_high_water=self._draft_alloc.high_water,
                    contiguous_pages=self.batch * self._nb_seq,
                    block_size=self.spec.block_size)
+        if self.data_shards > 1:
+            out["data_shards"] = self.data_shards
+            out["peak_pages_per_host"] = al.peak_pages_per_host
+            for s in range(al.shards):
+                out[f"high_water_shard_{s}"] = al.high_water_by[s]
         if self._tier is not None:
             out.update(self._tier.stats())
         return out
@@ -1089,6 +1269,56 @@ class SpecPVEngine:
         out["prefill_tokens_skipped"] = self._prefill_skipped_tokens
         out["dedups"] = self._prefix_dedups
         return out
+
+    def save_prefix_state(self, st: EngineState) -> Optional[dict]:
+        """Host-side snapshot of the prefix cache *with* pool bytes,
+        suitable for re-attachment after an engine rebuild
+        (``restore_prefix_state``).  None when sharing is off."""
+        if self._prefix is None:
+            return None
+
+        def page_bytes(page: int, draft_page: int) -> dict:
+            return {
+                "trunk": {k: np.asarray(st.cache[k][:, page])
+                          for k in kvc.PAGED_POOL_KEYS},
+                "draft": {k: np.asarray(st.dcache[k][draft_page])
+                          for k in kvc.DRAFT_POOL_KEYS},
+            }
+
+        return self._prefix.save_state(page_bytes)
+
+    def restore_prefix_state(self, st: EngineState, snap: Optional[dict],
+                             shard: int = 0
+                             ) -> Tuple[EngineState, int]:
+        """Re-seat a ``save_prefix_state`` snapshot into this (possibly
+        freshly built) engine: each surviving entry gets cache-only
+        pages from shard ``shard`` of both pools and its KV blob written
+        back, after the chain-hash re-verification ``load_state``
+        performs.  Returns (state, entries restored); consumes `st`."""
+        if self._prefix is None or snap is None or not self.paged:
+            return st, 0
+        cache = dict(st.cache)
+        dcache = dict(st.dcache)
+
+        def seat_pages(d: dict, sh: int) -> Tuple[int, int]:
+            (page,) = self._page_alloc.alloc_cache(1, sh)
+            try:
+                (dpage,) = self._draft_alloc.alloc_cache(1, sh)
+            except RuntimeError:
+                self._page_alloc.dec_ref([page], cache=True)
+                raise
+            for k, blob in d["pages"]["trunk"].items():
+                cache[k] = cache[k].at[:, page].set(blob)
+            for k, blob in d["pages"]["draft"].items():
+                dcache[k] = dcache[k].at[dpage].set(blob)
+            return page, dpage
+
+        n = self._prefix.load_state(snap, self._page_alloc,
+                                    self._draft_alloc, seat_pages,
+                                    shard=shard)
+        if n:
+            st = dc_replace(st, cache=cache, dcache=dcache)
+        return st, n
 
     # ------------------------------------------------------------------
     # resumable per-slot prefill (chunked-prefill interleaving)
@@ -1155,6 +1385,9 @@ class SpecPVEngine:
         tail = (self._prefix.match_tail(prompt)
                 if self._prefix is not None and self.temperature == 0.0
                 else None)
+        if tail is not None and not self._tail_on_shard(
+                tail, self.shard_of_slot(slot)):
+            tail = None                 # entry lives on another shard
         if tail is not None:
             return self._attach_tail_slot(st, slot, prompt, chunk, extra,
                                           total_pages, tail)
@@ -1163,6 +1396,7 @@ class SpecPVEngine:
         # cannot cannibalise the chain this admission just matched
         entries = (self._prefix.match(prompt, (len(prompt) - 1) // bs)
                    if self._prefix is not None else [])
+        entries = self._shard_chain(entries, self.shard_of_slot(slot))
         n_match = len(entries)
         pt_host = np.zeros((self._nb_seq,), np.int32)
         dpt_host = np.zeros((self._nb_seq,), np.int32)
@@ -1174,15 +1408,17 @@ class SpecPVEngine:
             dpt_host[:n_match] = [e.draft_page for e in entries]
             prev_feat = jnp.asarray(entries[-1].feat)[None]
         fresh = total_pages - n_match
-        if fresh > min(al.free, dal.free):
-            self.reclaim_pages(fresh - min(al.free, dal.free))
-        if fresh > min(al.free, dal.free):
+        shard = self.shard_of_slot(slot)
+        if fresh > self.free_pages(shard):
+            self.reclaim_pages(fresh - self.free_pages(shard))
+        if fresh > self.free_pages(shard):
             al.free_slot(slot)              # roll the attach back
             dal.free_slot(slot)
             raise RuntimeError(
                 f"slot {slot}: request needs {fresh} fresh pages "
-                f"({n_match} shared), {al.free}/{dal.free} free "
-                f"(trunk/draft) of {al.capacity}")
+                f"({n_match} shared), {al.free_in(shard)}/"
+                f"{dal.free_in(shard)} free (trunk/draft, shard {shard}) "
+                f"of {al.shard_capacity(shard)}")
         if n_match:
             self._prefill_skipped_tokens += n_match * bs
         start_len = n_match * bs
@@ -1308,7 +1544,7 @@ class SpecPVEngine:
         n_full = len(prompt) // bs
         rem = len(prompt) - n_full * bs
         al, dal = self._page_alloc, self._draft_alloc
-        if rem == 0 or min(al.free, dal.free) < 1:
+        if rem == 0 or self.free_pages(self.shard_of_slot(cur.slot)) < 1:
             return st
         if n_full and len(cur.chain_entries) < n_full:
             return st          # chain incomplete: the tail'd be orphaned
@@ -1422,7 +1658,10 @@ class SpecPVEngine:
             e = self._prefix.insert(
                 cur.chain_keys[j], j, int(cur.pt_host[j]),
                 int(cur.dpt_host[j]), np.asarray(fused_row[p - off]),
-                self._page_alloc, self._draft_alloc, tick=tick)
+                self._page_alloc, self._draft_alloc, tick=tick,
+                tokens=cur.prompt[j * bs:(j + 1) * bs],
+                parent=(cur.chain_keys[j - 1] if j > 0
+                        else kvc.PrefixCache._ROOT))
             if e is None:
                 e = self._prefix.entry(cur.chain_keys[j])
                 self._dedupe_block(cur, j, e)
@@ -1437,9 +1676,18 @@ class SpecPVEngine:
         the slot takes a reference on the entry's page, releases its own
         duplicate back to the pool, and rewrites the host + device page
         tables.  This is how two cold admissions of the same prompt that
-        race past each other's ``match()`` still end up sharing."""
+        race past each other's ``match()`` still end up sharing.
+
+        Sharded pools only dedupe within a shard: collapsing onto a
+        page another data shard owns would make this host reference
+        pages it does not hold, so cross-shard duplicates keep their
+        private copy (one physical copy per shard, by design)."""
         if int(cur.pt_host[j]) == e.page:
             return                      # already shared (admission match)
+        if (self.data_shards > 1
+                and self._page_alloc.page_shard(e.page)
+                != self._page_alloc.slot_shard(cur.slot)):
+            return                      # entry lives on another shard
         self._page_alloc.rebind_block(cur.slot, j, e.page)
         self._draft_alloc.rebind_block(cur.slot, j, e.draft_page)
         cur.pt_host[j] = e.page

@@ -1,0 +1,17 @@
+"""Version-compat shims for the distributed path.
+
+``shard_map`` moved out of ``jax.experimental`` (``jax.shard_map`` on
+current jax); the pinned CI toolchain (jax 0.4.x) still only has the
+experimental home.  Mirrors the ``launch/mesh.py use_mesh`` pattern:
+prefer the modern symbol, fall back, keep one import site for every
+caller (``cp_retrieval.py``, ``cp_verify.py``, tests).
+"""
+from __future__ import annotations
+
+import jax
+
+shard_map = getattr(jax, "shard_map", None)
+if shard_map is None:                           # jax < 0.6: experimental
+    from jax.experimental.shard_map import shard_map  # type: ignore
+
+__all__ = ["shard_map"]

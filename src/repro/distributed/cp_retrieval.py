@@ -24,9 +24,10 @@ import math
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax.experimental.shard_map import shard_map
 
 from repro.configs.base import SpecPVConfig
+from repro.distributed.compat import shard_map
+from repro.distributed.cp_verify import psum_softmax_merge
 from repro.kernels import ref as kref
 
 
@@ -59,12 +60,9 @@ def _local_partial_attention(spec: SpecPVConfig, budget_local: int,
     m, l, acc = jax.vmap(
         functools.partial(kref.sparse_verify_attention_ref,
                           block_size=bs))(q, k_loc, v_loc, idx, vlen)
-    # softmax merge across shards (the only cross-shard traffic)
-    m_g = jax.lax.pmax(m, axis)
-    corr = jnp.exp(m - m_g)
-    l_g = jax.lax.psum(l * corr, axis)
-    acc_g = jax.lax.psum(acc * corr[..., None], axis)
-    out = acc_g / jnp.maximum(l_g, 1e-30)[..., None]       # [H, T, Dh] x B
+    # softmax merge across shards (the only cross-shard traffic; see
+    # cp_verify.py for the traffic model)
+    out = psum_softmax_merge(m, l, acc, axis)              # [B, H, T, Dh]
     return out.transpose(0, 2, 1, 3).astype(q.dtype)       # [B, T, H, Dh]
 
 

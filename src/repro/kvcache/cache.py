@@ -36,6 +36,7 @@ docs/paged_kv.md, whose symbol references CI checks against this file
 """
 from __future__ import annotations
 
+import bisect
 import hashlib
 from typing import Dict, List, Optional, Tuple
 
@@ -212,23 +213,62 @@ class PageAllocator:
     seats a hosted block on a fresh page.  Only exclusively-owned pages
     (refcount 1, no prefix-cache pin) are ``demotable``; demoted slots
     cannot fork (a fork would have to add_ref the null page).
+
+    Sharded serving (``distributed/``): with ``shards > 1`` the
+    allocatable pages split into per-shard contiguous ranges — shard
+    ``s`` owns ``[max(1, s*NP//shards), (s+1)*NP//shards)``, the exact
+    ranges a ``data``-axis device sharding of the pool's page dimension
+    places on host ``s`` (the reserved null page 0 rides with shard 0).
+    Every slot maps to one shard (``slot_shard``) and draws pages only
+    from its own range, so a host's resident pages are bounded by its
+    range — no host ever materializes the whole cache.  Per-shard free
+    lists stay LIFO; ``high_water_by`` tracks each shard's peak
+    committed pages (the per-host truth ``peak_pages_per_host`` reports).
     """
 
-    def __init__(self, num_pages: int):
+    def __init__(self, num_pages: int, *, shards: int = 1,
+                 slot_shard=None):
         assert num_pages >= 2, "need at least one allocatable page"
+        assert shards >= 1 and shards <= num_pages - 1, \
+            f"cannot split {num_pages - 1} allocatable pages over {shards}"
         self.num_pages = num_pages
+        self.shards = shards
+        # shard s owns pages [_bounds[s], _bounds[s+1])
+        self._bounds = [max(1, (s * num_pages) // shards)
+                        for s in range(shards)] + [num_pages]
+        self._slot_shard_fn = slot_shard or (lambda slot: 0)
         self.high_water = 0             # peak committed (live working set)
         self.resident_high_water = 0    # peak physical (incl. idle cached)
+        self.high_water_by = [0] * shards   # per-shard peak committed
         self.reset()
 
     def reset(self) -> None:
-        # LIFO free list: freshly freed pages are reused first (warm HBM)
-        self._free: List[int] = list(range(self.num_pages - 1, 0, -1))
-        self._free_set = set(self._free)        # double-free detection
+        # LIFO free lists (one per shard): freshly freed pages are
+        # reused first (warm HBM); pop() hands out lowest pages first
+        self._free_by: List[List[int]] = [
+            list(range(self._bounds[s + 1] - 1, self._bounds[s] - 1, -1))
+            for s in range(self.shards)]
+        self._free_set = {p for fl in self._free_by for p in fl}
         self._ref = np.zeros((self.num_pages,), np.int32)
         self._cache_ref = np.zeros((self.num_pages,), np.int32)
         self._slot_pages: dict = {}
         self._hosted: dict = {}         # slot -> set of demoted blocks
+
+    # -- shard topology -----------------------------------------------
+    def slot_shard(self, slot: int) -> int:
+        """The shard `slot` draws its pages from."""
+        return 0 if self.shards == 1 else self._slot_shard_fn(slot) % self.shards
+
+    def page_shard(self, page: int) -> int:
+        """The shard owning physical `page` (pages never migrate)."""
+        assert page != 0, "the null page belongs to no shard's budget"
+        return bisect.bisect_right(self._bounds, page) - 1
+
+    def shard_capacity(self, shard: int) -> int:
+        return self._bounds[shard + 1] - self._bounds[shard]
+
+    def free_in(self, shard: int) -> int:
+        return len(self._free_by[shard])
 
     @property
     def capacity(self) -> int:
@@ -236,12 +276,12 @@ class PageAllocator:
 
     @property
     def free(self) -> int:
-        return len(self._free)
+        return sum(len(fl) for fl in self._free_by)
 
     @property
     def in_use(self) -> int:
         """Physical pages off the free list (incl. idle cached ones)."""
-        return self.capacity - len(self._free)
+        return self.capacity - self.free
 
     @property
     def idle(self) -> int:
@@ -312,7 +352,7 @@ class PageAllocator:
         p = self._slot_pages[slot][block]
         self._slot_pages[slot][block] = 0
         self._ref[p] = 0
-        self._free.append(p)
+        self._free_by[self.page_shard(p)].append(p)
         self._free_set.add(p)
         self._hosted.setdefault(slot, set()).add(block)
         return p
@@ -325,7 +365,7 @@ class PageAllocator:
         hosted = self._hosted.get(slot, set())
         assert block in hosted, \
             f"promote of non-hosted block {block} of slot {slot}"
-        [p] = self._take(1)
+        [p] = self._take(1, self.slot_shard(slot))
         self._slot_pages[slot][block] = p
         hosted.discard(block)
         if not hosted:
@@ -339,14 +379,33 @@ class PageAllocator:
     def _track(self) -> None:
         self.high_water = max(self.high_water, self.committed)
         self.resident_high_water = max(self.resident_high_water, self.in_use)
+        if self.shards > 1:
+            for s in range(self.shards):
+                lo, hi = self._bounds[s], self._bounds[s + 1]
+                in_use = (hi - lo) - len(self._free_by[s])
+                idle = int(np.sum((self._ref[lo:hi] > 0)
+                                  & (self._ref[lo:hi]
+                                     == self._cache_ref[lo:hi])))
+                self.high_water_by[s] = max(self.high_water_by[s],
+                                            in_use - idle)
+        else:
+            self.high_water_by[0] = self.high_water
+
+    @property
+    def peak_pages_per_host(self) -> int:
+        """Worst single-shard peak committed pages — the per-host memory
+        truth a global average would hide (one shard == one host)."""
+        return max(self.high_water_by)
 
     # -- page-grab primitive: the ONLY place pages leave the free list
-    def _take(self, n: int) -> List[int]:
-        if n > len(self._free):
+    def _take(self, n: int, shard: int = 0) -> List[int]:
+        fl = self._free_by[shard]
+        if n > len(fl):
+            where = f" (shard {shard})" if self.shards > 1 else ""
             raise RuntimeError(
-                f"page pool exhausted: want {n}, have {len(self._free)} "
-                f"free of {self.capacity}")
-        pages = [self._free.pop() for _ in range(n)]
+                f"page pool exhausted: want {n}, have {len(fl)} "
+                f"free of {self.shard_capacity(shard)}{where}")
+        pages = [fl.pop() for _ in range(n)]
         for p in pages:
             assert self._ref[p] == 0, f"free page {p} had refcount"
             self._free_set.discard(p)
@@ -355,12 +414,22 @@ class PageAllocator:
         return pages
 
     def alloc(self, slot: int, n: int) -> np.ndarray:
-        """Hand `n` fresh (refcount-1) pages to `slot`.  Raises on
-        over-draw (state unchanged), so exhaustion can never hand out a
-        page twice."""
-        pages = self._take(n)
+        """Hand `n` fresh (refcount-1) pages to `slot` from its shard's
+        range.  Raises on over-draw (state unchanged), so exhaustion can
+        never hand out a page twice."""
+        pages = self._take(n, self.slot_shard(slot))
         self._slot_pages.setdefault(slot, []).extend(pages)
         return np.asarray(pages, np.int32)
+
+    def alloc_cache(self, n: int, shard: int = 0) -> List[int]:
+        """Take `n` pages held *only* by the prefix cache (refcount 1,
+        all of it a cache reference — immediately idle/reclaimable):
+        the restore path of ``PrefixCache.load_state`` seats snapshot
+        pages this way before any slot references them."""
+        pages = self._take(n, shard)
+        for p in pages:
+            self._cache_ref[p] = 1
+        return pages
 
     def add_ref(self, pages, *, cache: bool = False) -> None:
         """Take an extra reference on already-allocated pages.  ``cache``
@@ -386,7 +455,7 @@ class PageAllocator:
                 assert self._cache_ref[p] > 0
                 self._cache_ref[p] -= 1
             if self._ref[p] == 0:
-                self._free.append(p)
+                self._free_by[self.page_shard(p)].append(p)
                 self._free_set.add(p)
                 freed.append(p)
         return freed
@@ -421,6 +490,9 @@ class PageAllocator:
             f"fork target slot {dst} still holds pages"
         assert not self._hosted.get(src) and not self._hosted.get(dst), \
             "cannot fork a slot with host-demoted blocks (promote first)"
+        assert self.slot_shard(src) == self.slot_shard(dst), \
+            (f"cross-shard fork {src}->{dst}: a fork shares pages by "
+             f"reference, so both slots must live on one shard")
         pages = self.pages_of(src)
         self.attach(dst, pages)
         return pages
@@ -442,12 +514,14 @@ class PageAllocator:
         old = self._slot_pages[slot][block]
         if self._ref[old] == 1:
             return old, old
-        if not self._free:
+        shard = self.slot_shard(slot)
+        if not self._free_by[shard]:
+            where = f" (shard {shard})" if self.shards > 1 else ""
             raise RuntimeError(
                 f"page pool exhausted: want 1, have 0 free of "
-                f"{self.capacity}")
+                f"{self.shard_capacity(shard)}{where}")
         self._ref[old] -= 1             # ref > 1, so never frees here
-        [new] = self._take(1)
+        [new] = self._take(1, shard)
         self._slot_pages[slot][block] = new
         return old, new
 
@@ -467,9 +541,11 @@ class PageAllocator:
 # ---------------------------------------------------------------------------
 
 class _PrefixEntry:
-    __slots__ = ("key", "depth", "page", "draft_page", "feat", "tick")
+    __slots__ = ("key", "depth", "page", "draft_page", "feat", "tick",
+                 "tokens", "parent")
 
-    def __init__(self, key, depth, page, draft_page, feat, tick):
+    def __init__(self, key, depth, page, draft_page, feat, tick,
+                 tokens=None, parent=None):
         self.key = key              # chain hash of blocks [0..depth]
         self.depth = depth          # logical block index
         self.page = page            # trunk pool page (all layers)
@@ -477,6 +553,9 @@ class _PrefixEntry:
         self.feat = feat            # fused feature of the block's last
                                     # token (tail-prefill continuation)
         self.tick = tick            # LRU stamp
+        self.tokens = tokens        # the block's prompt tokens (save/
+        self.parent = parent        # load provenance: key must equal
+                                    # _digest(parent, tokens))
 
 
 class _TailEntry:
@@ -590,18 +669,25 @@ class PrefixCache:
     def insert(self, key: bytes, depth: int, page: int, draft_page: int,
                feat, trunk_alloc: PageAllocator,
                draft_alloc: PageAllocator,
-               tick: Optional[int] = None) -> Optional[_PrefixEntry]:
+               tick: Optional[int] = None,
+               tokens: Optional[np.ndarray] = None,
+               parent: Optional[bytes] = None) -> Optional[_PrefixEntry]:
         """Register one completed prefill block.  Takes one reference on
         each pool page; returns the new entry, or None (taking nothing)
         when the chain hash is already cached — ``entry(key)`` then
         fetches the existing one.  Pass one ``new_tick()`` for all
-        blocks of a chain registered together."""
+        blocks of a chain registered together.  ``tokens``/``parent``
+        record the block's provenance (``key == _digest(parent,
+        tokens)``) so ``save_state`` can persist a verifiable chain."""
         if key in self._entries:
             return None
         trunk_alloc.add_ref([page], cache=True)
         draft_alloc.add_ref([draft_page], cache=True)
         e = _PrefixEntry(key, depth, int(page), int(draft_page), feat,
-                         self.new_tick() if tick is None else tick)
+                         self.new_tick() if tick is None else tick,
+                         None if tokens is None
+                         else np.ascontiguousarray(tokens, np.int64),
+                         parent)
         self._entries[key] = e
         self.inserted += 1
         return e
@@ -711,6 +797,73 @@ class PrefixCache:
             draft_alloc.dec_ref([e.draft_page], cache=True)
         self._entries.clear()
         self._tails.clear()
+
+    # -- persistence across engine rebuilds ------------------------------
+    def save_state(self, page_bytes=None) -> dict:
+        """Host-side snapshot of the chain entries (parents first).
+
+        Only entries carrying ``tokens``/``parent`` provenance are
+        persisted — the snapshot must be re-verifiable — and tail
+        entries are skipped (their boot state is only sound against the
+        exact pool bytes they were registered with).  ``page_bytes`` is
+        an optional callable ``(page, draft_page) -> blob`` capturing
+        the pool contents device-to-host (the engine passes a closure
+        over its pools); without it the snapshot carries structure only
+        and cannot be re-seated."""
+        ents = []
+        for e in self._entries.values():
+            if e.tokens is None or e.parent is None:
+                continue
+            ents.append(dict(
+                key=e.key, parent=e.parent, depth=int(e.depth),
+                tokens=np.ascontiguousarray(e.tokens, np.int64),
+                feat=None if e.feat is None else np.asarray(e.feat),
+                tick=int(e.tick),
+                pages=None if page_bytes is None
+                else page_bytes(e.page, e.draft_page)))
+        ents.sort(key=lambda d: d["depth"])
+        return {"block": self.block, "tick": self._tick, "entries": ents}
+
+    def load_state(self, snap: dict, trunk_alloc: PageAllocator,
+                   draft_alloc: PageAllocator, seat_pages,
+                   shard: int = 0) -> int:
+        """Re-attach a ``save_state`` snapshot after an engine rebuild.
+
+        Every entry **re-verifies its chain hash before first use**:
+        ``_digest(parent, tokens)`` must reproduce the stored key AND the
+        parent itself must have verified (or be the chain root), so a
+        corrupted or truncated snapshot can never certify a prefix it
+        does not hold.  ``seat_pages(entry_dict, shard) -> (page,
+        draft_page)`` allocates cache-only pages (``alloc_cache``) and
+        writes the blob back into the pools; it may raise to stop early
+        (pool pressure) — already-seated entries stay valid.  Returns
+        the number of entries restored."""
+        if snap.get("block") != self.block:
+            return 0
+        ok = {self._ROOT}
+        restored = 0
+        for d in snap["entries"]:
+            if d["parent"] not in ok and d["parent"] not in self._entries:
+                continue                      # orphaned — parent refused
+            if self._digest(d["parent"], d["tokens"]) != d["key"]:
+                continue                      # chain hash mismatch
+            if d["key"] in self._entries:
+                ok.add(d["key"])
+                continue                      # already live
+            if d.get("pages") is None:
+                continue                      # structure-only snapshot
+            try:
+                page, draft_page = seat_pages(d, shard)
+            except RuntimeError:
+                break                         # pool pressure: stop early
+            e = _PrefixEntry(d["key"], d["depth"], int(page),
+                             int(draft_page), d["feat"], d["tick"],
+                             d["tokens"], d["parent"])
+            self._entries[d["key"]] = e
+            self._tick = max(self._tick, e.tick)
+            ok.add(d["key"])
+            restored += 1
+        return restored
 
     def stats(self) -> Dict[str, int]:
         return dict(entries=len(self._entries), lookups=self.lookups,

@@ -136,25 +136,46 @@ class TierManager:
         self.sync_promotes = 0
         self.host_bytes = 0
         self.host_bytes_peak = 0
+        # per-shard host-RAM accounting (sharded serving: one shard ==
+        # one host, so these are per-host truths, not global averages)
+        shards = getattr(alloc, "shards", 1)
+        self.host_bytes_by = [0] * shards
+        self.host_bytes_peak_by = [0] * shards
 
     def reset(self) -> None:
         self._host.clear()
         self._pref.clear()
         self.host_bytes = 0
+        self.host_bytes_by = [0] * len(self.host_bytes_by)
 
     # ------------------------------------------------------------------
     def hosted(self, slot: int) -> int:
         """Hosted (promotion-owed) pages of `slot`."""
         return self.alloc.hosted_count(slot)
 
+    def _bill_host(self, slot: int, nbytes: int) -> None:
+        s = self.alloc.slot_shard(slot) if hasattr(self.alloc,
+                                                   "slot_shard") else 0
+        self.host_bytes += nbytes
+        self.host_bytes_by[s] += nbytes
+        self.host_bytes_peak = max(self.host_bytes_peak, self.host_bytes)
+        self.host_bytes_peak_by[s] = max(self.host_bytes_peak_by[s],
+                                         self.host_bytes_by[s])
+
     def stats(self) -> Dict[str, int]:
-        return dict(tier_hosted_pages=self.alloc.hosted_total,
-                    tier_demoted_pages=self.demoted_pages,
-                    tier_promoted_pages=self.promoted_pages,
-                    tier_prefetch_hits=self.prefetch_hits,
-                    tier_sync_promotes=self.sync_promotes,
-                    tier_host_bytes=self.host_bytes,
-                    tier_host_bytes_peak=self.host_bytes_peak)
+        out = dict(tier_hosted_pages=self.alloc.hosted_total,
+                   tier_demoted_pages=self.demoted_pages,
+                   tier_promoted_pages=self.promoted_pages,
+                   tier_prefetch_hits=self.prefetch_hits,
+                   tier_sync_promotes=self.sync_promotes,
+                   tier_host_bytes=self.host_bytes,
+                   tier_host_bytes_peak=self.host_bytes_peak)
+        if len(self.host_bytes_by) > 1:
+            out["tier_host_bytes_peak_per_host"] = max(
+                self.host_bytes_peak_by)
+            for s, b in enumerate(self.host_bytes_peak_by):
+                out[f"tier_host_bytes_peak_shard_{s}"] = b
+        return out
 
     # ------------------------------------------------------------------
     def demote_slot(self, cache: Dict, slot: int, length: int) -> Dict:
@@ -191,8 +212,7 @@ class TierManager:
         for j in blocks:
             al.demote(slot, j)
         self.demoted_pages += len(blocks)
-        self.host_bytes += seg.nbytes
-        self.host_bytes_peak = max(self.host_bytes_peak, self.host_bytes)
+        self._bill_host(slot, seg.nbytes)
         if self.traffic is not None:
             self.traffic.record("demote", seg.nbytes)
         out = dict(cache)
@@ -252,7 +272,7 @@ class TierManager:
             out["page_table"] = out["page_table"].at[
                 slot, jnp.asarray(seg.blocks, jnp.int32)].set(pages)
             self.promoted_pages += len(seg.blocks)
-            self.host_bytes -= seg.nbytes
+            self._bill_host(slot, -seg.nbytes)
             if self.traffic is not None:
                 self.traffic.record("promote", seg.nbytes)
         return out
@@ -261,5 +281,5 @@ class TierManager:
         """Discard `slot`'s host copies (eviction/reset: the allocator
         side is cleared by ``free_slot``)."""
         for seg in self._host.pop(slot, []):
-            self.host_bytes -= seg.nbytes
+            self._bill_host(slot, -seg.nbytes)
         self._pref.pop(slot, None)

@@ -99,6 +99,13 @@ class ServingConfig:
     # shared prefix — and admission subtracts the hits from the page
     # bill.  Off: every request pays for its whole prompt (A/B baseline).
     prefix_cache: bool = True
+    # mesh-parallel serving: a (data, model) device-mesh shape, e.g.
+    # (8, 1).  The continuous engine shards its batch rows, page pools
+    # and page tables over the ``data`` axis (per-host page pools — no
+    # host materializes the whole cache or batch) and trunk weights
+    # over ``model`` (see docs/architecture.md#mesh--sharding).  None,
+    # or a shape the local device count cannot satisfy, runs unsharded.
+    mesh_shape: Optional[tuple] = None
 
 
 class ServingEngine:
@@ -134,6 +141,18 @@ class ServingEngine:
             return self._continuous.cancel(request_id)
         return False
 
+    def _mesh(self):
+        """The serving mesh per ``ServingConfig.mesh_shape`` (None when
+        unsharded or the local device count cannot fill the shape)."""
+        shape = self.scfg.mesh_shape
+        if shape is None:
+            return None
+        import jax
+        import math
+        if math.prod(shape) > jax.device_count():
+            return None
+        return jax.make_mesh(tuple(shape), ("data", "model"))
+
     def _engine_for(self, batch: int, *, paged: bool = False) -> SpecPVEngine:
         key = (batch, paged)
         if key not in self._engines:
@@ -146,7 +165,8 @@ class ServingEngine:
                 prefix_cache=self.scfg.prefix_cache,
                 tiered=paged and self.scfg.tiered_kv,
                 tier_lossless=self.scfg.tier_lossless,
-                tier_codec=self.scfg.tier_codec)
+                tier_codec=self.scfg.tier_codec,
+                mesh=self._mesh())
         return self._engines[key]
 
     def page_stats(self) -> Dict[str, int]:
@@ -209,6 +229,13 @@ class ServingEngine:
                      "prefill_dispatches", "tier_defers") \
                     or k.startswith(("mode_rows_", "ticks_modes_")):
                 self.stats[k] += sched.stats.pop(k)
+        # sharded engines: the headline residency number is the worst
+        # single host, not the pool total (a max across hosts AND runs)
+        ps = self.page_stats()
+        if "peak_pages_per_host" in ps:
+            self.stats["peak_pages_per_host"] = max(
+                self.stats["peak_pages_per_host"],
+                float(ps["peak_pages_per_host"]))
         return done
 
     # ------------------------------------------------------------------

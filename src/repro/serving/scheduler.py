@@ -251,6 +251,8 @@ class ContinuousScheduler:
                 self.waiting.remove(req)
                 self._emit(req, -1, [], finished=False, reason="rejected")
                 continue
+            shards = getattr(self.engine, "data_shards", 1)
+            pick: Optional[int] = None
             if self.engine.paged:
                 # sharing-aware gate: only the *fresh* pages beyond the
                 # request's prefix-cache hits must be free; under
@@ -268,23 +270,48 @@ class ContinuousScheduler:
                 # (tier_admit_margin): admission must never pack the
                 # pool so tight that a live slot's demoted pages can no
                 # longer be seated for its next refresh.
+                # Data-sharded engines pick the slot (hence the per-host
+                # page pool shard) with the most free pages whose shard
+                # passes the gate — the prefix match and the free-page
+                # bill are both shard-local, so no host is ever billed
+                # for pages another host holds.
                 margin = self.engine.tier_admit_margin(len(req.prompt))
-                need_fresh = self.engine.pages_needed_shared(
-                    req.prompt, req.max_new_tokens, touch=False)
-                short = need_fresh + margin - self.engine.free_pages()
-                if short > 0:
-                    self.stats["prefix_evictions"] += \
-                        self.engine.reclaim_pages(short)
-                    # eviction may have shortened this request's own
-                    # matched chain (LRU has no pin) — re-count so the
-                    # gate never passes on a stale, smaller bill
+                if shards > 1:
+                    cands = sorted(
+                        {self.engine.shard_of_slot(i) for i in free},
+                        key=lambda s: -self.engine.free_pages(s))
+                else:
+                    cands = [None]
+                for sh in cands:
                     need_fresh = self.engine.pages_needed_shared(
-                        req.prompt, req.max_new_tokens, touch=False)
-                if need_fresh + margin > self.engine.free_pages():
+                        req.prompt, req.max_new_tokens, touch=False,
+                        shard=sh)
+                    short = (need_fresh + margin
+                             - self.engine.free_pages(sh))
+                    if short > 0:
+                        self.stats["prefix_evictions"] += \
+                            self.engine.reclaim_pages(short)
+                        # eviction may have shortened this request's own
+                        # matched chain (LRU has no pin) — re-count so
+                        # the gate never passes on a stale, smaller bill
+                        need_fresh = self.engine.pages_needed_shared(
+                            req.prompt, req.max_new_tokens, touch=False,
+                            shard=sh)
+                    if (need_fresh + margin
+                            <= self.engine.free_pages(sh)):
+                        pick = (free[0] if sh is None else next(
+                            i for i in free
+                            if self.engine.shard_of_slot(i) == sh))
+                        break
+                if pick is None:
                     # the request stays queued; smaller waiters may fit
                     self.stats["page_stalls"] += 1
                     continue
-            i = free.pop(0)
+            if pick is None:
+                i = free.pop(0)
+            else:
+                i = pick
+                free.remove(i)
             self.waiting.remove(req)
             req.phase = RequestPhase.PREFILLING
             slot = _Slot(req=req, admit_s=now, seq=self._seq)

@@ -14,6 +14,13 @@ Two classes of drift are caught:
   component must be defined there (``def``/``class`` at any indent, or
   a module-level assignment/annotation), so renaming a documented
   symbol without updating the docs fails CI.
+* **Phantom public API** — every name a ``src/repro/*/__init__.py``
+  exports via ``__all__`` must actually be bound in that module
+  (imported or assigned).  The docs present packages like
+  ``repro.distributed`` by their public names; exporting a name that
+  no longer exists would pass the two checks above and still break
+  every documented ``from repro.distributed import ...``.  Checked
+  textually — this script must run without the repo's runtime deps.
 
 ``ISSUE.md`` and ``ROADMAP.md`` get the same treatment (when present):
 the issue text and the roadmap both anchor work to ``file.py:symbol``
@@ -108,6 +115,30 @@ def check_file(md: Path, text: str, errors: list) -> None:
                 break
 
 
+ALL_RE = re.compile(r"__all__\s*=\s*\[([^\]]*)\]", re.S)
+
+
+def check_public_api(errors: list) -> int:
+    """Validate ``__all__`` of every package ``__init__.py`` under
+    ``src/repro/``: each exported name must be bound somewhere else in
+    the module text (an import, an ``as`` alias, or an assignment).
+    Returns the number of exported names checked."""
+    n = 0
+    for init in sorted((ROOT / "src" / "repro").glob("**/__init__.py")):
+        text = init.read_text()
+        m = ALL_RE.search(text)
+        if m is None:
+            continue
+        body = text[:m.start()] + text[m.end():]
+        for name in re.findall(r"[\"']([A-Za-z_]\w*)[\"']", m.group(1)):
+            n += 1
+            if not re.search(rf"\b{re.escape(name)}\b", body):
+                errors.append(
+                    f"{init.relative_to(ROOT)}: __all__ exports "
+                    f"`{name}` but the module never binds it")
+    return n
+
+
 def main() -> int:
     errors: list = []
     files = doc_files()
@@ -122,10 +153,11 @@ def main() -> int:
             n_refs += len(REF_RE.findall(body))
             n_links += len(LINK_RE.findall(body))
             check_file(md, body, errors)
+    n_api = check_public_api(errors)
     for e in errors:
         print(f"ERROR: {e}")
     print(f"checked {len(files) - len(missing)} docs: {n_links} links, "
-          f"{n_refs} code references -> "
+          f"{n_refs} code references, {n_api} public-API exports -> "
           f"{'FAIL' if errors else 'ok'}")
     return 1 if errors else 0
 
