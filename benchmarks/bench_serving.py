@@ -73,6 +73,16 @@ mismatch count is reported).  Reports peak concurrent slots, page
 high-water, decode-gap p50/p95, admission stalls/defers, and the
 demote/promote/prefetch counters.
 
+``--sampled`` A/Bs greedy vs stochastic serving through the same fused
+ticks: the identical request set runs with (a) temperature-0 tree drafts,
+(b) sampled chain drafts and (c) sampled tree drafts (per-request
+``temperature``/``seed``/``draft`` riding on the per-slot PRNG streams).
+Reports mean accept length, jitted dispatches per decode tick (pinned at
+1.00 — sampling and chain masking are operands, not extra dispatches),
+and decode-gap p50/p95; verifies the greedy arm stays token-identical to
+solo generation and that the sampled arms replay identical token streams
+when re-run (seed reproducibility).
+
 ``--sharded`` A/Bs single-host vs data-sharded serving on a forced
 multi-device CPU mesh (the top-of-file XLA_FLAGS guard materialises 8
 host devices before jax initialises): the identical mixed Poisson
@@ -670,6 +680,121 @@ def run_tiered(args, cfg, dcfg, params, dparams, corpus, spec, contexts):
                 for m, r in results.items()])
 
 
+def run_sampled(args, cfg, dcfg, params, dparams, corpus, spec, contexts):
+    """Greedy vs sampled-chain vs sampled-tree serving on one engine
+    (shared jit compiles): the identical mixed Poisson request set runs
+    three times — (a) greedy tree drafts (temperature 0, the PR-8
+    baseline), (b) stochastic chain drafts, (c) stochastic tree drafts
+    (both at --temperature, per-request seeds, speculative-sampling
+    acceptance).  Every arm's ticks must stay ONE jitted dispatch
+    (sampling and chain masking ride as operands, not control flow).
+    Reports mean accept length, dispatches/tick, decode-gap p50/p95, and
+    verifies (i) the greedy arm is token-identical to solo batch-1
+    generation and (ii) the sampled arms replay identical token streams
+    when re-run (seed reproducibility)."""
+    rng = np.random.default_rng(args.seed)
+    reqs = make_requests(corpus, contexts, args.requests, args.rate, rng,
+                         args.max_new)
+    max_len = max(contexts) + args.max_new + 128
+    eng = SpecPVEngine(cfg, spec, dcfg, params, dparams, batch=args.batch,
+                       max_len=max_len, partial_verification=True)
+    temp = args.temperature
+    print(f"sampled A/B: {args.requests} requests, contexts {contexts} "
+          f"(partial budget {spec.partial_budget_tokens} tokens), "
+          f"batch {args.batch}, temperature {temp}")
+
+    arms = (("greedy-tree", 0.0, "tree"),
+            ("sampled-chain", temp, "chain"),
+            ("sampled-tree", temp, "tree"))
+
+    def submit_all(sched, t0, prefix=""):
+        for off, r in sched_reqs:
+            sched.submit(Request(request_id=prefix + r.request_id,
+                                 prompt=r.prompt,
+                                 max_new_tokens=r.max_new_tokens,
+                                 eos_id=r.eos_id, arrival_s=t0 + off,
+                                 temperature=arm_temp, seed=arm_seed(r),
+                                 draft=arm_draft))
+        return sched.run()
+
+    def arm_seed(r):
+        return args.seed * 1000 + int(r.request_id.rsplit("-", 1)[1])
+
+    results = {}
+    for name, arm_temp, arm_draft in arms:
+        sched_reqs = reqs
+        if not args.no_warmup:
+            # replay the arm's exact request set so its jit variants
+            # (mode mix x sampled x chain flags) compile outside the
+            # timed region
+            warm = ContinuousScheduler(eng, prefill_chunk=64)
+            submit_all(warm, time.time(), prefix="warm-")
+        sched = ContinuousScheduler(eng, prefill_chunk=64,
+                                    record_steps=True)
+        t0 = time.time()
+        outs = submit_all(sched, t0)
+        wall = time.time() - t0
+        toks = sum(len(o.tokens) for o in outs)
+        dispatches = int(sched.stats["steps"])
+        ticks = max(sum(int(v) for k, v in sched.stats.items()
+                        if k.startswith("ticks_modes_")), 1)
+        accept = float(np.mean([o.mean_accept for o in outs]))
+        gaps = step_gap_stats(sched.step_log)
+        g50, g95 = percentiles(gaps) if gaps.size else (0.0, 0.0)
+        results[name] = dict(outs=outs, tput=toks / wall, accept=accept,
+                             dispatches=dispatches, ticks=ticks,
+                             g50=g50, g95=g95)
+        print(f"{name:>14}: {toks} tokens in {wall:.1f}s -> "
+              f"{toks / wall:.1f} tok/s; mean accept {accept:.2f}; "
+              f"{dispatches} dispatches over {ticks} decode ticks "
+              f"({dispatches / ticks:.2f}/tick); decode-gap "
+              f"p50={g50 * 1e3:.1f}ms p95={g95 * 1e3:.1f}ms")
+        assert dispatches == ticks, \
+            f"{name}: {dispatches} dispatches over {ticks} ticks"
+
+    if not args.no_check:
+        scfg = ServingConfig(batch=args.batch, max_len=max_len,
+                             prefill_chunk=64, partial_verification=True)
+        greedy_reqs = [(off, Request(request_id=r.request_id,
+                                     prompt=r.prompt,
+                                     max_new_tokens=r.max_new_tokens,
+                                     eos_id=r.eos_id))
+                       for off, r in reqs]
+        check_lossless(cfg, spec, dcfg, params, dparams, scfg, greedy_reqs,
+                       results["greedy-tree"]["outs"])
+        print("losslessness: greedy arm token-identical to single-request "
+              "generation")
+        # seed reproducibility: a sampled re-run replays the same streams
+        for name, arm_temp, arm_draft in arms[1:]:
+            sched_reqs = reqs
+            sched = ContinuousScheduler(eng, prefill_chunk=64)
+            redo = {o.request_id: o.tokens
+                    for o in submit_all(sched, time.time())}
+            for o in results[name]["outs"]:
+                assert np.array_equal(o.tokens, redo[o.request_id]), \
+                    f"{name}/{o.request_id}: sampled re-run diverged"
+        print("reproducibility: sampled arms replay identical token "
+              "streams from their request seeds")
+
+    rg = results["greedy-tree"]
+    rt = results["sampled-tree"]
+    print(f"headline: sampled-tree accept {rt['accept']:.2f} vs chain "
+          f"{results['sampled-chain']['accept']:.2f} vs greedy "
+          f"{rg['accept']:.2f}; dispatches/tick 1.00 in every arm; "
+          f"decode-gap p95 {rt['g95'] * 1e3:.1f}ms sampled-tree vs "
+          f"{rg['g95'] * 1e3:.1f}ms greedy")
+    out = ensure_dir(RESULTS_DIR)
+    write_rows(f"{out}/bench_serving_sampled.csv",
+               ["arm", "temperature", "draft", "tok_s", "mean_accept",
+                "dispatches", "decode_ticks", "dispatches_per_tick",
+                "gap_p50_ms", "gap_p95_ms"],
+               [[name, t, d, f"{r['tput']:.2f}", f"{r['accept']:.3f}",
+                 r["dispatches"], r["ticks"],
+                 f"{r['dispatches'] / r['ticks']:.3f}",
+                 f"{r['g50'] * 1e3:.2f}", f"{r['g95'] * 1e3:.2f}"]
+                for (name, t, d), r in zip(arms, results.values())])
+
+
 def run_prefix_share(args, cfg, dcfg, params, dparams, corpus, spec):
     """Shared-system-prompt workload: paged continuous scheduler with the
     copy-on-write prefix cache on vs off (identical request set)."""
@@ -946,6 +1071,15 @@ def main():
                          "admission-to-first-token p50/p95, decode-gap "
                          "p50/p95 (long-prompt burst defaults: contexts "
                          "512 448 512 384, batch 4, rate 0, budget 256)")
+    ap.add_argument("--sampled", action="store_true",
+                    help="A/B greedy vs sampled-chain vs sampled-tree "
+                         "serving (per-request temperature/seed through "
+                         "the fused tick): mean accept length, "
+                         "dispatches/tick (pinned at 1.00), decode-gap "
+                         "p50/p95, greedy losslessness + sampled seed "
+                         "reproducibility")
+    ap.add_argument("--temperature", type=float, default=0.8,
+                    help="sampled: temperature of the stochastic arms")
     ap.add_argument("--sharded", action="store_true",
                     help="A/B single-host vs data-sharded serving on a "
                          "forced 8-CPU-device mesh (mesh_shape=(8, 1)): "
@@ -1003,6 +1137,13 @@ def main():
         # short prompts stay in Full, long ones cycle Refresh/Partial
         contexts = args.contexts or [64, 192, 96, 256, 224]
         run_fused(args, cfg, dcfg, params, dparams, corpus, spec, contexts)
+        return
+    if args.sampled:
+        # straddle the partial budget so sampled acceptance runs under
+        # every verify mode, not just Full
+        contexts = args.contexts or [64, 192, 96, 256, 224]
+        run_sampled(args, cfg, dcfg, params, dparams, corpus, spec,
+                    contexts)
         return
     if args.prefill_batch:
         # long prompts, bursty arrivals: several cursors must be open at

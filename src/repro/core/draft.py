@@ -158,7 +158,7 @@ def draft_extend(cfg: ModelConfig, dcfg: DraftConfig, dp: Dict,
 
 def draft_phase(cfg: ModelConfig, dcfg: DraftConfig, dp: Dict, target_params,
                 tree: TreeSpec, cache: Dict, ext_tokens, ext_feats, ext_len,
-                active=None, sample_key=None, temperature: float = 0.0):
+                active=None, sample_key=None, temperature=0.0):
     """The draft half of one SpecPV step — extend the draft cache with
     the previous step's accepted tokens, then draft a candidate tree
     from the last valid entry.
@@ -170,7 +170,9 @@ def draft_phase(cfg: ModelConfig, dcfg: DraftConfig, dp: Dict, target_params,
     exactly once for every row regardless of the tick's mode mix.
 
     ext_tokens: [B, E]; ext_feats: [B, E, 3d]; ext_len: [B];
-    active: optional [B] bool (dead rows write nothing).
+    active: optional [B] bool (dead rows write nothing);
+    sample_key/temperature: per-row forms ([B, 2] keys, [B] temps)
+    supported — see ``tree_draft``.
     Returns (cache, tree_tokens [B, T], aux) — aux is the per-node draft
     log-probs (greedy) or logits (sampling), as in ``tree_draft``.
     """
@@ -189,14 +191,18 @@ def draft_phase(cfg: ModelConfig, dcfg: DraftConfig, dp: Dict, target_params,
 
 def tree_draft(cfg: ModelConfig, dcfg: DraftConfig, dp: Dict, target_params,
                cache: Dict, tree: TreeSpec, h_root, logits_root, last_token,
-               sample_key=None, temperature: float = 1.0
+               sample_key=None, temperature=1.0
                ) -> Tuple[jax.Array, jax.Array]:
     """Draft a static tree of candidates (read-only w.r.t. the cache).
 
     h_root: [B, d] draft hidden at the root parent; logits_root: [B, V].
     sample_key: when given, children are drawn i.i.d. from the draft
     distribution (required for lossless stochastic verification); the
-    default is deterministic top-k (greedy mode).
+    default is deterministic top-k (greedy mode).  Accepts a [2] key
+    (split per row) or [B, 2] per-row keys; ``temperature`` may be a
+    scalar or a [B] operand.  Rows with temperature == 0 take the
+    deterministic top-k tokens bit-identically to the greedy path, so a
+    mixed greedy/sampled batch drafts in one dispatch.
     Returns (tree_tokens [B, T], node_logits [B, T+1, V] — entry 0 is the
     root parent's draft logits, entry 1+n node n's; greedy callers may
     ignore it).
@@ -223,7 +229,14 @@ def tree_draft(cfg: ModelConfig, dcfg: DraftConfig, dp: Dict, target_params,
     parent_logits = {-1: logits_root}                     # per-node logits
     parent_h = {-1: h_root}
     if sample_key is not None:
-        node_keys = jax.random.split(sample_key, t)
+        sk = jnp.asarray(sample_key)
+        row_keys = sk if sk.ndim == 2 else jax.random.split(sk, b)
+        # per-row node keys: row i's draws depend only on its own stream
+        node_keys = jax.vmap(lambda k: jax.random.split(k, t))(row_keys)
+        temps = jnp.broadcast_to(jnp.asarray(temperature, jnp.float32), (b,))
+        sample_rows = temps > 0.0
+        # greedy lanes never read their draw; 1.0 keeps softmax finite
+        temps_eff = jnp.where(sample_rows, jnp.maximum(temps, 1e-6), 1.0)
 
     for l, (lo, hi) in enumerate(tree.level_slices):
         bfac = tree.branch[l]
@@ -234,17 +247,20 @@ def tree_draft(cfg: ModelConfig, dcfg: DraftConfig, dp: Dict, target_params,
             rank = (n - lo) % bfac
             lg = parent_logits[p]
             logp = jax.nn.log_softmax(lg, axis=-1)
+            topv, topi = jax.lax.top_k(logp, bfac)
             if sample_key is None:
-                topv, topi = jax.lax.top_k(logp, bfac)
                 new_tokens.append(topi[:, rank])
                 new_logp.append(topv[:, rank])
             else:
-                tok = jax.random.categorical(
-                    node_keys[n], lg / max(temperature, 1e-6), axis=-1
+                draw = jax.vmap(jax.random.categorical)(
+                    node_keys[:, n], lg / temps_eff[:, None]
                 ).astype(jnp.int32)
+                tok = jnp.where(sample_rows, draw, topi[:, rank])
                 new_tokens.append(tok)
-                new_logp.append(jnp.take_along_axis(
-                    logp, tok[:, None], axis=1)[:, 0])
+                new_logp.append(jnp.where(
+                    sample_rows,
+                    jnp.take_along_axis(logp, tok[:, None], axis=1)[:, 0],
+                    topv[:, rank]))
             feats.append(parent_h[p])
         toks_l = jnp.stack(new_tokens, axis=1)            # [B, n_l]
         logp_l = jnp.stack(new_logp, axis=1)

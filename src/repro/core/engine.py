@@ -30,6 +30,15 @@ instead of stalling every in-flight request for a whole admission.
 ``prefill_into_slot`` is the blocking wrapper over the same cursor
 machinery — both paths run the identical absolute chunk schedule, so
 outputs are bit-identical either way.
+
+Lossless stochastic serving rides the same one-dispatch tick: each slot
+carries a private PRNG stream (``EngineState.keys`` [B, 2], derived from
+the request seed at admission) and a temperature row (``temps`` [B]),
+both step operands — greedy rows (temperature 0) select the argmax
+acceptance path bit-identically to an all-greedy tick, sampled rows run
+SpecInfer multi-round rejection (``core.sampling``), and per-request
+``draft="chain"`` slots mask acceptance to the tree's rank-0 chain
+(``TreeSpec.chain_mask``) so chain and tree drafts verify together.
 """
 from __future__ import annotations
 
@@ -67,7 +76,8 @@ class EngineState:
     ext_tokens: jax.Array       # [B, E]
     ext_feats: jax.Array        # [B, E, 3d]
     ext_len: jax.Array          # [B]
-    key: jax.Array              # PRNG key (stochastic mode)
+    keys: jax.Array             # [B, 2] per-slot PRNG streams (sampling)
+    temps: jax.Array            # [B] per-slot sampling temperature
 
 
 def request_token_need(prompt_len: int, max_new_tokens: int,
@@ -135,6 +145,13 @@ class PrefillCursor:
     # whole-prompt tail-entry hit: the cursor is born exhausted and
     # finalise boots straight from the stored first token (no logits)
     boot_token: Optional[int] = None
+    # per-request sampling knobs (resolved at begin, committed to the
+    # slot at finalise): temperature 0 = greedy; `seed` derives the
+    # slot's PRNG stream; draft "chain" masks verification to the
+    # tree's rank-0 chain
+    temperature: float = 0.0
+    seed: int = 0
+    draft: str = "tree"
 
     @property
     def done(self) -> bool:
@@ -155,22 +172,23 @@ class PrefillCursor:
 # per-slot (batch-row) state surgery — continuous batching support.
 #
 # Every EngineState leaf carries the batch on axis 0 except the full-cache
-# dict (axis 1, see kvcache.cache.CACHE_BATCH_AXIS), the pkv arrays
-# (axis 1: [L, B, Hk, P, Dh]) and the PRNG key (shared, batch-free).
+# dict (axis 1, see kvcache.cache.CACHE_BATCH_AXIS) and the pkv arrays
+# (axis 1: [L, B, Hk, P, Dh]).  The PRNG streams are per-slot rows
+# ([B, 2] in `keys`) — there is deliberately no batch-free key: a shared
+# key would make one slot's draws depend on who else is in the batch.
 # ---------------------------------------------------------------------------
 
 _PKV_FIELDS = ("pkv_k", "pkv_v", "pkv_pos")       # batch on axis 1
 _ROW_FIELDS = ("buf_len", "pending", "pending_len", "seq_len",
-               "ext_tokens", "ext_feats", "ext_len")  # batch on axis 0
+               "ext_tokens", "ext_feats", "ext_len",
+               "keys", "temps")                   # batch on axis 0
 
 
 def merge_state_rows(mask, new: EngineState, old: EngineState) -> EngineState:
-    """Keep rows of `new` where mask is True, rows of `old` elsewhere.
-    The PRNG key advances with the step (greedy serving never reads it)."""
+    """Keep rows of `new` where mask is True, rows of `old` elsewhere."""
     kw = dict(
         cache=kvc.merge_cache_rows(mask, new.cache, old.cache),
-        dcache=kvc.merge_draft_rows(mask, new.dcache, old.dcache),
-        key=new.key)
+        dcache=kvc.merge_draft_rows(mask, new.dcache, old.dcache))
     for f in _PKV_FIELDS:
         nf, of = getattr(new, f), getattr(old, f)
         kw[f] = kvc.select_rows(mask, nf, of, 1) if nf.ndim > 1 else nf
@@ -184,8 +202,7 @@ def write_state_slot(st: EngineState, sub: EngineState, slot) -> EngineState:
     admission after chunked prefill-into-slot, or slot reset)."""
     kw = dict(
         cache=kvc.write_cache_slot(st.cache, sub.cache, slot),
-        dcache=kvc.write_draft_slot(st.dcache, sub.dcache, slot),
-        key=st.key)
+        dcache=kvc.write_draft_slot(st.dcache, sub.dcache, slot))
     for f in _PKV_FIELDS:
         sf, bf = getattr(sub, f), getattr(st, f)
         kw[f] = kvc.write_row(bf, sf, slot, 1) if bf.ndim > 1 else bf
@@ -314,6 +331,15 @@ class SpecPVEngine:
         branch = ((1,) * dcfg.tree_depth if draft_chain
                   else dcfg.tree_branch[: dcfg.tree_depth])
         self.tree = tr.TreeSpec.from_branch(branch)
+        # chain-in-tree: per-request chain drafts mask acceptance to the
+        # tree's leftmost (rank-0) chain instead of using a second layout
+        self._chain_mask = self.tree.chain_mask()
+        self._tree_branching = any(bf > 1 for bf in branch)
+        # host mirrors of the per-slot sampling knobs (the device copies
+        # live in EngineState.temps / .keys); `step_fused` derives the
+        # tick's has_sampled/has_chain variant flags from these
+        self._slot_temp = np.full((batch,), float(temperature), np.float32)
+        self._slot_chain = np.zeros((batch,), bool)
         self.pmax = spec.buffer_size            # max pending (refresh input)
         self.emax = self.tree.max_path          # max draft-extend per step
         self.traffic = TrafficMeter()
@@ -416,6 +442,41 @@ class SpecPVEngine:
 
         sample = self.temperature > 0.0
 
+        def _split_keys(st: EngineState, active):
+            """Per-slot stream advance: one 3-way split per row per tick
+            (draft draws, accept draws, next state).  Only live sampled
+            rows advance their stream — a slot's stream position is a
+            pure function of its own (seed, steps-sampled) history, never
+            of batch composition, admission order or tick mode mix."""
+            keys3 = jax.vmap(lambda k: jax.random.split(k, 3))(st.keys)
+            adv = active & (st.temps > 0.0)
+            keys_next = jnp.where(adv[:, None], keys3[:, 2], st.keys)
+            return keys3[:, 0], keys3[:, 1], keys_next
+
+        def _accept(tree_tokens, aux, out, vin, st, key_accept, *,
+                    has_sampled: bool, node_valid):
+            """Row-select between greedy argmax acceptance and lossless
+            speculative sampling.  Greedy rows (temps == 0) take the
+            greedy result bit-identically to an all-greedy tick; the
+            sampled lanes ride `st.temps` as an operand."""
+            path, acc, bonus, _ = tr.greedy_tree_accept(
+                tree, tree_tokens, out.logits, vin["root_slot"],
+                vin["node_slots"], node_valid=node_valid)
+            if has_sampled:
+                from repro.core.sampling import tree_speculative_sample
+                sampled = st.temps > 0.0
+                # discarded greedy lanes still flow through the sampled
+                # math: temp 1.0 keeps their softmax finite (no NaNs)
+                path_s, acc_s, bonus_s = tree_speculative_sample(
+                    tree, tree_tokens, aux, out.logits, vin["root_slot"],
+                    vin["node_slots"], key_accept,
+                    temperature=jnp.where(sampled, st.temps, 1.0),
+                    node_valid=node_valid)
+                path = jnp.where(sampled[:, None], path_s, path)
+                acc = jnp.where(sampled, acc_s, acc)
+                bonus = jnp.where(sampled, bonus_s, bonus)
+            return path, acc, bonus
+
         def _post_accept(st, vin, out, tree_tokens, path, acc, bonus):
             """Shared ext-queue + seq_len bookkeeping. Returns pieces."""
             b = bonus.shape[0]
@@ -444,9 +505,11 @@ class SpecPVEngine:
             seq_len = st.seq_len + acc + 1
             return newtoks, ext_feats, ext_len, seq_len
 
-        def _step_fused(params, dparams, st: EngineState, active, modes, *,
+        def _step_fused(params, dparams, st: EngineState, active, modes,
+                        is_chain, *,
                         has_full: bool, has_partial: bool,
-                        has_refresh: bool):
+                        has_refresh: bool, has_sampled: bool,
+                        has_chain: bool):
             """One fused multi-mode step over per-row `modes` [B] int8.
 
             The static flags encode the tick's mode *mix* (which
@@ -459,16 +522,29 @@ class SpecPVEngine:
             masked epilogues.  Rows keep the exact operand layouts of
             their single-mode step (``vf.build_verify_inputs_fused``),
             so greedy outputs stay bit-identical to the grouped path.
-            """
+
+            ``has_sampled``/``has_chain`` extend the mix the same way:
+            per-row temperature (``st.temps``), PRNG streams
+            (``st.keys``) and the chain/tree draft shape (`is_chain`
+            [B] bool, masking acceptance to the tree's rank-0 chain)
+            are all operands, so any greedy/sampled/chain/tree mix is
+            still ONE dispatch — and the all-greedy variant traces the
+            exact graph of a sampling-free build."""
             b = self.batch
-            key_draft = key_accept = key_next = st.key
-            if sample:
-                key_draft, key_accept, key_next = jax.random.split(st.key, 3)
+            if has_sampled:
+                key_draft, key_accept, keys_next = _split_keys(st, active)
+            else:
+                key_draft = key_accept = None
+                keys_next = st.keys
             dcache, tree_tokens, aux = dr.draft_phase(
                 cfg, dcfg, dparams, params, tree, st.dcache, st.ext_tokens,
                 st.ext_feats, st.ext_len, active=active,
-                sample_key=key_draft if sample else None,
-                temperature=self.temperature)
+                sample_key=key_draft,
+                temperature=(st.temps if has_sampled else 0.0))
+            node_valid = None
+            if has_chain:
+                node_valid = (~is_chain[:, None]
+                              | jnp.asarray(self._chain_mask)[None, :])
 
             is_partial = modes == MODE_PARTIAL
             is_refresh = modes == MODE_REFRESH
@@ -501,16 +577,9 @@ class SpecPVEngine:
                 emit_queries=has_refresh,
                 partial_rows=is_partial if decode_kind == "fused" else None)
 
-            if sample:
-                from repro.core.sampling import tree_speculative_sample
-                path, acc, bonus = tree_speculative_sample(
-                    tree, tree_tokens, aux, out.logits, vin["root_slot"],
-                    vin["node_slots"], key_accept,
-                    temperature=self.temperature)
-            else:
-                path, acc, bonus, _ = tr.greedy_tree_accept(
-                    tree, tree_tokens, out.logits, vin["root_slot"],
-                    vin["node_slots"])
+            path, acc, bonus = _accept(
+                tree_tokens, aux, out, vin, st, key_accept,
+                has_sampled=has_sampled, node_valid=node_valid)
             newtoks, ext_feats, ext_len, seq_len = _post_accept(
                 st, vin, out, tree_tokens, path, acc, bonus)
 
@@ -604,35 +673,30 @@ class SpecPVEngine:
                 pkv_pos=pkv_pos, buf_len=buf_len, pending=pending,
                 pending_len=pending_len, seq_len=seq_len,
                 ext_tokens=newtoks, ext_feats=ext_feats, ext_len=ext_len,
-                key=key_next)
+                keys=keys_next, temps=st.temps)
             return st2, (newtoks, acc + 1, acc)
 
         def _step_state(params, dparams, st: EngineState, active):
             b = self.batch
-            key_draft = key_accept = key_next = st.key
             if sample:
-                key_draft, key_accept, key_next = jax.random.split(st.key, 3)
+                key_draft, key_accept, keys_next = _split_keys(st, active)
+            else:
+                key_draft = key_accept = None
+                keys_next = st.keys
             dcache, tree_tokens, aux = dr.draft_phase(
                 cfg, dcfg, dparams, params, tree, st.dcache, st.ext_tokens,
                 st.ext_feats, st.ext_len, active=active,
-                sample_key=key_draft if sample else None,
-                temperature=self.temperature)
+                sample_key=key_draft,
+                temperature=(st.temps if sample else 0.0))
             pend_in = st.pending[:, :1]
             plen_in = jnp.ones((b,), jnp.int32)
             vin = vf.build_verify_inputs(tree, pend_in, plen_in, tree_tokens,
                                          st.seq_len, active=active)
             out = api.decode(cfg, params, vin["tokens"], vin["positions"],
                              st.cache, self_mask=vin["self_mask"], spec=spec)
-            if sample:
-                from repro.core.sampling import tree_speculative_sample
-                path, acc, bonus = tree_speculative_sample(
-                    tree, tree_tokens, aux, out.logits, vin["root_slot"],
-                    vin["node_slots"], key_accept,
-                    temperature=self.temperature)
-            else:
-                path, acc, bonus, _ = tr.greedy_tree_accept(
-                    tree, tree_tokens, out.logits, vin["root_slot"],
-                    vin["node_slots"])
+            path, acc, bonus = _accept(
+                tree_tokens, aux, out, vin, st, key_accept,
+                has_sampled=sample, node_valid=None)
             newtoks, ext_feats, ext_len, seq_len = _post_accept(
                 st, vin, out, tree_tokens, path, acc, bonus)
             # advance state with [x_b] ++ accepted path (valid = 1 + acc)
@@ -650,7 +714,7 @@ class SpecPVEngine:
                 pkv_pos=st.pkv_pos, buf_len=st.buf_len, pending=pending,
                 pending_len=jnp.ones((b,), jnp.int32), seq_len=seq_len,
                 ext_tokens=newtoks, ext_feats=ext_feats, ext_len=ext_len,
-                key=key_next)
+                keys=keys_next, temps=st.temps)
             return st2, (newtoks, acc + 1, acc)
 
         if self.is_attn:
@@ -662,25 +726,32 @@ class SpecPVEngine:
             # untouched rows are preserved without materialising a
             # second copy of the caches.
             self._fused_impl = _step_fused
-            self._fused_jits: Dict[Tuple[bool, bool, bool], Any] = {}
+            self._fused_jits: Dict[Tuple[bool, ...], Any] = {}
         else:
             # no masked variant: continuous batching is attention-only
             # (merge_state_rows assumes the attention cache layout)
             self._step_state = jax.jit(_step_state)
 
     def _fused_fn(self, has_full: bool, has_partial: bool,
-                  has_refresh: bool):
-        """The jitted fused-step variant for a mode mix (built lazily —
-        only mixes that actually occur compile)."""
-        key = (has_full, has_partial, has_refresh)
+                  has_refresh: bool, has_sampled: bool = False,
+                  has_chain: bool = False):
+        """The jitted fused-step variant for a mode/sampling mix (built
+        lazily — only mixes that actually occur compile).  The variant
+        key says which masked branches exist at all, never which row
+        runs what; (has_sampled=False, has_chain=False) traces the exact
+        all-greedy tree graph a sampling-free build would."""
+        key = (has_full, has_partial, has_refresh, has_sampled, has_chain)
         fn = self._fused_jits.get(key)
         if fn is None:
             impl = functools.partial(self._fused_impl, has_full=has_full,
                                      has_partial=has_partial,
-                                     has_refresh=has_refresh)
+                                     has_refresh=has_refresh,
+                                     has_sampled=has_sampled,
+                                     has_chain=has_chain)
 
-            def run(params, dparams, st, active, modes):
-                st2, out = impl(params, dparams, st, active, modes)
+            def run(params, dparams, st, active, modes, is_chain):
+                st2, out = impl(params, dparams, st, active, modes,
+                                is_chain)
                 return merge_state_rows(active, st2, st), out
 
             fn = jax.jit(run, donate_argnums=(2,))
@@ -754,6 +825,8 @@ class SpecPVEngine:
         assert prompt.shape[0] == self.batch
         self._pkv_active = False
         self._pkv_active_rows[:] = False
+        self._slot_temp[:] = self.temperature
+        self._slot_chain[:] = False
         return self._prefill_state(prompt, chunk, extra)
 
     def _prefill_state(self, prompt: np.ndarray, chunk: int = 256,
@@ -778,30 +851,53 @@ class SpecPVEngine:
             off = end
         return self._boot_state(cache, dcache, logits_last, prev_feat, s0)
 
+    @staticmethod
+    def _seed_keys(seed: int, b: int) -> Tuple[jax.Array, jax.Array]:
+        """Per-row PRNG streams from a request seed: (k_first [b, 2] —
+        the first-token draw, k_stream [b, 2] — the decode stream seeded
+        into ``EngineState.keys``).  Derivation depends on nothing but
+        (seed, row count), so a request's stream is identical whether it
+        boots via full prefill or a tail-entry hit, alone or batched."""
+        base = jax.random.split(jax.random.PRNGKey(seed), b)
+        pairs = jax.vmap(lambda k: jax.random.split(k, 2))(base)
+        return pairs[:, 0], pairs[:, 1]
+
     def _boot_state(self, cache: Dict, dcache: Dict, logits_last,
-                    prev_feat, s0: int) -> EngineState:
+                    prev_feat, s0: int, *,
+                    temperature: Optional[float] = None,
+                    seed: int = 0) -> EngineState:
         """Post-prefill engine state: sample/argmax the first token from
         the final chunk's logits and seed the pending/extend queues.
         Shared by the batch path and the per-slot cursor finalise, so the
         two construct bit-identical automaton state."""
-        if self.temperature > 0:
-            bonus0 = jax.random.categorical(
-                jax.random.PRNGKey(11),
-                logits_last / self.temperature, axis=-1).astype(jnp.int32)
+        temp = self.temperature if temperature is None else float(temperature)
+        b = prev_feat.shape[0]
+        k_first, k_stream = self._seed_keys(seed, b)
+        if temp > 0:
+            bonus0 = jax.vmap(jax.random.categorical)(
+                k_first, logits_last / temp).astype(jnp.int32)
         else:
             bonus0 = jnp.argmax(logits_last, axis=-1).astype(jnp.int32)
-        return self._boot_state_from_token(cache, dcache, bonus0,
-                                           prev_feat, s0)
+        return self._boot_state_from_token(
+            cache, dcache, bonus0, prev_feat, s0, keys=k_stream,
+            temps=jnp.full((b,), temp, jnp.float32))
 
     def _boot_state_from_token(self, cache: Dict, dcache: Dict, bonus0,
-                               prev_feat, s0: int) -> EngineState:
+                               prev_feat, s0: int, *, keys=None,
+                               temps=None) -> EngineState:
         """Boot from an already-known first token (the tail-entry fast
         path stores the greedy argmax at registration, so a whole-prompt
         prefix hit rebuilds the identical automaton state with zero
-        prefill FLOPs)."""
+        prefill FLOPs).  ``keys``/``temps`` seed the slot's PRNG stream
+        and temperature rows (defaults: seed-0 streams, the engine
+        temperature)."""
         cfg = self.cfg
         b = prev_feat.shape[0]
         bonus0 = jnp.asarray(bonus0, jnp.int32)
+        if keys is None:
+            keys = self._seed_keys(0, b)[1]
+        if temps is None:
+            temps = jnp.full((b,), self.temperature, jnp.float32)
 
         pend = jnp.zeros((b, self.pmax), jnp.int32).at[:, 0].set(bonus0)
         ext_tokens = jnp.zeros((b, self.emax), jnp.int32).at[:, 0].set(bonus0)
@@ -817,7 +913,7 @@ class SpecPVEngine:
             seq_len=jnp.full((b,), s0 + 1, jnp.int32),
             ext_tokens=ext_tokens, ext_feats=ext_feats,
             ext_len=jnp.ones((b,), jnp.int32),
-            key=jax.random.PRNGKey(17))
+            keys=jnp.asarray(keys), temps=jnp.asarray(temps, jnp.float32))
 
     # ------------------------------------------------------------------
     # per-slot state management (continuous batching)
@@ -852,11 +948,14 @@ class SpecPVEngine:
             ext_feats=jnp.zeros((b, self.emax, 3 * cfg.d_model),
                                 cm.dt(cfg.dtype)),
             ext_len=jnp.ones((b,), jnp.int32),
-            key=jax.random.PRNGKey(17))
+            keys=self._seed_keys(0, b)[1],
+            temps=jnp.zeros((b,), jnp.float32))
 
     def empty_state(self) -> EngineState:
         """Batched state with every slot dead (continuous-scheduler boot)."""
         self._pkv_active_rows[:] = False
+        self._slot_temp[:] = 0.0
+        self._slot_chain[:] = False
         if self.paged:
             self._clear_prefix()
             self._page_alloc.reset()
@@ -881,6 +980,8 @@ class SpecPVEngine:
         if self._neutral_sub is None:
             self._neutral_sub = self._neutral_state(1, row_cache=self.paged)
         self._pkv_active_rows[slot] = False
+        self._slot_temp[slot] = 0.0
+        self._slot_chain[slot] = False
         return self._write_slot(st, self._neutral_sub, jnp.int32(slot))
 
     def reset_slot(self, st: EngineState, slot: int) -> EngineState:
@@ -926,7 +1027,8 @@ class SpecPVEngine:
 
     def pages_needed_shared(self, prompt: np.ndarray, max_new_tokens: int,
                             touch: bool = False,
-                            shard: Optional[int] = None) -> int:
+                            shard: Optional[int] = None,
+                            temperature: Optional[float] = None) -> int:
         """Sharing-aware admission accounting: fresh pages the request
         would need right now — the cold-count minus the blocks the
         prefix cache already holds (those attach by reference).  A
@@ -935,9 +1037,14 @@ class SpecPVEngine:
         copy, so the page bill matches ``_attach_tail_slot`` exactly —
         admission can never leave the slot owing a page).  ``shard``
         makes the discount per-shard-honest: only entries a slot on
-        that shard could actually attach count."""
+        that shard could actually attach count.  ``temperature`` is the
+        *request's* temperature (default: the engine's) — tail-entry
+        discounts only apply to greedy requests, whose first token the
+        entry stored; non-tail block sharing is temperature-blind (the
+        prompt prefill is deterministic either way)."""
+        temp = self.temperature if temperature is None else float(temperature)
         need = self.pages_needed(len(prompt), max_new_tokens)
-        if self._prefix is not None and self.temperature == 0.0:
+        if self._prefix is not None and temp == 0.0:
             tail = self._prefix.match_tail(np.asarray(prompt), touch=touch,
                                            count=False)
             if tail is not None and (shard is None
@@ -1074,7 +1181,7 @@ class SpecPVEngine:
             seq_len=rowlike(st.seq_len),
             ext_tokens=rowlike(st.ext_tokens),
             ext_feats=rowlike(st.ext_feats), ext_len=rowlike(st.ext_len),
-            key=ns())
+            keys=rowlike(st.keys), temps=rowlike(st.temps))
 
     def shard_state(self, st: EngineState) -> EngineState:
         """Place `st` onto the mesh per ``state_shardings`` (identity
@@ -1326,13 +1433,24 @@ class SpecPVEngine:
     def prefill_begin_slot(self, st: EngineState, slot: int,
                            prompt: np.ndarray, chunk: int = 256,
                            extra: Optional[Dict] = None,
-                           max_new_tokens: Optional[int] = None
+                           max_new_tokens: Optional[int] = None,
+                           temperature: Optional[float] = None,
+                           seed: int = 0, draft: str = "tree"
                            ) -> Tuple[EngineState, PrefillCursor]:
         """Open a resumable prefill of `prompt` into batch row `slot`.
         Returns (state, cursor); drive the cursor with
         ``prefill_step_into_slot`` (one chunk per call) and commit it
         with ``prefill_finalize_slot``.  Consumes `st` — callers must
         rebind.
+
+        ``temperature``/``seed``/``draft`` are the request's sampling
+        knobs (default: the engine temperature, seed 0, tree drafts) —
+        ``prefill_finalize_slot`` commits them to the slot, deriving its
+        private PRNG stream from the seed so the token stream is
+        reproducible regardless of batch composition or admission
+        order.  ``draft="chain"`` serves the slot with single-chain
+        verification (acceptance masked to the tree's rank-0 chain) in
+        the same fused tick as tree slots.
 
         All admission-time page accounting happens here, up front: the
         prefix cache is consulted (matched leading blocks attach by
@@ -1351,12 +1469,15 @@ class SpecPVEngine:
         must never route its masked writes through a stale table."""
         prompt = np.asarray(prompt)
         cfg = self.cfg
+        temp = (self.temperature if temperature is None
+                else float(temperature))
+        knobs = dict(temperature=temp, seed=int(seed), draft=draft)
         if not self.paged:
             cur = PrefillCursor(
                 slot=slot, prompt=prompt, chunk=chunk, extra=extra, off=0,
                 prev_feat=jnp.zeros((1, 3 * cfg.d_model), cm.dt(cfg.dtype)),
                 row_cache=self._init_cache(1),
-                row_dcache=self._init_dcache(1))
+                row_dcache=self._init_dcache(1), **knobs)
             return self.clear_slot_rows(st, slot), cur
 
         al, dal = self._page_alloc, self._draft_alloc
@@ -1382,15 +1503,18 @@ class SpecPVEngine:
         # partial block's exact tokens are registered — attach all of it
         # (the tail page speculatively, CoW covers the divergent writes)
         # and boot from the stored first token with ZERO prefill FLOPs
+        # tail entries store a *greedy* first token, so the zero-FLOP
+        # boot only serves greedy requests; sampled requests still share
+        # their full prompt blocks below (prefill is deterministic)
         tail = (self._prefix.match_tail(prompt)
-                if self._prefix is not None and self.temperature == 0.0
+                if self._prefix is not None and temp == 0.0
                 else None)
         if tail is not None and not self._tail_on_shard(
                 tail, self.shard_of_slot(slot)):
             tail = None                 # entry lives on another shard
         if tail is not None:
             return self._attach_tail_slot(st, slot, prompt, chunk, extra,
-                                          total_pages, tail)
+                                          total_pages, tail, knobs)
         # attach BEFORE any reclaim: slot-referenced pages are never LRU
         # eviction candidates, so reclaiming for the fresh remainder
         # cannot cannibalise the chain this admission just matched
@@ -1447,7 +1571,7 @@ class SpecPVEngine:
             chain_keys=(self._prefix.chain_keys(prompt, n_full)
                         if self._prefix is not None and n_full > n_match
                         else []),
-            chain_entries=list(entries))
+            chain_entries=list(entries), **knobs)
         return self.clear_slot_rows(st, slot), cur
 
     @staticmethod
@@ -1469,7 +1593,8 @@ class SpecPVEngine:
     def _attach_tail_slot(self, st: EngineState, slot: int,
                           prompt: np.ndarray, chunk: int,
                           extra: Optional[Dict], total_pages: int,
-                          tail) -> Tuple[EngineState, PrefillCursor]:
+                          tail, knobs: Optional[Dict] = None
+                          ) -> Tuple[EngineState, PrefillCursor]:
         """Whole-prompt tail-entry hit: attach the full-block chain by
         page-table reference, materialise the final partial block as a
         device page COPY of the cached one, skip prefill entirely, and
@@ -1525,7 +1650,8 @@ class SpecPVEngine:
             off=len(prompt), prev_feat=jnp.asarray(te.feat)[None],
             row_cache=row_cache, row_dcache=row_dcache,
             pt_host=pt_host, dpt_host=dpt_host, total_pages=total_pages,
-            n_match=n_match, n_full=n_match, boot_token=te.first_token)
+            n_match=n_match, n_full=n_match, boot_token=te.first_token,
+            **(knobs or {}))
         return self.clear_slot_rows(st, slot), cur
 
     def _register_tail(self, st: EngineState, cur: PrefillCursor
@@ -1535,9 +1661,11 @@ class SpecPVEngine:
         slot a private copy of that block (``cow_write`` + pool page
         copy): the slot's next decode commit writes into this very
         block, and the cached KV must stay frozen for future attaches.
-        Skipped for block-aligned prompts, incomplete chains, sampling
-        engines, or when no page is free for the copy."""
-        if not self.paged or self._prefix is None or self.temperature != 0:
+        Skipped for block-aligned prompts, incomplete chains, sampled
+        requests (the stored first token is the greedy argmax), or when
+        no page is free for the copy."""
+        if (not self.paged or self._prefix is None
+                or cur.temperature != 0.0):
             return st
         bs = self.spec.block_size
         prompt = cur.prompt
@@ -1804,23 +1932,34 @@ class SpecPVEngine:
         callers must rebind."""
         assert cur.done, "prefill cursor still has chunks to run"
         if cur.boot_token is not None:
+            # tail-entry boots are greedy-only (gated at begin), so the
+            # stream key is all the sampling state the slot needs — and
+            # it matches a full prefill of the same (prompt, seed) exactly
             sub = self._boot_state_from_token(
                 cur.row_cache, cur.row_dcache,
                 jnp.full((1,), cur.boot_token, jnp.int32),
-                cur.prev_feat, len(cur.prompt))
+                cur.prev_feat, len(cur.prompt),
+                keys=self._seed_keys(cur.seed, 1)[1],
+                temps=jnp.full((1,), cur.temperature, jnp.float32))
         else:
             st = self._register_tail(st, cur)
             sub = self._boot_state(cur.row_cache, cur.row_dcache,
                                    cur.logits_last, cur.prev_feat,
-                                   len(cur.prompt))
+                                   len(cur.prompt),
+                                   temperature=cur.temperature,
+                                   seed=cur.seed)
         self._pkv_active_rows[cur.slot] = False
+        self._slot_temp[cur.slot] = cur.temperature
+        self._slot_chain[cur.slot] = (cur.draft == "chain")
         st = self._write_slot(st, sub, jnp.int32(cur.slot))
         return st, int(np.asarray(sub.pending[0, 0]))
 
     def prefill_into_slot(self, st: EngineState, slot: int,
                           prompt: np.ndarray, chunk: int = 256,
                           extra: Optional[Dict] = None,
-                          max_new_tokens: Optional[int] = None
+                          max_new_tokens: Optional[int] = None,
+                          temperature: Optional[float] = None,
+                          seed: int = 0, draft: str = "tree"
                           ) -> Tuple[EngineState, int]:
         """Admit a request in one blocking call: chunked batch-1 prefill,
         then scatter the sub-state into batch row `slot`.  Returns
@@ -1832,7 +1971,9 @@ class SpecPVEngine:
         RuntimeError on page-pool exhaustion."""
         st, cur = self.prefill_begin_slot(st, slot, prompt, chunk=chunk,
                                           extra=extra,
-                                          max_new_tokens=max_new_tokens)
+                                          max_new_tokens=max_new_tokens,
+                                          temperature=temperature,
+                                          seed=seed, draft=draft)
         while not cur.done:
             st, _ = self.prefill_step_into_slot(st, cur)
         return self.prefill_finalize_slot(st, cur)
@@ -1853,7 +1994,7 @@ class SpecPVEngine:
         dpaged = "page_table" in st.dcache
         dcache = {n: row(a, 0) for n, a in st.dcache.items()
                   if not (dpaged and n in kvc.DRAFT_POOL_KEYS)}
-        kw = dict(cache=cache, dcache=dcache, key=st.key)
+        kw = dict(cache=cache, dcache=dcache)
         for f in _PKV_FIELDS:
             a = getattr(st, f)
             kw[f] = row(a, 1) if a.ndim > 1 else a
@@ -1876,6 +2017,12 @@ class SpecPVEngine:
         self._page_alloc.fork(src, dst)
         self._draft_alloc.fork(src, dst)
         self._pkv_active_rows[dst] = self._pkv_active_rows[src]
+        # the replica clones the source's PRNG stream (via _ROW_FIELDS),
+        # temperature and draft shape: un-diverged branches replay the
+        # identical token stream — callers wanting divergence re-admit
+        # with a fresh seed
+        self._slot_temp[dst] = self._slot_temp[src]
+        self._slot_chain[dst] = self._slot_chain[src]
         self._forked_slots.update((src, dst))
         sub = self._read_slot(st, src)
         return self._write_slot(st, sub, jnp.int32(dst))
@@ -2015,6 +2162,13 @@ class SpecPVEngine:
         has_refresh = bool(np.any(active_modes == MODE_REFRESH))
         has_full = has_refresh or bool(np.any(active_modes == MODE_FULL))
         has_partial = bool(np.any(active_modes == MODE_PARTIAL))
+        # sampling/chain flags from the host mirrors: like the mode mix,
+        # they pick which masked branches exist — the per-row behaviour
+        # rides on state operands (temps/keys) and the is_chain vector.
+        # Chain masking is the identity when the tree IS a chain.
+        has_sampled = bool(np.any(self._slot_temp[rows] > 0.0))
+        has_chain = bool(self._tree_branching
+                         and np.any(self._slot_chain[rows]))
         # inactive rows' compute is discarded by the in-jit row merge;
         # normalise their mode entries to one the variant implements so
         # the per-row selects never see an unrepresented mode
@@ -2024,9 +2178,11 @@ class SpecPVEngine:
             # seat hosted pages before any full-cache read (prefetch
             # hits land free; early refreshes pay a synchronous copy)
             st = self._tier_promote_rows(st, rows, modes)
-        fn = self._fused_fn(has_full, has_partial, has_refresh)
+        fn = self._fused_fn(has_full, has_partial, has_refresh,
+                            has_sampled, has_chain)
         st, (toks, counts, acc) = fn(self.params, self.dparams, st,
-                                     jnp.asarray(rows), jnp.asarray(modes))
+                                     jnp.asarray(rows), jnp.asarray(modes),
+                                     jnp.asarray(self._slot_chain))
         self.dispatches += 1
         self._pkv_active_rows |= rows & (modes == MODE_REFRESH)
         self._record_traffic_rows(modes, st, rows)

@@ -51,3 +51,62 @@ def autoregressive_generate(cfg: ModelConfig, params, prompt: np.ndarray,
         cache, cur = step(params, cache, cur)
         out.append(np.asarray(cur))
     return np.stack(out, axis=1)
+
+
+def autoregressive_sample(cfg: ModelConfig, params, prompt: np.ndarray,
+                          max_new_tokens: int, *, max_len: int,
+                          temperature: float, seeds,
+                          extra: Optional[Dict] = None,
+                          prefill_chunk: int = 256,
+                          spec: Optional[SpecPVConfig] = None):
+    """Plain AR *sampling* at ``temperature`` — the exact target
+    distribution the stochastic serving path must match
+    (tests/test_sampling_serving.py).
+
+    ``seeds`` is one PRNG seed per batch row; each row's stream is
+    ``jax.random.PRNGKey(seed)`` split once per emitted token, so the
+    marginal token distribution at every position is the model's
+    temperature-scaled softmax given that row's prefix.  Returns tokens
+    [B, max_new] (int32)."""
+    spec = spec or SpecPVConfig()
+    b, s0 = prompt.shape
+    assert len(seeds) == b, "one seed per batch row"
+    temp = float(temperature)
+    assert temp > 0.0, "use autoregressive_generate for greedy"
+    cache = api.init_cache(cfg, b, max_len, spec)
+    logits = None
+    for off in range(0, s0, prefill_chunk):
+        toks = jnp.asarray(prompt[:, off: off + prefill_chunk])
+        logits, _, cache = api.prefill(cfg, params, toks, cache, extra=extra,
+                                       spec=spec)
+    keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])  # [B, 2]
+    is_attn = cfg.is_attention_arch
+
+    def draw(keys, logits):
+        pairs = jax.vmap(lambda k: jax.random.split(k, 2))(keys)
+        tok = jax.vmap(jax.random.categorical)(
+            pairs[:, 0], logits.astype(jnp.float32) / temp)
+        return pairs[:, 1], tok.astype(jnp.int32)
+
+    keys, cur = jax.jit(draw)(keys, logits)
+    out = [np.asarray(cur)]
+
+    @jax.jit
+    def step(params, cache, cur, keys):
+        pos = cache["length"][:, None]
+        o = api.decode(cfg, params, cur[:, None], pos, cache, mode="full",
+                       spec=spec)
+        keys, nxt = draw(keys, o.logits[:, 0])
+        if is_attn:
+            ck, cv = o.new_kv
+            cache = vf.append_full_cache(cache, ck, cv,
+                                         jnp.ones((b,), jnp.int32), spec)
+        else:
+            cache = api.advance(cfg, params, cur[:, None],
+                                cache, jnp.ones((b, 1), bool))
+        return cache, nxt, keys
+
+    for _ in range(max_new_tokens - 1):
+        cache, cur, keys = step(params, cache, cur, keys)
+        out.append(np.asarray(cur))
+    return np.stack(out, axis=1)

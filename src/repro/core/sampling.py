@@ -36,7 +36,7 @@ def _norm(p):
 
 def tree_speculative_sample(tree: TreeSpec, tree_tokens, draft_logits,
                             target_logits, root_slot, node_slots, key,
-                            temperature: float = 1.0):
+                            temperature=1.0, node_valid=None):
     """Stochastic tree verification.
 
     tree_tokens:   [B, T] candidate tokens
@@ -46,21 +46,38 @@ def tree_speculative_sample(tree: TreeSpec, tree_tokens, draft_logits,
     target_logits: [B, S, V] verify logits over the whole input
     root_slot:     [B] input slot of the root parent
     node_slots:    [B, T] input slots of the tree nodes
+    key:           [2] shared key (split per row) or [B, 2] per-row keys —
+                   per-slot streams make a row's draws independent of
+                   batch composition
+    temperature:   scalar or [B] — per-row operand, not control flow
+    node_valid:    optional [B, T] bool — candidates eligible per row.
+                   Masking a row to ``TreeSpec.chain_mask()`` leaves one
+                   candidate per level, which reduces multi-round
+                   rejection exactly to Leviathan chain acceptance (the
+                   residual after the single rejection is the bonus
+                   distribution), so chain and tree slots verify in the
+                   same dispatch.
 
     Returns (path [B, depth] node ids (-1 padded), accept_len [B],
              bonus [B]).
     """
     b, t = tree_tokens.shape
     v = target_logits.shape[-1]
-    temp = max(temperature, 1e-6)
-    p_all = jax.nn.softmax(target_logits.astype(jnp.float32) / temp, -1)
-    q_all = jax.nn.softmax(draft_logits.astype(jnp.float32) / temp, -1)
+    temps = jnp.maximum(
+        jnp.broadcast_to(jnp.asarray(temperature, jnp.float32), (b,)), 1e-6)
+    p_all = jax.nn.softmax(
+        target_logits.astype(jnp.float32) / temps[:, None, None], -1)
+    q_all = jax.nn.softmax(
+        draft_logits.astype(jnp.float32) / temps[:, None, None], -1)
+    if node_valid is None:
+        node_valid = jnp.ones((b, t), bool)
 
     # children-of lists are static
     children = {pid: [n for n in range(t) if tree.parents[n] == pid]
                 for pid in [-1] + list(range(t))}
 
-    def per_batch(tokens_b, p_b, q_b, root_slot_b, node_slots_b, key_b):
+    def per_batch(tokens_b, p_b, q_b, root_slot_b, node_slots_b, key_b,
+                  valid_b):
         # p at the current parent (starts at the root parent's slot)
         p_cur = p_b[root_slot_b]                          # [V]
         q_cur = q_b[0]
@@ -77,7 +94,7 @@ def tree_speculative_sample(tree: TreeSpec, tree_tokens, draft_logits,
             lo, hi = tree.level_slices[level]
             accepted_this = jnp.zeros((), bool)
             for n in range(lo, hi):
-                is_child = (jnp.asarray(tree.parents[n]) == cur)
+                is_child = (jnp.asarray(tree.parents[n]) == cur) & valid_b[n]
                 tok = tokens_b[n]
                 ratio = p_cur[tok] / jnp.maximum(q_cur[tok], 1e-30)
                 u = jax.random.uniform(keys[ki])
@@ -105,6 +122,7 @@ def tree_speculative_sample(tree: TreeSpec, tree_tokens, draft_logits,
             jnp.maximum(p_cur, 1e-30)))
         return path, accept_len, bonus.astype(jnp.int32)
 
-    keys = jax.random.split(key, b)
+    key = jnp.asarray(key)
+    keys = key if key.ndim == 2 else jax.random.split(key, b)
     return jax.vmap(per_batch)(tree_tokens, p_all, q_all, root_slot,
-                               node_slots, keys)
+                               node_slots, keys, node_valid)

@@ -71,15 +71,33 @@ class TreeSpec:
     def depths_arr(self) -> np.ndarray:
         return np.asarray(self.depths, np.int32)
 
+    def chain_mask(self) -> np.ndarray:
+        """[T] bool — the first node of every level.  ``from_branch``
+        lays children out first-child-first, so these nodes form the
+        leftmost root-to-leaf chain and each is the rank-0 (top-1)
+        candidate of its parent: a chain draft is exactly this subset of
+        the tree draft.  Acceptance masked to it (``node_valid``)
+        reduces tree verification to chain verification without a
+        second layout — how the fused step serves chain and tree slots
+        in the same tick."""
+        m = np.zeros((self.size,), bool)
+        for lo, _hi in self.level_slices:
+            m[lo] = True
+        return m
+
 
 def greedy_tree_accept(tree: TreeSpec, tree_tokens, logits, root_slot,
-                       input_slots):
+                       input_slots, node_valid=None):
     """Greedy (temperature-0) tree acceptance.
 
     tree_tokens: [B, T] candidate tokens (tree layout)
     logits:      [B, S, V] verify logits over the whole verify input
     root_slot:   [B] input slot of the root parent (last accepted token)
     input_slots: [B, T] input slot of each tree node in the verify input
+    node_valid:  optional [B, T] bool — nodes eligible for acceptance per
+                 row.  Rows restricted to ``TreeSpec.chain_mask()`` accept
+                 exactly as a chain draft would; invalid nodes can never
+                 match, so their subtrees are dead.
 
     Returns (path_nodes [B, D] node-ids padded with -1, accept_len [B],
              bonus [B] next token, bonus_parent_slot [B]).
@@ -97,6 +115,8 @@ def greedy_tree_accept(tree: TreeSpec, tree_tokens, logits, root_slot,
                             root_slot[:, None])           # [B, T]
     pred_at_parent = jnp.take_along_axis(argmax, parent_slot, axis=1)
     match = tree_tokens == pred_at_parent                 # [B, T]
+    if node_valid is not None:
+        match = match & node_valid
 
     # ok[n] = match[n] & ok[parent]; static topological loop
     ok_cols = []
@@ -156,10 +176,19 @@ def chain_accept_greedy(chain_tokens, logits, root_slot, input_slots):
 
 
 def chain_accept_sampling(chain_tokens, draft_logprobs, logits, root_slot,
-                          input_slots, key, temperature: float = 1.0):
+                          input_slots, key, temperature: float = 1.0,
+                          draft_logits=None):
     """Stochastic (lossless) speculative sampling for a chain draft
     (Leviathan et al. 2023).  draft_logprobs: [B, T] log q(token_i).
-    Returns (accept_len, bonus, bonus_parent_slot)."""
+
+    When ``draft_logits`` ([B, T, V] — the draft distribution each
+    candidate was drawn from) is given, the bonus token at a rejection
+    comes from the exact residual ``norm(max(p - q, 0))``, making the
+    output distribution identical to sampling the target directly.
+    Without it the bonus approximates the residual by sampling the
+    target at the bonus parent (exact only when every candidate is
+    accepted).  Accept draws and the bonus draw use independent
+    subkeys.  Returns (accept_len, bonus, bonus_parent_slot)."""
     b, t = chain_tokens.shape
     logp = jax.nn.log_softmax(logits / max(temperature, 1e-6), axis=-1)
     prev_slots = jnp.concatenate([root_slot[:, None], input_slots[:, :-1]],
@@ -168,7 +197,8 @@ def chain_accept_sampling(chain_tokens, draft_logprobs, logits, root_slot,
         jnp.take_along_axis(logp, prev_slots[..., None], axis=1)
         .reshape(b, t, -1),
         chain_tokens[..., None], axis=-1)[..., 0]         # [B, T] log p
-    u = jnp.log(jnp.maximum(jax.random.uniform(key, (b, t)), 1e-30))
+    key_u, key_b = jax.random.split(key)
+    u = jnp.log(jnp.maximum(jax.random.uniform(key_u, (b, t)), 1e-30))
     ok = u < (p_tok - draft_logprobs)                     # accept if u < p/q
     acc = jnp.cumprod(ok.astype(jnp.int32), axis=1)
     accept_len = jnp.sum(acc, axis=1)
@@ -178,11 +208,23 @@ def chain_accept_sampling(chain_tokens, draft_logprobs, logits, root_slot,
                             jnp.maximum(accept_len - 1, 0)[:, None],
                             axis=1)[:, 0],
         root_slot)
-    # residual sampling at the rejection point is approximated by sampling
-    # the target distribution at the bonus parent (exact for greedy; the
-    # full residual-correction variant is in repro/core/sampling.py)
-    gumbel = jax.random.gumbel(key, logp.shape[-1:])
-    bonus_logits = jnp.take_along_axis(
-        logp, bonus_parent[:, None, None], axis=1)[:, 0]
-    bonus = jnp.argmax(bonus_logits + gumbel[None], axis=-1)
+    p_bp = jnp.exp(jnp.take_along_axis(
+        logp, bonus_parent[:, None, None], axis=1)[:, 0])  # [B, V]
+    if draft_logits is not None:
+        # exact residual at the first rejected position r = accept_len:
+        # bonus_parent is the slot whose target distribution the rejected
+        # candidate r was verified against, and q_r the draft distribution
+        # it was drawn from
+        q_all = jax.nn.softmax(
+            draft_logits.astype(jnp.float32) / max(temperature, 1e-6),
+            axis=-1)                                       # [B, T, V]
+        r = jnp.minimum(accept_len, t - 1)
+        q_r = jnp.take_along_axis(q_all, r[:, None, None], axis=1)[:, 0]
+        res = jnp.maximum(p_bp - q_r, 0.0)
+        res = res / jnp.maximum(res.sum(-1, keepdims=True), 1e-30)
+        p_final = jnp.where((accept_len < t)[:, None], res, p_bp)
+    else:
+        p_final = p_bp
+    bonus = jax.random.categorical(
+        key_b, jnp.log(jnp.maximum(p_final, 1e-30)), axis=-1)
     return accept_len, bonus.astype(jnp.int32), bonus_parent

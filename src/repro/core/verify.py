@@ -14,6 +14,13 @@ Verify-input layout (attention archs):
 full cache yet (all tokens accepted under partial verification since the
 last refresh, ending with the newest bonus x_b).  The pkv *buffer* holds
 the approximate KV of pending[:-1].
+
+Chain-shaped and sampled rows need NO layout change: a chain is the
+rank-0 path of the engine's tree (``TreeSpec.chain_mask``), already
+present in every per-row verify layout, and the tree's ancestor self-mask
+isolates it — acceptance masks candidates per row (``node_valid``), the
+packing here is oblivious.  Commit epilogues are masked per row by the
+accepted path, so mixed chain/tree/sampled ticks share one dispatch.
 """
 from __future__ import annotations
 

@@ -12,6 +12,11 @@ modes through ``decode(mode=...)`` — "full", "partial", and the fused
 per-row multi-mode step ("fused", with a ``partial_rows`` row mask);
 state archs (ssm/hybrid) expose chain verification (read-only decode)
 + explicit ``advance``.
+
+Sampling needs no model change: verification is a pure logits read, so
+greedy acceptance and speculative-sampling acceptance (core/sampling.py)
+consume the same ``decode`` outputs — the acceptance rule lives entirely
+in the engine.
 """
 from __future__ import annotations
 

@@ -25,7 +25,10 @@ Five forward modes share one scan body:
 
 Decode modes never mutate the cache: they return the new tokens' per-layer
 K/V and (for refresh) the gathered partial segments; the SpecPV engine in
-``repro/core`` owns acceptance and cache commits.
+``repro/core`` owns acceptance and cache commits.  That split is what
+lets stochastic serving reuse every mode unchanged: sampled rows differ
+only in how the engine *reads* the returned logits (rejection sampling
+vs argmax), never in what the trunk computes.
 """
 from __future__ import annotations
 

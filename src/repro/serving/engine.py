@@ -11,6 +11,11 @@
   drain-idle the batch.  Greedy outputs are token-identical to running
   each request alone through ``SpecPVEngine.generate``.  Supports
   priorities, deadlines and cancellation (see ``serving.request``).
+  Per-request sampling (``Request.temperature`` / ``seed`` / ``draft``)
+  rides on the same fused tick via per-slot PRNG streams — the engine
+  itself is built greedy; sampled rows are lossless w.r.t. the
+  verifier's distribution and reproducible from the request seed alone
+  (docs/serving.md).
 
 * ``"wave"`` — the original lock-step scheduler, kept for A/B
   comparison (``benchmarks/bench_serving.py``): pending requests are

@@ -46,6 +46,17 @@ class Request:
                                         # "deadline")
     cancelled: bool = False
     phase: RequestPhase = RequestPhase.WAITING
+    # sampling knobs (lossless stochastic serving, docs/serving.md):
+    # temperature 0 keeps the request greedy (bit-identical to a
+    # sampling-free engine); > 0 samples losslessly via speculative
+    # rejection.  `seed` derives the slot's private PRNG stream, so the
+    # token stream for a fixed (prompt, seed, temperature) is
+    # reproducible regardless of batch composition or admission order.
+    # `draft` picks the candidate shape ("tree" multi-candidate or
+    # "chain" single-path) — both serve in the same fused tick.
+    temperature: float = 0.0
+    seed: int = 0
+    draft: str = "tree"
 
     def cancel(self) -> None:
         """Mark for cancellation; the scheduler evicts the request at its

@@ -19,6 +19,17 @@ independent either way, so every request's output is token-identical to
 running it alone through ``SpecPVEngine.generate`` (greedy).  Admission
 order is priority desc, then earliest deadline, then arrival.
 
+Sampling rides *per request* on the same fused tick: admission threads
+``Request.temperature`` / ``Request.seed`` / ``Request.draft`` into the
+slot's prefill, which seeds a private per-slot PRNG stream in
+``EngineState.keys`` and records the row's temperature and draft shape.
+Greedy (temperature 0) rows take the argmax path bit-identically to a
+sampling-free engine; sampled rows go through speculative-sampling
+acceptance (``core/sampling.py``), which is lossless w.r.t. the
+verifier's distribution.  Because the stream derives only from the
+request's seed, a fixed (prompt, seed, temperature) reproduces the same
+token stream regardless of batch composition or admission order.
+
 With a paged engine (``SpecPVEngine(paged=True)``) admission is
 additionally gated on free *pages*: a request is only admitted when the
 shared block pools (trunk + draft) can hold its prompt + generation
@@ -148,7 +159,8 @@ class ContinuousScheduler:
             "continuous batching drives the per-slot SpecPV automaton " \
             "(attention archs); state archs use the wave scheduler"
         assert engine.temperature == 0.0, \
-            "continuous batching is greedy (per-slot losslessness)"
+            "build the engine greedy; per-request sampling rides on " \
+            "Request.temperature/seed (per-slot PRNG streams)"
         assert prefill_budget is None or prefill_budget > 0, \
             "prefill_budget must be positive (None = blocking prefill)"
         self.engine = engine
@@ -285,7 +297,7 @@ class ContinuousScheduler:
                 for sh in cands:
                     need_fresh = self.engine.pages_needed_shared(
                         req.prompt, req.max_new_tokens, touch=False,
-                        shard=sh)
+                        shard=sh, temperature=req.temperature)
                     short = (need_fresh + margin
                              - self.engine.free_pages(sh))
                     if short > 0:
@@ -296,7 +308,7 @@ class ContinuousScheduler:
                         # the gate never passes on a stale, smaller bill
                         need_fresh = self.engine.pages_needed_shared(
                             req.prompt, req.max_new_tokens, touch=False,
-                            shard=sh)
+                            shard=sh, temperature=req.temperature)
                     if (need_fresh + margin
                             <= self.engine.free_pages(sh)):
                         pick = (free[0] if sh is None else next(
@@ -320,7 +332,9 @@ class ContinuousScheduler:
                 # blocking admission: the whole prompt prefills now
                 self.st, first = self.engine.prefill_into_slot(
                     self.st, i, req.prompt, chunk=self.prefill_chunk,
-                    max_new_tokens=req.max_new_tokens)
+                    max_new_tokens=req.max_new_tokens,
+                    temperature=req.temperature, seed=req.seed,
+                    draft=req.draft)
                 req.phase = RequestPhase.DECODING
                 slot.append([first])
             else:
@@ -328,7 +342,9 @@ class ContinuousScheduler:
                 # run inside _pump_prefill under the per-tick budget
                 self.st, slot.cursor = self.engine.prefill_begin_slot(
                     self.st, i, req.prompt, chunk=self.prefill_chunk,
-                    max_new_tokens=req.max_new_tokens)
+                    max_new_tokens=req.max_new_tokens,
+                    temperature=req.temperature, seed=req.seed,
+                    draft=req.draft)
             self._dirty.discard(i)
             self.slots[i] = slot
             self.stats["admissions"] += 1

@@ -1,12 +1,17 @@
 """Statistical losslessness of stochastic tree verification: the first
 emitted token must be distributed exactly as the target distribution,
-regardless of the draft (SpecInfer Thm. 1 / Leviathan correctness)."""
+regardless of the draft (SpecInfer Thm. 1 / Leviathan correctness).
+
+Also covers the fused-path entry points: per-row ``[B, 2]`` key and
+``[B]`` temperature operands, ``node_valid`` chain reduction, and
+``chain_accept_sampling`` with the exact-residual bonus."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.tree import TreeSpec
+from repro.core.tree import (TreeSpec, chain_accept_greedy,
+                             chain_accept_sampling)
 from repro.core.sampling import tree_speculative_sample
 
 
@@ -78,3 +83,114 @@ def test_greedy_limit():
     # so accept lengths and bonuses agree
     assert np.array_equal(np.asarray(acc_s), np.asarray(acc_g))
     assert np.array_equal(np.asarray(bonus_s), np.asarray(bonus_g))
+
+
+def _rand_case(seed, branch=(2, 1), b=3, v=10):
+    rng = np.random.default_rng(seed)
+    tree = TreeSpec.from_branch(branch)
+    t = tree.size
+    target = jnp.asarray(rng.standard_normal((b, 1 + t, v)), jnp.float32)
+    draft = jnp.asarray(rng.standard_normal((b, 1 + t, v)), jnp.float32)
+    toks = jnp.asarray(rng.integers(0, v, (b, t)), jnp.int32)
+    root = jnp.zeros((b,), jnp.int32)
+    slots = jnp.broadcast_to(1 + jnp.arange(t)[None], (b, t))
+    return tree, toks, draft, target, root, slots
+
+
+def test_per_row_keys_match_shared_split():
+    """The fused step passes per-slot ``[B, 2]`` keys; a shared key is
+    split per row internally — the two forms must agree exactly."""
+    tree, toks, draft, target, root, slots = _rand_case(5)
+    b = toks.shape[0]
+    key = jax.random.PRNGKey(11)
+    ref = tree_speculative_sample(tree, toks, draft, target, root, slots,
+                                  key)
+    got = tree_speculative_sample(tree, toks, draft, target, root, slots,
+                                  jax.random.split(key, b))
+    for r, g in zip(ref, got):
+        assert np.array_equal(np.asarray(r), np.asarray(g))
+
+
+def test_per_row_keys_isolate_rows():
+    """A row's draws depend only on its own key/inputs — another row's
+    contents cannot perturb it (the per-slot stream invariant)."""
+    tree, toks, draft, target, root, slots = _rand_case(6)
+    keys = jax.random.split(jax.random.PRNGKey(3), toks.shape[0])
+    temps = jnp.asarray([0.7, 1.0, 1.3], jnp.float32)
+    full = tree_speculative_sample(tree, toks, draft, target, root, slots,
+                                   keys, temperature=temps)
+    solo = tree_speculative_sample(
+        tree, toks[:1], draft[:1], target[:1], root[:1], slots[:1],
+        keys[:1], temperature=temps[:1])
+    for f, s in zip(full, solo):
+        assert np.array_equal(np.asarray(f)[0], np.asarray(s)[0])
+
+
+def test_node_valid_restricts_acceptance_to_chain():
+    """With ``node_valid`` masked to the chain, the accepted path can
+    only contain chain nodes, for every row."""
+    tree, toks, draft, target, root, slots = _rand_case(8, branch=(2, 2))
+    b, t = toks.shape
+    chain = set(np.nonzero(tree.chain_mask())[0])
+    valid = jnp.broadcast_to(jnp.asarray(tree.chain_mask())[None], (b, t))
+    path, acc, bonus = tree_speculative_sample(
+        tree, toks, draft, target, root, slots, jax.random.PRNGKey(0),
+        node_valid=valid)
+    pa = np.asarray(path)
+    assert all(x in chain for x in pa[pa >= 0])
+    assert (np.asarray(acc) <= tree.depth).all()
+
+
+def test_chain_accept_sampling_greedy_limit():
+    """At near-zero temperature with a point-mass draft, stochastic chain
+    acceptance reduces to greedy chain acceptance."""
+    rng = np.random.default_rng(4)
+    b, t, v = 3, 4, 12
+    target = jnp.asarray(rng.standard_normal((b, 1 + t, v)), jnp.float32)
+    draft = jnp.asarray(rng.standard_normal((b, t, v)), jnp.float32)
+    chain = jnp.argmax(draft, axis=-1).astype(jnp.int32)   # draft argmax
+    root = jnp.zeros((b,), jnp.int32)
+    slots = jnp.broadcast_to(1 + jnp.arange(t)[None], (b, t))
+    # at temperature->0 the draft is a point mass at its argmax: q(tok)=1
+    dlp = jnp.zeros((b, t), jnp.float32)
+    acc_s, bon_s, bp_s = chain_accept_sampling(
+        chain, dlp, target, root, slots, jax.random.PRNGKey(2),
+        temperature=1e-5, draft_logits=draft)
+    acc_g, bon_g, bp_g = chain_accept_greedy(chain, target, root, slots)
+    assert np.array_equal(np.asarray(acc_s), np.asarray(acc_g))
+    assert np.array_equal(np.asarray(bon_s), np.asarray(bon_g))
+    assert np.array_equal(np.asarray(bp_s), np.asarray(bp_g))
+
+
+def test_chain_first_token_distribution():
+    """Leviathan correctness with the exact-residual bonus: the first
+    emitted token of ``chain_accept_sampling`` is distributed exactly as
+    the target distribution at the root, marginal over draft redraws."""
+    rng = np.random.default_rng(9)
+    t, v = 3, 8
+    target = jnp.asarray(rng.standard_normal((1, 1 + t, v)) * 1.5,
+                         jnp.float32)
+    draft = jnp.asarray(rng.standard_normal((1, t, v)) * 1.5, jnp.float32)
+    root = jnp.zeros((1,), jnp.int32)
+    slots = (1 + jnp.arange(t))[None]
+    dls = jax.nn.log_softmax(draft, axis=-1)
+
+    n_samples = 4000
+    keys = jax.random.split(jax.random.PRNGKey(21), n_samples)
+
+    @jax.jit
+    def draw(key):
+        k1, k2 = jax.random.split(key)
+        toks = jax.random.categorical(k1, dls[0], axis=-1)[None]
+        dlp = jnp.take_along_axis(dls, toks[..., None], axis=-1)[..., 0]
+        acc, bonus, _ = chain_accept_sampling(
+            toks.astype(jnp.int32), dlp, target, root, slots, k2,
+            draft_logits=draft)
+        return jnp.where(acc[0] > 0, toks[0, 0], bonus[0])
+
+    samples = np.asarray(jax.vmap(draw)(keys))
+    emp = np.bincount(samples, minlength=v) / n_samples
+    expect = np.asarray(jax.nn.softmax(target[0, 0]))
+    sigma = np.sqrt(expect * (1 - expect) / n_samples)
+    assert (np.abs(emp - expect) < 4 * sigma + 0.01).all(), \
+        (emp, expect)

@@ -1,0 +1,321 @@
+"""Lossless stochastic serving (per-slot PRNG streams + speculative
+sampling under the fused step).
+
+The invariants under test:
+
+* **Statistical losslessness** — over many request seeds, the
+  per-position token marginals of spec-sampled serving match plain
+  autoregressive sampling at the same temperature
+  (``core/reference.py:autoregressive_sample``), within an explicit
+  two-sample frequency bound.  Sequences are kept inside the partial
+  budget so the automaton stays FULL and serving is *exactly* the target
+  distribution (docs/serving.md).
+* **Greedy bit-identity** — temperature-0 rows in a batch with sampled
+  peers produce tokens identical to a sampling-free run (the greedy
+  lanes ride the argmax path of the same fused dispatch).
+* **Per-slot reproducibility** — a fixed (prompt, seed, temperature)
+  yields the same token stream admitted alone, in a mixed batch, under a
+  different admission order, and across a ``fork_slot`` (un-diverged
+  replicas replay the same stream): the stream derives from the request
+  seed only, never from batch composition.
+* **Isolation** — one slot's sampling cannot perturb another slot's
+  stream (the regression for the old shared batch-free key).
+* **One dispatch per tick** — arbitrary per-row (mode, temperature,
+  chain/tree) vectors execute as exactly one jitted dispatch
+  (hypothesis sweep over ``SpecPVEngine.step_fused``).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import SpecPVEngine
+from repro.core.draft import init_draft_params
+from repro.core.engine import MODE_FULL, MODE_PARTIAL, MODE_REFRESH
+from repro.core.reference import autoregressive_sample
+from repro.models import api
+from repro.serving import Request
+from repro.serving.scheduler import ContinuousScheduler
+
+pytestmark = pytest.mark.sampling_serving
+
+
+# ---------------------------------------------------------------------------
+# pure-function tests (quick-loop friendly)
+# ---------------------------------------------------------------------------
+
+def test_request_sampling_defaults():
+    """Requests are greedy tree-draft by default — existing callers see
+    no behaviour change."""
+    r = Request(request_id="r", prompt=np.zeros((4,), np.int32))
+    assert r.temperature == 0.0 and r.seed == 0 and r.draft == "tree"
+
+
+def test_seed_keys_derivation():
+    """Per-slot streams derive from (seed, row count) alone, with the
+    first-token key independent of the decode-stream key."""
+    k1f, k1s = SpecPVEngine._seed_keys(7, 3)
+    k2f, k2s = SpecPVEngine._seed_keys(7, 3)
+    other_f, other_s = SpecPVEngine._seed_keys(8, 3)
+    assert k1f.shape == (3, 2) and k1s.shape == (3, 2)
+    assert np.array_equal(np.asarray(k1f), np.asarray(k2f))
+    assert np.array_equal(np.asarray(k1s), np.asarray(k2s))
+    assert not np.array_equal(np.asarray(k1f), np.asarray(other_f))
+    assert not np.array_equal(np.asarray(k1s), np.asarray(other_s))
+    assert not np.array_equal(np.asarray(k1f), np.asarray(k1s))
+    # rows are distinct streams
+    assert not np.array_equal(np.asarray(k1s[0]), np.asarray(k1s[1]))
+
+
+def test_state_carries_per_slot_streams():
+    """EngineState rows own their PRNG stream and temperature — there is
+    no shared batch-free key left to perturb across slots."""
+    from repro.core.engine import EngineState, _ROW_FIELDS
+    assert "keys" in _ROW_FIELDS and "temps" in _ROW_FIELDS
+    names = {f.name for f in dataclasses.fields(EngineState)}
+    assert "keys" in names and "temps" in names
+    assert "key" not in names
+
+
+# ---------------------------------------------------------------------------
+# engine-level tests
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny(key, small_dcfg):
+    cfg = get_config("tiny-dense")
+    params = api.init_params(cfg, key)
+    dparams = init_draft_params(cfg, small_dcfg, jax.random.PRNGKey(1))
+    return cfg, params, dparams
+
+
+def _mk_engine(tiny, small_spec, small_dcfg, batch, max_len=512, **kw):
+    cfg, params, dparams = tiny
+    return SpecPVEngine(cfg, small_spec, small_dcfg, params, dparams,
+                        batch=batch, max_len=max_len,
+                        partial_verification=True, **kw)
+
+
+def _mk_req(cfg, rid, length, max_new, prompt_seed, **kw):
+    rng = np.random.default_rng(prompt_seed)
+    prompt = rng.integers(0, cfg.vocab_size, (length,)).astype(np.int32)
+    return Request(request_id=rid, prompt=prompt, max_new_tokens=max_new,
+                   **kw)
+
+
+def _run_sched(engine, reqs, **kw):
+    sched = ContinuousScheduler(engine, prefill_chunk=64, **kw)
+    for r in reqs:
+        sched.submit(r)
+    sched.run()
+    return sched
+
+
+@pytest.mark.slow
+@pytest.mark.serving
+def test_statistical_losslessness(tiny, small_spec, small_dcfg):
+    """Over N seeds, per-position token marginals of spec-sampled serving
+    match plain AR sampling at the same temperature.  Prompt + budget
+    stay inside the partial budget (112 tokens for small_spec), so every
+    tick verifies FULL and the serving distribution is *exactly* the
+    target — any deviation beyond the two-sample frequency bound is a
+    sampler bug, not an approximation."""
+    cfg, params, _ = tiny
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab_size, (24,)).astype(np.int32)
+    n, max_new, temp = 256, 4, 0.9
+
+    eng = _mk_engine(tiny, small_spec, small_dcfg, batch=8, max_len=256)
+    sched = ContinuousScheduler(eng, prefill_chunk=64)
+    for s in range(n):
+        sched.submit(Request(request_id=f"r{s}", prompt=prompt.copy(),
+                             max_new_tokens=max_new, temperature=temp,
+                             seed=s))
+    sched.run()
+    spec_toks = np.stack([sched.outputs[f"r{s}"].tokens for s in range(n)])
+
+    # disjoint seeds on purpose: the claim is distributional, not
+    # stream-for-stream (the two paths use different key schedules)
+    ar = autoregressive_sample(cfg, params, np.tile(prompt[None], (n, 1)),
+                               max_new, max_len=256, temperature=temp,
+                               seeds=list(range(10_000, 10_000 + n)),
+                               spec=small_spec)
+    v = cfg.vocab_size
+    for pos in range(max_new):
+        fs = np.bincount(spec_toks[:, pos], minlength=v) / n
+        fa = np.bincount(ar[:, pos], minlength=v) / n
+        p = (fs + fa) / 2
+        # two-sample bound: var(fs - fa) = 2 p (1-p) / n per bucket,
+        # plus a small absolute floor for near-empty buckets
+        sig = np.sqrt(2 * p * (1 - p) / n)
+        assert (np.abs(fs - fa) <= 4 * sig + 0.02).all(), pos
+
+
+@pytest.mark.slow
+@pytest.mark.serving
+def test_greedy_rows_bit_identical_in_sampled_batch(tiny, small_spec,
+                                                    small_dcfg):
+    """A temperature-0 request's tokens in a batch with sampled peers
+    equal its tokens from a sampling-free run — the greedy lanes of a
+    sampled tick trace the same argmax path."""
+    cfg, _, _ = tiny
+    eng1 = _mk_engine(tiny, small_spec, small_dcfg, batch=1)
+    eng3 = _mk_engine(tiny, small_spec, small_dcfg, batch=3)
+    ref = _run_sched(eng1, [_mk_req(cfg, "g", 48, 12, prompt_seed=2)])
+    mixed = _run_sched(eng3, [
+        _mk_req(cfg, "g", 48, 12, prompt_seed=2),
+        _mk_req(cfg, "s", 48, 12, prompt_seed=3, temperature=0.8, seed=7),
+        _mk_req(cfg, "c", 48, 12, prompt_seed=4, temperature=1.0, seed=9,
+                draft="chain")])
+    assert np.array_equal(ref.outputs["g"].tokens, mixed.outputs["g"].tokens)
+
+
+@pytest.mark.slow
+@pytest.mark.serving
+def test_stream_reproducible_across_batch_composition(tiny, small_spec,
+                                                      small_dcfg):
+    """One (prompt, seed, temperature): identical token streams admitted
+    alone, in a mixed batch, and under a reversed admission order."""
+    cfg, _, _ = tiny
+    probe = dict(length=48, max_new=12, prompt_seed=2,
+                 temperature=0.8, seed=7)
+
+    eng1 = _mk_engine(tiny, small_spec, small_dcfg, batch=1)
+    alone = _run_sched(eng1, [_mk_req(cfg, "s", **probe)])
+
+    eng3 = _mk_engine(tiny, small_spec, small_dcfg, batch=3)
+    mixed = _run_sched(eng3, [
+        _mk_req(cfg, "s", **probe),
+        _mk_req(cfg, "x", 64, 12, prompt_seed=3, temperature=1.0, seed=3),
+        _mk_req(cfg, "g", 96, 12, prompt_seed=4)])
+    # same engine, different admission order AND different peers
+    reordered = _run_sched(eng3, [
+        _mk_req(cfg, "g", 96, 12, prompt_seed=4),
+        _mk_req(cfg, "y", 160, 12, prompt_seed=5, temperature=0.5, seed=11),
+        _mk_req(cfg, "s", **probe)])
+
+    want = alone.outputs["s"].tokens
+    assert np.array_equal(want, mixed.outputs["s"].tokens)
+    assert np.array_equal(want, reordered.outputs["s"].tokens)
+
+
+@pytest.mark.slow
+@pytest.mark.serving
+def test_slot_isolation_regression(tiny, small_spec, small_dcfg):
+    """Regression for the old shared batch-free key: slot A's stream is
+    identical whether slot B is greedy or sampled (B's draws must come
+    from B's own stream, never advance A's)."""
+    cfg, _, _ = tiny
+    eng = _mk_engine(tiny, small_spec, small_dcfg, batch=2)
+    probe = dict(length=48, max_new=12, prompt_seed=2,
+                 temperature=0.8, seed=7)
+    with_greedy = _run_sched(eng, [
+        _mk_req(cfg, "a", **probe),
+        _mk_req(cfg, "b", 64, 12, prompt_seed=3)])
+    with_sampled = _run_sched(eng, [
+        _mk_req(cfg, "a", **probe),
+        _mk_req(cfg, "b", 64, 12, prompt_seed=3, temperature=1.0, seed=9)])
+    assert np.array_equal(with_greedy.outputs["a"].tokens,
+                          with_sampled.outputs["a"].tokens)
+
+
+@pytest.mark.slow
+@pytest.mark.serving
+@pytest.mark.paged
+def test_fork_replays_identical_stream(tiny, small_spec, small_dcfg):
+    """``fork_slot`` clones the source's PRNG stream: un-diverged
+    replicas of a sampled slot emit identical tokens tick after tick."""
+    cfg, _, _ = tiny
+    eng = _mk_engine(tiny, small_spec, small_dcfg, batch=2, paged=True)
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, cfg.vocab_size, (48,)).astype(np.int32)
+    st = eng.empty_state()
+    st, first = eng.prefill_into_slot(st, 0, prompt, chunk=64,
+                                      temperature=0.8, seed=13)
+    st = eng.fork_slot(st, 0, 1)
+    rows = np.ones((2,), bool)
+    toks = {0: [first], 1: [first]}
+    for _ in range(4):
+        st, so = eng.step_fused(st, rows, eng.modes_for_rows(st, rows))
+        for i in (0, 1):
+            toks[i].extend(int(x) for x in so.tokens[i, :so.counts[i]])
+    assert toks[0] == toks[1]
+    assert len(toks[0]) > 1          # the replicas actually decoded
+
+
+@pytest.mark.slow
+@pytest.mark.serving
+def test_mixed_rows_one_dispatch_hypothesis(tiny, small_spec, small_dcfg):
+    """Arbitrary per-row (mode, temperature, chain/tree) vectors: every
+    tick is exactly ONE jitted dispatch, and every live row emits at
+    least one token."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st_
+
+    cfg, _, _ = tiny
+    eng = _mk_engine(tiny, small_spec, small_dcfg, batch=3)
+    base = eng.empty_state()
+    rng = np.random.default_rng(11)
+    for slot, n in enumerate((48, 160, 176)):
+        prompt = rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+        base, _ = eng.prefill_into_slot(base, slot, prompt, chunk=64,
+                                        temperature=1.0, seed=slot)
+    # one refresh step so partial mode has a live pkv to read
+    base, _ = eng.step_fused(base, np.ones((3,), bool),
+                             eng.modes_for_rows(base, np.ones((3,), bool)))
+    base_pkv_active = eng._pkv_active_rows.copy()
+
+    def snapshot(s):
+        return jax.tree_util.tree_map(jnp.copy, s)
+
+    @given(modes=st_.lists(st_.sampled_from(
+               [MODE_FULL, MODE_REFRESH, MODE_PARTIAL]),
+               min_size=3, max_size=3),
+           temps=st_.lists(st_.sampled_from([0.0, 0.7, 1.0]),
+                           min_size=3, max_size=3),
+           chain=st_.lists(st_.booleans(), min_size=3, max_size=3))
+    @settings(max_examples=10, deadline=None)
+    def check(modes, temps, chain):
+        modes = np.asarray(modes, np.int8)
+        rows = np.ones((3,), bool)
+        eng._pkv_active_rows[:] = base_pkv_active
+        eng._slot_temp[:] = np.asarray(temps, np.float32)
+        eng._slot_chain[:] = np.asarray(chain, bool)
+        st = dataclasses.replace(
+            snapshot(base), temps=jnp.asarray(temps, jnp.float32))
+        before = eng.dispatches
+        st, so = eng.step_fused(st, rows, modes)
+        assert eng.dispatches == before + 1
+        assert (so.counts >= 1).all(), (modes, temps, chain)
+
+    check()
+    eng._slot_temp[:] = 0.0
+    eng._slot_chain[:] = False
+
+
+@pytest.mark.slow
+@pytest.mark.serving
+def test_chain_and_tree_slots_share_tick(tiny, small_spec, small_dcfg):
+    """Chain-draft and tree-draft sampled slots decode in the same fused
+    tick (one dispatch), and a chain slot's accept length never exceeds
+    the tree depth."""
+    cfg, _, _ = tiny
+    eng = _mk_engine(tiny, small_spec, small_dcfg, batch=2)
+    rng = np.random.default_rng(6)
+    p0 = rng.integers(0, cfg.vocab_size, (48,)).astype(np.int32)
+    p1 = rng.integers(0, cfg.vocab_size, (48,)).astype(np.int32)
+    st = eng.empty_state()
+    st, _ = eng.prefill_into_slot(st, 0, p0, chunk=64,
+                                  temperature=0.9, seed=1, draft="tree")
+    st, _ = eng.prefill_into_slot(st, 1, p1, chunk=64,
+                                  temperature=0.9, seed=2, draft="chain")
+    rows = np.ones((2,), bool)
+    for _ in range(3):
+        before = eng.dispatches
+        st, so = eng.step_fused(st, rows, eng.modes_for_rows(st, rows))
+        assert eng.dispatches == before + 1
+        assert (so.counts >= 1).all()
+        assert so.accept_len[1] <= eng.tree.depth

@@ -1,16 +1,15 @@
-"""Draft-tree topology + acceptance properties (hypothesis).
+"""Draft-tree topology + acceptance properties.
 
 ``hypothesis`` is an optional dev dependency (see tests/README.md); the
-property tests here are skipped when it isn't installed.
+property sweeps here are skipped when it isn't installed, while the
+deterministic tests always run.
 """
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st  # noqa: E402
-
-from repro.core.tree import TreeSpec, greedy_tree_accept, chain_accept_greedy
+from repro.core.tree import (TreeSpec, greedy_tree_accept,
+                             chain_accept_greedy)
 
 
 def test_topology():
@@ -25,76 +24,55 @@ def test_topology():
     assert anc[-1].sum() == 3
 
 
-branches = st.sampled_from([(1, 1, 1), (2, 1), (2, 2, 1), (3, 2)])
+def test_chain_mask_is_rank0_chain():
+    """``chain_mask`` marks one node per level, and the marked nodes form
+    a root-to-leaf parent chain of first children (the rank-0 / top-1
+    candidate at every level) — the subset a chain draft occupies inside
+    the tree layout."""
+    for branch in ((2, 2, 1), (3, 2), (1, 1, 1), (2,)):
+        tree = TreeSpec.from_branch(branch)
+        m = tree.chain_mask()
+        assert m.shape == (tree.size,) and m.sum() == tree.depth
+        chain = np.nonzero(m)[0]
+        # one per level, at the level start
+        for l, (lo, _hi) in enumerate(tree.level_slices):
+            assert chain[l] == lo
+        # consecutive marked nodes are parent-linked; the head is a root
+        assert tree.parents[chain[0]] == -1
+        for l in range(1, tree.depth):
+            assert tree.parents[chain[l]] == chain[l - 1]
+        # each marked node is its parent's FIRST child (rank 0)
+        for l in range(1, tree.depth):
+            kids = [n for n in range(tree.size)
+                    if tree.parents[n] == chain[l - 1]]
+            assert kids[0] == chain[l]
 
 
-@settings(max_examples=25, deadline=None)
-@given(branches, st.integers(0, 2**31 - 1))
-def test_greedy_accept_is_argmax_path(branch, seed):
-    """Accepted tokens must equal the target argmax chain, and accept_len
-    must equal the longest drafted prefix of that chain."""
-    rng = np.random.default_rng(seed)
-    tree = TreeSpec.from_branch(branch)
-    b, v = 2, 12
-    t = tree.size
-    p = 1  # single pending (x_b) slot
-    s = p + t
-    logits = jnp.asarray(rng.standard_normal((b, s, v)), jnp.float32)
-    tree_tokens = jnp.asarray(rng.integers(0, v, (b, t)), jnp.int32)
-    root_slot = jnp.zeros((b,), jnp.int32)
-    node_slots = jnp.broadcast_to(p + jnp.arange(t)[None], (b, t))
-    path, acc, bonus, bparent = greedy_tree_accept(
-        tree, tree_tokens, logits, root_slot, node_slots)
-    am = np.asarray(jnp.argmax(logits, -1))
-    tt = np.asarray(tree_tokens)
-    pa, ac, bo = np.asarray(path), np.asarray(acc), np.asarray(bonus)
-    for bi in range(b):
-        # brute-force DFS: deepest greedy-consistent path (duplicate sibling
-        # tokens make several equally-valid node paths; token sequences and
-        # depths must agree)
-        def deepest(parent_slot, nodes):
-            best = ([], parent_slot)
-            want = am[bi, parent_slot]
-            for n in nodes:
-                if tt[bi, n] != want:
-                    continue
-                kids = [m for m in range(t) if tree.parents[m] == n]
-                sub, last = deepest(p + n, kids)
-                if 1 + len(sub) > len(best[0]):
-                    best = ([n] + sub, last)
-            return best
-
-        expect, last_slot = deepest(
-            0, [n for n in range(t) if tree.parents[n] == -1])
-        assert ac[bi] == len(expect)
-        got = [x for x in pa[bi] if x >= 0]
-        # node ids may differ under duplicates; token sequences must match
-        assert [tt[bi, x] for x in got] == [tt[bi, x] for x in expect]
-        assert bo[bi] == am[bi, last_slot]
-
-
-@settings(max_examples=15, deadline=None)
-@given(st.integers(0, 2**31 - 1))
-def test_chain_accept_prefix(seed):
-    rng = np.random.default_rng(seed)
-    b, t, v = 2, 5, 9
-    s = 1 + t
-    logits = jnp.asarray(rng.standard_normal((b, s, v)), jnp.float32)
-    chain = jnp.asarray(rng.integers(0, v, (b, t)), jnp.int32)
-    root_slot = jnp.zeros((b,), jnp.int32)
-    slots = jnp.broadcast_to(1 + jnp.arange(t)[None], (b, t))
-    acc, bonus, bparent = chain_accept_greedy(chain, logits, root_slot,
-                                              slots)
-    am = np.asarray(jnp.argmax(logits, -1))
-    ch = np.asarray(chain)
-    for bi in range(b):
-        n = 0
-        slot = 0
-        while n < t and ch[bi, n] == am[bi, slot]:
-            slot = 1 + n
-            n += 1
-        assert int(acc[bi]) == n
-        assert int(bonus[bi]) == am[bi, slot]
+def test_chain_masked_tree_accept_equals_chain_accept():
+    """Tree acceptance with ``node_valid`` restricted to the chain mask
+    must equal chain acceptance on the chain-node subset — the identity
+    that lets chain slots ride the packed tree-verify layout."""
+    rng = np.random.default_rng(17)
+    for branch in ((2, 2, 1), (3, 2), (2, 1)):
+        tree = TreeSpec.from_branch(branch)
+        b, v, t = 3, 10, tree.size
+        chain = np.nonzero(tree.chain_mask())[0]
+        logits = jnp.asarray(rng.standard_normal((b, 1 + t, v)), jnp.float32)
+        toks = jnp.asarray(rng.integers(0, v, (b, t)), jnp.int32)
+        root = jnp.zeros((b,), jnp.int32)
+        slots = jnp.broadcast_to(1 + jnp.arange(t)[None], (b, t))
+        valid = jnp.broadcast_to(jnp.asarray(tree.chain_mask())[None],
+                                 (b, t))
+        path, acc_t, bon_t, bp_t = greedy_tree_accept(
+            tree, toks, logits, root, slots, node_valid=valid)
+        acc_c, bon_c, bp_c = chain_accept_greedy(
+            toks[:, chain], logits, root, slots[:, chain])
+        assert np.array_equal(np.asarray(acc_t), np.asarray(acc_c)), branch
+        assert np.array_equal(np.asarray(bon_t), np.asarray(bon_c)), branch
+        assert np.array_equal(np.asarray(bp_t), np.asarray(bp_c)), branch
+        # accepted path nodes all lie on the chain
+        pa = np.asarray(path)
+        assert all(x in set(chain) for x in pa[pa >= 0]), branch
 
 
 def test_chain_equals_tree_with_branch_one():
@@ -109,3 +87,89 @@ def test_chain_equals_tree_with_branch_one():
     acc_c, bon_c, _ = chain_accept_greedy(toks, logits, root, slots)
     assert np.array_equal(np.asarray(acc_t), np.asarray(acc_c))
     assert np.array_equal(np.asarray(bon_t), np.asarray(bon_c))
+
+
+def test_greedy_accept_is_argmax_path():
+    """Accepted tokens must equal the target argmax chain, and accept_len
+    must equal the longest drafted prefix of that chain (hypothesis sweep
+    over branch shapes and seeds)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    branches = st.sampled_from([(1, 1, 1), (2, 1), (2, 2, 1), (3, 2)])
+
+    @settings(max_examples=25, deadline=None)
+    @given(branches, st.integers(0, 2**31 - 1))
+    def check(branch, seed):
+        rng = np.random.default_rng(seed)
+        tree = TreeSpec.from_branch(branch)
+        b, v = 2, 12
+        t = tree.size
+        p = 1  # single pending (x_b) slot
+        s = p + t
+        logits = jnp.asarray(rng.standard_normal((b, s, v)), jnp.float32)
+        tree_tokens = jnp.asarray(rng.integers(0, v, (b, t)), jnp.int32)
+        root_slot = jnp.zeros((b,), jnp.int32)
+        node_slots = jnp.broadcast_to(p + jnp.arange(t)[None], (b, t))
+        path, acc, bonus, bparent = greedy_tree_accept(
+            tree, tree_tokens, logits, root_slot, node_slots)
+        am = np.asarray(jnp.argmax(logits, -1))
+        tt = np.asarray(tree_tokens)
+        pa, ac, bo = np.asarray(path), np.asarray(acc), np.asarray(bonus)
+        for bi in range(b):
+            # brute-force DFS: deepest greedy-consistent path (duplicate
+            # sibling tokens make several equally-valid node paths; token
+            # sequences and depths must agree)
+            def deepest(parent_slot, nodes):
+                best = ([], parent_slot)
+                want = am[bi, parent_slot]
+                for n in nodes:
+                    if tt[bi, n] != want:
+                        continue
+                    kids = [m for m in range(t) if tree.parents[m] == n]
+                    sub, last = deepest(p + n, kids)
+                    if 1 + len(sub) > len(best[0]):
+                        best = ([n] + sub, last)
+                return best
+
+            expect, last_slot = deepest(
+                0, [n for n in range(t) if tree.parents[n] == -1])
+            assert ac[bi] == len(expect)
+            got = [x for x in pa[bi] if x >= 0]
+            # node ids may differ under duplicates; token sequences match
+            assert [tt[bi, x] for x in got] == [tt[bi, x] for x in expect]
+            assert bo[bi] == am[bi, last_slot]
+
+    check()
+
+
+def test_chain_accept_prefix():
+    """Chain acceptance is the longest matching prefix of the argmax
+    chain (hypothesis sweep over seeds)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def check(seed):
+        rng = np.random.default_rng(seed)
+        b, t, v = 2, 5, 9
+        s = 1 + t
+        logits = jnp.asarray(rng.standard_normal((b, s, v)), jnp.float32)
+        chain = jnp.asarray(rng.integers(0, v, (b, t)), jnp.int32)
+        root_slot = jnp.zeros((b,), jnp.int32)
+        slots = jnp.broadcast_to(1 + jnp.arange(t)[None], (b, t))
+        acc, bonus, bparent = chain_accept_greedy(chain, logits, root_slot,
+                                                  slots)
+        am = np.asarray(jnp.argmax(logits, -1))
+        ch = np.asarray(chain)
+        for bi in range(b):
+            n = 0
+            slot = 0
+            while n < t and ch[bi, n] == am[bi, slot]:
+                slot = 1 + n
+                n += 1
+            assert int(acc[bi]) == n
+            assert int(bonus[bi]) == am[bi, slot]
+
+    check()
