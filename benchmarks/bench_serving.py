@@ -73,6 +73,18 @@ mismatch count is reported).  Reports peak concurrent slots, page
 high-water, decode-gap p50/p95, admission stalls/defers, and the
 demote/promote/prefetch counters.
 
+``--zero-copy`` A/Bs gathered vs page-table-routed partial KV on the
+paged cache (``ServingConfig(zero_copy_partial=...)`` at the serving
+layer; the ``SpecPVEngine(zero_copy=...)`` knob here): the identical
+budget-straddling Poisson request set runs once with refreshes copying
+the selected blocks into the dense partial buffer and once with
+refreshes writing O(budget) selected-block indices and pinning the
+pages (the partial body reads route through the trunk pool).  Reports
+decode-step gap p50/p95, refresh-tick p50/p95 from the scheduler's
+per-class tick wall-time breakdown, each arm's billed refresh HBM
+traffic, the pin drain check (zero pinned pages after the run), and
+verifies the two arms produce token-identical outputs.
+
 ``--sampled`` A/Bs greedy vs stochastic serving through the same fused
 ticks: the identical request set runs with (a) temperature-0 tree drafts,
 (b) sampled chain drafts and (c) sampled tree drafts (per-request
@@ -795,6 +807,115 @@ def run_sampled(args, cfg, dcfg, params, dparams, corpus, spec, contexts):
                 for (name, t, d), r in zip(arms, results.values())])
 
 
+def run_zero_copy(args, cfg, dcfg, params, dparams, corpus, spec,
+                  contexts):
+    """Gathered vs page-table-routed (zero-copy) partial KV on the same
+    mixed Poisson request set straddling the partial budget (so slots
+    routinely refresh and decode partially).  Two paged engines — the
+    zero_copy flag changes the EngineState layout, so the arms cannot
+    share jit compiles; each warms on the identical request set.  A
+    gathered refresh copies the selected blocks' bytes into the dense
+    per-slot partial buffer; a routed refresh writes O(budget) selected
+    block indices and pins the pages.  Reports decode-step gap p50/p95,
+    the per-class tick wall-time breakdown (refresh ticks are the ones
+    the tentpole targets), refresh-tick p50/p95, modelled refresh HBM
+    traffic of each billing contract, and the pin high-water/drain —
+    outputs are verified token-identical."""
+    rng = np.random.default_rng(args.seed)
+    reqs = make_requests(corpus, contexts, args.requests, args.rate, rng,
+                         args.max_new)
+    max_len = max(contexts) + args.max_new + 128
+    nb_seq = -(-max_len // spec.block_size)
+    emax = TreeSpec.from_branch(dcfg.tree_branch[: dcfg.tree_depth]).max_path
+    need_max = -(-request_token_need(max(contexts), args.max_new,
+                                     spec.buffer_size, emax)
+                 // spec.block_size)
+    num_pages = (args.num_pages
+                 or max((args.batch * nb_seq * 3) // 5, need_max + 1) + 1)
+    print(f"zero-copy A/B: {args.requests} requests, contexts {contexts} "
+          f"(partial budget {spec.partial_budget_tokens} tokens), "
+          f"batch {args.batch}, paged pool {num_pages - 1} usable pages")
+
+    results = {}
+    for mode, zc in (("gathered", False), ("routed", True)):
+        eng = SpecPVEngine(cfg, spec, dcfg, params, dparams,
+                           batch=args.batch, max_len=max_len,
+                           partial_verification=True, paged=True,
+                           num_pages=num_pages, zero_copy=zc)
+        if not args.no_warmup:
+            # replay the exact request set so every fused mode-mix jit
+            # variant this arm's schedule produces compiles outside the
+            # timed region
+            warm = ContinuousScheduler(eng, prefill_chunk=64)
+            for _, r in reqs:
+                warm.submit(Request(request_id=f"warm-{r.request_id}",
+                                    prompt=r.prompt,
+                                    max_new_tokens=r.max_new_tokens))
+            warm.run()
+            # bill only the timed run's refresh traffic
+            eng.traffic.bytes_by_mode.clear()
+            eng.traffic.steps_by_mode.clear()
+        sched = ContinuousScheduler(eng, prefill_chunk=64,
+                                    record_steps=True)
+        t0 = time.time()
+        for off, r in reqs:
+            sched.submit(Request(request_id=r.request_id, prompt=r.prompt,
+                                 max_new_tokens=r.max_new_tokens,
+                                 eos_id=r.eos_id, arrival_s=t0 + off))
+        outs = sched.run()
+        wall = time.time() - t0
+        toks = sum(len(o.tokens) for o in outs)
+        gaps = step_gap_stats(sched.step_log)
+        g50, g95 = percentiles(gaps) if gaps.size else (0.0, 0.0)
+        rticks = np.asarray(sched.tick_wall.get("refresh", []) or [0.0])
+        r50, r95 = percentiles(rticks)
+        walls = {c: (len(ts), float(np.mean(ts)))
+                 for c, ts in sched.tick_wall.items()}
+        ps = eng.page_stats()
+        pins = int(ps.get("pinned_pages", 0))
+        rbytes = int(eng.traffic.bytes_by_mode.get("refresh", 0))
+        results[mode] = dict(outs=outs, tput=toks / wall, g50=g50,
+                             g95=g95, r50=r50, r95=r95, walls=walls,
+                             pins=pins, rbytes=rbytes,
+                             rticks=int(rticks.size))
+        print(f"{mode:>9}: {toks} tokens in {wall:.1f}s -> "
+              f"{toks / wall:.1f} tok/s; decode-gap p50={g50 * 1e3:.1f}ms "
+              f"p95={g95 * 1e3:.1f}ms; refresh-tick p50={r50 * 1e3:.1f}ms "
+              f"p95={r95 * 1e3:.1f}ms over {rticks.size} refresh ticks")
+        print(f"{'':>9}  tick wall by class: "
+              + ", ".join(f"{c}: {n}x {m * 1e3:.1f}ms"
+                          for c, (n, m) in sorted(walls.items()))
+              + f"; billed refresh traffic {rbytes / 2**20:.2f}MiB; "
+              f"pinned pages after drain: {pins}")
+        if zc:
+            assert pins == 0, \
+                f"routed arm leaked {pins} pinned pages after drain"
+
+    if not args.no_check:
+        gat = {o.request_id: o.tokens for o in results["gathered"]["outs"]}
+        for o in results["routed"]["outs"]:
+            assert np.array_equal(o.tokens, gat[o.request_id]), \
+                f"{o.request_id}: routed != gathered"
+        print("losslessness: zero-copy (routed) outputs token-identical "
+              "to the gathered-partial baseline")
+    rg, rr = results["gathered"], results["routed"]
+    print(f"refresh-tick p95: {rr['r95'] * 1e3:.1f}ms routed vs "
+          f"{rg['r95'] * 1e3:.1f}ms gathered "
+          f"({rg['r95'] / max(rr['r95'], 1e-9):.2f}x); billed refresh "
+          f"traffic {rg['rbytes'] / max(rr['rbytes'], 1):.2f}x smaller "
+          f"routed (rebuild-term model: benchmarks/bench_fig6_refresh.py)")
+    out = ensure_dir(RESULTS_DIR)
+    write_rows(f"{out}/bench_serving_zero_copy.csv",
+               ["mode", "tok_s", "gap_p50_ms", "gap_p95_ms",
+                "refresh_tick_p50_ms", "refresh_tick_p95_ms",
+                "refresh_ticks", "refresh_bytes", "pinned_pages_after"],
+               [[m, f"{r['tput']:.2f}", f"{r['g50'] * 1e3:.2f}",
+                 f"{r['g95'] * 1e3:.2f}", f"{r['r50'] * 1e3:.2f}",
+                 f"{r['r95'] * 1e3:.2f}", r["rticks"], r["rbytes"],
+                 r["pins"]]
+                for m, r in results.items()])
+
+
 def run_prefix_share(args, cfg, dcfg, params, dparams, corpus, spec):
     """Shared-system-prompt workload: paged continuous scheduler with the
     copy-on-write prefix cache on vs off (identical request set)."""
@@ -1087,6 +1208,12 @@ def main():
                          "pool/shards + slack, dispatches/tick, modelled "
                          "cross-shard verify traffic (defaults: batch 8, "
                          "mode-mixing contexts 64 192 96 256 224)")
+    ap.add_argument("--zero-copy", action="store_true",
+                    help="A/B gathered vs page-table-routed (zero-copy) "
+                         "partial KV on the paged cache: decode-gap "
+                         "p50/p95, refresh-tick p50/p95, per-class tick "
+                         "wall breakdown, billed refresh traffic, pin "
+                         "drain check, token identity")
     ap.add_argument("--tiered", action="store_true",
                     help="tiered-residency memory-pressure A/B: untiered "
                          "parity pool vs untiered + tiered (lossless and "
@@ -1169,6 +1296,13 @@ def main():
             args.batch = 8
         run_sharded(args, cfg, dcfg, params, dparams, corpus, spec,
                     contexts)
+        return
+    if args.zero_copy:
+        # straddle the partial budget (like --fused) so slots refresh
+        # and decode partially — the modes the tentpole changes
+        contexts = args.contexts or [64, 192, 96, 256, 224]
+        run_zero_copy(args, cfg, dcfg, params, dparams, corpus, spec,
+                      contexts)
         return
     if args.tiered:
         # long contexts only, and near-uniform: each prompt's cold pages

@@ -59,7 +59,7 @@ from repro.core import verify as vf
 from repro.utils import pytree_dataclass, cdiv
 from repro.kvcache import cache as kvc
 from repro.kvcache.offload import TierManager, TrafficMeter, \
-    full_step_bytes, partial_step_bytes
+    full_step_bytes, partial_step_bytes, routed_refresh_bytes
 
 
 @pytree_dataclass
@@ -78,6 +78,13 @@ class EngineState:
     ext_len: jax.Array          # [B]
     keys: jax.Array             # [B, 2] per-slot PRNG streams (sampling)
     temps: jax.Array            # [B] per-slot sampling temperature
+    # zero-copy partial routing (empty [B, 0, 0, 0] when disabled):
+    # per-slot, per-layer, per-kv-head selected LOGICAL block ids,
+    # [B, L_attn, Hk, NS] int32 with -1 = unused selection slot.  The
+    # physical routing is derived in-jit by gathering the slot's live
+    # page table — valid across CoW repoints (bit-identical copies) and
+    # protected from demotion/rebinding by the allocator's partial pins.
+    pkv_blocks: jax.Array
 
 
 def request_token_need(prompt_len: int, max_new_tokens: int,
@@ -181,7 +188,7 @@ class PrefillCursor:
 _PKV_FIELDS = ("pkv_k", "pkv_v", "pkv_pos")       # batch on axis 1
 _ROW_FIELDS = ("buf_len", "pending", "pending_len", "seq_len",
                "ext_tokens", "ext_feats", "ext_len",
-               "keys", "temps")                   # batch on axis 0
+               "keys", "temps", "pkv_blocks")     # batch on axis 0
 
 
 def merge_state_rows(mask, new: EngineState, old: EngineState) -> EngineState:
@@ -225,6 +232,7 @@ class SpecPVEngine:
                  tiered: bool = False,
                  tier_lossless: bool = False,
                  tier_codec: str = "int8",
+                 zero_copy: bool = False,
                  mesh=None):
         """``paged=True`` (attention archs only) backs the full KV cache
         with a shared block pool + per-slot page tables: resident memory
@@ -260,6 +268,17 @@ class SpecPVEngine:
         the draft cache is read every step and never tiered, so a
         tiered deployment keeps a full-size draft pool (~1/L the bytes
         per page) under a shrunken trunk pool.
+
+        ``zero_copy=True`` (paged only) makes the partial KV a
+        page-table-routed *view* over the trunk pool: a refresh stores
+        the retrieval-selected logical block ids per layer/kv-head
+        (``EngineState.pkv_blocks``) and pins the selected physical
+        pages (``PageAllocator.pin_slot_pages`` — CoW sources, never
+        freed/rebound/demoted), and partial steps stream those pool
+        pages directly plus the small dense tail buffer.  The dense
+        partial arrays shrink to the buffer alone.  Greedy outputs are
+        token-identical to the gathered baseline (the default, kept
+        for A/B).
 
         ``mesh`` (a ``jax.sharding.Mesh`` with a ``data`` and/or
         ``model`` axis) shards the serving engine: batch rows split into
@@ -326,6 +345,17 @@ class SpecPVEngine:
         if partial_verification is None:
             partial_verification = self.is_attn
         self.partial_enabled = partial_verification and self.is_attn
+        # zero-copy partial verification: the partial KV is a routed
+        # VIEW over the paged trunk pool (per-slot selected block ids +
+        # allocator pins) instead of a gathered copy — a refresh writes
+        # O(budget) indices, not O(L x budget x block) bytes.  Greedy
+        # outputs stay token-identical to the gathered baseline
+        # (docs/architecture.md#zero-copy-partial-kv).
+        assert not (zero_copy and not self.paged), \
+            "zero-copy partial verification needs the paged cache " \
+            "(paged=True); the contiguous layout keeps the gather path"
+        self.zero_copy = bool(zero_copy and self.partial_enabled)
+        self._ns_blocks = spec.partial_budget_tokens // spec.block_size
         if draft_chain is None:
             draft_chain = not self.is_attn
         branch = ((1,) * dcfg.tree_depth if draft_chain
@@ -575,7 +605,11 @@ class SpecPVEngine:
                 mode=decode_kind, self_mask=vin["self_mask"],
                 pkv=(st.pkv_k, st.pkv_v, st.pkv_pos), spec=spec,
                 emit_queries=has_refresh,
-                partial_rows=is_partial if decode_kind == "fused" else None)
+                partial_rows=is_partial if decode_kind == "fused" else None,
+                # zero-copy: route partial rows' retrieved body through
+                # the live page table ([B, L, Hk, NS] -> [L, B, Hk, NS])
+                pkv_blocks=(jnp.moveaxis(st.pkv_blocks, 0, 1)
+                            if self.zero_copy and has_partial else None))
 
             path, acc, bonus = _accept(
                 tree_tokens, aux, out, vin, st, key_accept,
@@ -590,6 +624,7 @@ class SpecPVEngine:
 
             cache = st.cache
             pkv_k, pkv_v, pkv_pos = st.pkv_k, st.pkv_v, st.pkv_pos
+            pkv_blocks = st.pkv_blocks
             buf_len = st.buf_len
             if has_partial:
                 # partial rows append their accepted run to the pkv
@@ -603,8 +638,11 @@ class SpecPVEngine:
                                            slots[:, :wb], axis=1)
                 count_buf = (jnp.where(is_partial, count, 0)
                              if has_full else count)
+                # zero-copy: the dense arrays hold only the buffer, so
+                # appends start at offset 0 instead of past the body
+                body_len = 0 if self.zero_copy else spec.partial_budget_tokens
                 nk, nv, npos, nbl = vf.append_buffer(
-                    pkv_k, pkv_v, pkv_pos, spec.partial_budget_tokens,
+                    pkv_k, pkv_v, pkv_pos, body_len,
                     buf_len, ck[:, :, :wb], cv[:, :, :wb], cpos, count_buf)
                 if has_full:   # non-partial rows keep their pkv bits
                     selp = is_partial[None, :, None, None]
@@ -639,18 +677,35 @@ class SpecPVEngine:
                     vin["pend_valid"].astype(jnp.float32))
                 qw = jax.vmap(lambda qr, idx, w: qr.at[idx].add(w))(
                     qw, vin["node_slots"], node_w)
-                pk, pv, ppos = vf.refresh_partial_from_queries(
-                    cfg, spec, out.queries, qw, cache)
-                pad = spec.buffer_size
-                rk = jnp.pad(pk, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
-                rv = jnp.pad(pv, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
-                rpos = jnp.pad(ppos, ((0, 0), (0, 0), (0, 0), (0, pad)),
-                               constant_values=-1)
-                selr = is_refresh[None, :, None, None]
-                pkv_k = jnp.where(selr[..., None], rk, pkv_k)
-                pkv_v = jnp.where(selr[..., None], rv, pkv_v)
-                pkv_pos = jnp.where(selr, rpos, pkv_pos)
-                buf_len = jnp.where(is_refresh, 0, buf_len)
+                if self.zero_copy:
+                    # routed refresh: write the selected logical block
+                    # ids (O(budget) indices) and reset the tail buffer
+                    # — no gathered body is ever materialised.  The
+                    # host wrapper pins the selected physical pages
+                    # right after this dispatch returns.
+                    nbi = vf.refresh_partial_blocks(
+                        cfg, spec, out.queries, qw, cache)
+                    nbi = jnp.moveaxis(nbi, 0, 1)   # [B, L_attn, Hk, NS]
+                    selb = is_refresh[:, None, None, None]
+                    pkv_blocks = jnp.where(selb, nbi, pkv_blocks)
+                    selr = is_refresh[None, :, None, None]
+                    pkv_pos = jnp.where(selr, -1, pkv_pos)
+                    buf_len = jnp.where(is_refresh, 0, buf_len)
+                else:
+                    pk, pv, ppos = vf.refresh_partial_from_queries(
+                        cfg, spec, out.queries, qw, cache)
+                    pad = spec.buffer_size
+                    rk = jnp.pad(pk,
+                                 ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+                    rv = jnp.pad(pv,
+                                 ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+                    rpos = jnp.pad(ppos, ((0, 0), (0, 0), (0, 0), (0, pad)),
+                                   constant_values=-1)
+                    selr = is_refresh[None, :, None, None]
+                    pkv_k = jnp.where(selr[..., None], rk, pkv_k)
+                    pkv_v = jnp.where(selr[..., None], rv, pkv_v)
+                    pkv_pos = jnp.where(selr, rpos, pkv_pos)
+                    buf_len = jnp.where(is_refresh, 0, buf_len)
 
             pending_f = jnp.zeros_like(st.pending).at[:, 0].set(bonus)
             if has_partial:
@@ -673,7 +728,7 @@ class SpecPVEngine:
                 pkv_pos=pkv_pos, buf_len=buf_len, pending=pending,
                 pending_len=pending_len, seq_len=seq_len,
                 ext_tokens=newtoks, ext_feats=ext_feats, ext_len=ext_len,
-                keys=keys_next, temps=st.temps)
+                keys=keys_next, temps=st.temps, pkv_blocks=pkv_blocks)
             return st2, (newtoks, acc + 1, acc)
 
         def _step_state(params, dparams, st: EngineState, active):
@@ -714,7 +769,7 @@ class SpecPVEngine:
                 pkv_pos=st.pkv_pos, buf_len=st.buf_len, pending=pending,
                 pending_len=jnp.ones((b,), jnp.int32), seq_len=seq_len,
                 ext_tokens=newtoks, ext_feats=ext_feats, ext_len=ext_len,
-                keys=keys_next, temps=st.temps)
+                keys=keys_next, temps=st.temps, pkv_blocks=st.pkv_blocks)
             return st2, (newtoks, acc + 1, acc)
 
         if self.is_attn:
@@ -767,11 +822,26 @@ class SpecPVEngine:
             return z, z, z
         from repro.models.dense import attn_layer_count
         l_attn = attn_layer_count(cfg.layer_kinds())
-        p_slots = spec.partial_budget_tokens + spec.buffer_size
+        # zero-copy: the retrieved body lives in the pool (routed via
+        # pkv_blocks), so the dense arrays carry only the tail buffer
+        p_slots = (spec.buffer_size if self.zero_copy
+                   else spec.partial_budget_tokens + spec.buffer_size)
         pkv_k = jnp.zeros((l_attn, b, hk, p_slots, dh), cm.dt(cfg.dtype))
         pkv_v = jnp.zeros_like(pkv_k)
         pkv_pos = jnp.full((l_attn, b, hk, p_slots), -1, jnp.int32)
         return pkv_k, pkv_v, pkv_pos
+
+    def _init_pkv_blocks(self, b: int):
+        """Per-slot routed-selection table [B, L_attn, Hk, NS] int32
+        (-1 = unused slot); an empty [B, 0, 0, 0] placeholder when
+        zero-copy routing is off so every EngineState keeps one leaf
+        layout."""
+        if not self.zero_copy:
+            return jnp.zeros((b, 0, 0, 0), jnp.int32)
+        from repro.models.dense import attn_layer_count
+        l_attn = attn_layer_count(self.cfg.layer_kinds())
+        return jnp.full((b, l_attn, self.cfg.num_kv_heads,
+                         self._ns_blocks), -1, jnp.int32)
 
     def _init_cache(self, b: int, *, full_alloc: bool = False) -> Dict:
         """Fresh cache dict.  Paged with ``full_alloc``: every row gets
@@ -913,7 +983,8 @@ class SpecPVEngine:
             seq_len=jnp.full((b,), s0 + 1, jnp.int32),
             ext_tokens=ext_tokens, ext_feats=ext_feats,
             ext_len=jnp.ones((b,), jnp.int32),
-            keys=jnp.asarray(keys), temps=jnp.asarray(temps, jnp.float32))
+            keys=jnp.asarray(keys), temps=jnp.asarray(temps, jnp.float32),
+            pkv_blocks=self._init_pkv_blocks(b))
 
     # ------------------------------------------------------------------
     # per-slot state management (continuous batching)
@@ -949,7 +1020,8 @@ class SpecPVEngine:
                                 cm.dt(cfg.dtype)),
             ext_len=jnp.ones((b,), jnp.int32),
             keys=self._seed_keys(0, b)[1],
-            temps=jnp.zeros((b,), jnp.float32))
+            temps=jnp.zeros((b,), jnp.float32),
+            pkv_blocks=self._init_pkv_blocks(b))
 
     def empty_state(self) -> EngineState:
         """Batched state with every slot dead (continuous-scheduler boot)."""
@@ -1181,7 +1253,8 @@ class SpecPVEngine:
             seq_len=rowlike(st.seq_len),
             ext_tokens=rowlike(st.ext_tokens),
             ext_feats=rowlike(st.ext_feats), ext_len=rowlike(st.ext_len),
-            keys=rowlike(st.keys), temps=rowlike(st.temps))
+            keys=rowlike(st.keys), temps=rowlike(st.temps),
+            pkv_blocks=rowlike(st.pkv_blocks))
 
     def shard_state(self, st: EngineState) -> EngineState:
         """Place `st` onto the mesh per ``state_shardings`` (identity
@@ -1357,7 +1430,8 @@ class SpecPVEngine:
                    draft_in_use=self._draft_alloc.in_use,
                    draft_high_water=self._draft_alloc.high_water,
                    contiguous_pages=self.batch * self._nb_seq,
-                   block_size=self.spec.block_size)
+                   block_size=self.spec.block_size,
+                   pinned_pages=al.pinned_pages)
         if self.data_shards > 1:
             out["data_shards"] = self.data_shards
             out["peak_pages_per_host"] = al.peak_pages_per_host
@@ -2185,6 +2259,20 @@ class SpecPVEngine:
                                      jnp.asarray(self._slot_chain))
         self.dispatches += 1
         self._pkv_active_rows |= rows & (modes == MODE_REFRESH)
+        if self.zero_copy and has_refresh:
+            # pin the pages the refresh just routed — BEFORE the tier
+            # epilogue, so demotion excludes them.  pin_slot_pages takes
+            # the new references before dropping the previous refresh's,
+            # so a page kept across refreshes never transiently frees.
+            al = self._page_alloc
+            pbi_host = np.asarray(st.pkv_blocks)
+            for i in np.nonzero(rows & (modes == MODE_REFRESH))[0]:
+                i = int(i)
+                blocks = np.unique(pbi_host[i][pbi_host[i] >= 0])
+                nb = al.count(i)
+                pages = [al.page_at(i, int(j)) for j in blocks if j < nb]
+                if pages:
+                    al.pin_slot_pages(i, pages)
         self._record_traffic_rows(modes, st, rows)
         if self._tier is not None:
             # refresh epilogue: committed blocks go cold until the next
@@ -2282,9 +2370,16 @@ class SpecPVEngine:
             # batch=1 + per-row-summed context = the analytic sum
             nbytes = full_step_bytes(l_attn, 1, seq_sum, hk, dh, itemsize)
             if mode == "refresh":
-                nbytes += partial_step_bytes(
-                    l_attn, nrows, spec.partial_budget_tokens,
-                    hk, dh, itemsize)
+                if self.zero_copy:
+                    # routed rebuild: summaries scored + index writes +
+                    # tail-buffer reset — the selected body never moves
+                    nbytes += routed_refresh_bytes(
+                        l_attn, nrows, self._nb_seq, self._ns_blocks,
+                        spec.buffer_size, hk, dh, itemsize)
+                else:
+                    nbytes += partial_step_bytes(
+                        l_attn, nrows, spec.partial_budget_tokens,
+                        hk, dh, itemsize)
         self.traffic.record(mode, nbytes)
 
     # ------------------------------------------------------------------

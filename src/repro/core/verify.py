@@ -362,3 +362,36 @@ def refresh_partial_from_queries(cfg: ModelConfig, spec: SpecPVConfig,
                                              cache["length"])
     return jax.vmap(per_layer)(queries, cache["kmax"], cache["kmin"],
                                cache["k"], cache["v"])
+
+
+def refresh_partial_blocks(cfg: ModelConfig, spec: SpecPVConfig,
+                           queries, q_weight, cache: Dict):
+    """Zero-copy refresh: the same Quest scoring + selection as
+    ``refresh_partial_from_queries``, but returning the selected
+    *logical block ids* instead of gathered bytes — O(budget) index
+    writes; the partial body is never materialised.  Paged caches only.
+
+    queries: [L, B, T, H, Dh]; q_weight: [B, T].
+    Returns [L, B, Hk, NS] int32 logical block ids with -1 for unused
+    selection slots (padded retrieval ranks), matching the validity the
+    gathered path encodes via ``pos = -1``."""
+    from repro.models.dense import select_partial_blocks
+    use_kernel = (spec.use_pallas and spec.score_mode == "paper"
+                  and spec.reduction == "mean")
+    assert "page_table" in cache, \
+        "zero-copy refresh needs the paged cache (contiguous keeps gather)"
+    pt = cache["page_table"]
+
+    def _scores(q_l, kmax_l, kmin_l):
+        if use_kernel:
+            from repro.kernels import ops as kops
+            return kops.retrieval_scores(q_l, kmax_l, kmin_l, q_weight)
+        return quest_block_scores(q_l, kmax_l, kmin_l, q_weight,
+                                  score_mode=spec.score_mode,
+                                  reduction=spec.reduction)
+
+    def per_layer(q_l, kmax_p, kmin_p):
+        scores = _scores(q_l, kmax_p[pt], kmin_p[pt])
+        return select_partial_blocks(spec, scores, cache["length"])
+
+    return jax.vmap(per_layer)(queries, cache["kmax"], cache["kmin"])

@@ -105,6 +105,41 @@ def paged_verify_attention(q, pool_k, pool_v, page_table, length,
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))
+def routed_partial_attention(q, pool_k, pool_v, block_idx, block_valid_len,
+                             use_pallas: bool = True):
+    """Zero-copy partial verification attention: the retrieval-selected
+    blocks are read *in place* from the shared block pool through a
+    per-row, per-kv-head page list — no dense partial cache exists.
+
+    The caller has already translated the slot's selected logical
+    blocks through its live page table (a physical page id IS a block
+    index into the flattened pool), zeroed unused selection slots
+    (``block_valid_len == 0`` masks them), and clipped the last
+    selected block's valid length to the row's committed extent — so
+    this is exactly the block-sparse kernel's contract, streaming only
+    the ~budget tokens actually attended.  RoPE was applied to K at
+    pool-write time, so retrieved blocks keep their true positions for
+    free.
+
+    q: [B, T, H, Dh]; pool_k/pool_v: [NP, block, Hk, Dh] (one layer's
+    pool); block_idx: [B, Hk, NSel] routed physical page ids;
+    block_valid_len: [B, Hk, NSel] valid tokens per selected block.
+    Returns (m [B, H, T], l [B, H, T], acc [B, H, T, Dh]) fp32 —
+    combinable with the tail-buffer and tree self-segments via
+    ``models.common.merge_attn_partials``/``combine_attn_parts``."""
+    np_, bs, hk, dh = pool_k.shape
+    k_flat = pool_k.reshape(np_ * bs, hk, dh)
+    v_flat = pool_v.reshape(np_ * bs, hk, dh)
+    fn = (functools.partial(sparse_verify_attention_pallas, block_size=bs,
+                            interpret=_interpret())
+          if use_pallas else
+          functools.partial(ref.sparse_verify_attention_ref, block_size=bs))
+    return jax.vmap(fn, in_axes=(0, None, None, 0, 0))(
+        q, k_flat, v_flat, block_idx.astype(jnp.int32),
+        block_valid_len.astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
 def paged_prefill_attention(q, pool_k, pool_v, page_table, length, t_valid,
                             use_pallas: bool = True):
     """Blockwise-parallel paged prefill attention over the shared block

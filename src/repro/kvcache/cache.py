@@ -253,6 +253,12 @@ class PageAllocator:
         self._cache_ref = np.zeros((self.num_pages,), np.int32)
         self._slot_pages: dict = {}
         self._hosted: dict = {}         # slot -> set of demoted blocks
+        # zero-copy partial pins: pages a slot's partial page table
+        # routes through between refreshes.  A pin is a REAL reference
+        # (add_ref) plus this counter, so a pinned page can never reach
+        # the free list — demote/rebind additionally refuse it outright.
+        self._pin_ref = np.zeros((self.num_pages,), np.int32)
+        self._slot_pins: dict = {}      # slot -> np.ndarray of pages
 
     # -- shard topology -----------------------------------------------
     def slot_shard(self, slot: int) -> int:
@@ -339,7 +345,8 @@ class PageAllocator:
         if pages is None or block >= len(pages):
             return False
         p = pages[block]
-        return p != 0 and self._ref[p] == 1 and self._cache_ref[p] == 0
+        return (p != 0 and self._ref[p] == 1 and self._cache_ref[p] == 0
+                and self._pin_ref[p] == 0)
 
     def demote(self, slot: int, block: int) -> int:
         """Release the device page behind a host-offloaded block: the
@@ -454,6 +461,8 @@ class PageAllocator:
             if cache:
                 assert self._cache_ref[p] > 0
                 self._cache_ref[p] -= 1
+            assert not (self._ref[p] == 0 and self._pin_ref[p] > 0), \
+                f"page {p} freed while partial-pinned"
             if self._ref[p] == 0:
                 self._free_by[self.page_shard(p)].append(p)
                 self._free_set.add(p)
@@ -479,6 +488,9 @@ class PageAllocator:
         assert old != page, "rebind onto the page already held"
         assert old != 0 and block not in self._hosted.get(slot, ()), \
             "rebind of a hosted/null block"
+        assert self._pin_ref[old] == 0, \
+            f"rebind of partial-pinned page {old}: a live partial view " \
+            f"routes through it until the slot's next refresh"
         self.add_ref([page])
         self._slot_pages[slot][block] = page
         return self.dec_ref([old])
@@ -495,6 +507,12 @@ class PageAllocator:
              f"reference, so both slots must live on one shard")
         pages = self.pages_of(src)
         self.attach(dst, pages)
+        # the replica's partial view routes through the same physical
+        # pages as the source's until its next refresh, so it must hold
+        # its own pins on them (evicting src cannot strand dst's view)
+        src_pins = self._slot_pins.get(src)
+        if src_pins is not None and len(src_pins):
+            self.pin_slot_pages(dst, src_pins)
         return pages
 
     def cow_write(self, slot: int, block: int) -> Tuple[int, int]:
@@ -531,9 +549,47 @@ class PageAllocator:
         with the prefix cache stay resident.  Host-demoted blocks (null
         entries) hold no device page and simply drop their debt; the
         host-side bytes are the ``TierManager``'s to discard."""
+        self.unpin_slot(slot)
         pages = self._slot_pages.pop(slot, [])
         self._hosted.pop(slot, None)
         return self.dec_ref([p for p in pages if p != 0])
+
+    # -- zero-copy partial pins (see docs/paged_kv.md#partial-pins) ----
+    def pin_slot_pages(self, slot: int, pages) -> None:
+        """Replace `slot`'s partial-pin set with `pages` (the physical
+        pages its freshly written partial page table routes through).
+        Each pin is a real reference plus a ``_pin_ref`` count, so a
+        pinned page is a legal CoW *source* but can never be freed,
+        rebound, or demoted until the slot's next refresh (or eviction)
+        drops the pin.  New pins are taken BEFORE the old set is
+        released, so a page in both sets never transiently frees."""
+        new = np.unique(np.asarray(list(pages), np.int64)).astype(np.int32)
+        assert not np.any(new == 0), "pin of the reserved null page"
+        self.add_ref(new)
+        self._pin_ref[new] += 1
+        old = self._slot_pins.get(slot)
+        self._slot_pins[slot] = new
+        if old is not None and len(old):
+            self._pin_ref[old] -= 1
+            assert np.all(self._pin_ref >= 0), "pin refcount underflow"
+            self.dec_ref(old)
+
+    def unpin_slot(self, slot: int) -> None:
+        """Drop `slot`'s partial pins (idempotent) — refresh epilogue
+        re-pin, slot eviction, and ``free_slot`` all funnel here."""
+        old = self._slot_pins.pop(slot, None)
+        if old is not None and len(old):
+            self._pin_ref[old] -= 1
+            assert np.all(self._pin_ref >= 0), "pin refcount underflow"
+            self.dec_ref(old)
+
+    def pins_of(self, slot: int) -> List[int]:
+        return list(self._slot_pins.get(slot, ()))
+
+    @property
+    def pinned_pages(self) -> int:
+        """Distinct physical pages with a live partial pin."""
+        return int(np.sum(self._pin_ref > 0))
 
 
 # ---------------------------------------------------------------------------

@@ -71,11 +71,31 @@ def full_step_bytes(num_layers: int, batch: int, ctx_len: int, hk: int,
 
 def partial_step_bytes(num_layers: int, batch: int, partial_tokens: int,
                        hk: int, dh: int, itemsize: int) -> int:
-    """Bytes of partial cache read per partial step — also the refresh
-    *rebuild* bill: a refresh re-reads its retrieval-selected blocks
-    (``partial_budget_tokens`` of them; the buffer is re-appended from
-    pending state, not re-read) on top of the full verify read."""
+    """Bytes of partial cache read per partial step — also the *gathered*
+    refresh rebuild bill: a gathered refresh re-reads its
+    retrieval-selected blocks (``partial_budget_tokens`` of them; the
+    buffer is re-appended from pending state, not re-read) on top of the
+    full verify read.  A zero-copy refresh bills
+    ``routed_refresh_bytes`` instead — the partial body is never
+    materialised, so no block bytes move at refresh time."""
     return 2 * num_layers * batch * partial_tokens * hk * dh * itemsize
+
+
+def routed_refresh_bytes(num_layers: int, batch: int, num_blocks: int,
+                         num_sel: int, buffer_tokens: int, hk: int,
+                         dh: int, itemsize: int) -> int:
+    """Zero-copy refresh rebuild bill (on top of the full verify read):
+    the physical-page summaries scored for selection (kmax + kmin,
+    ``num_blocks`` table entries each, fp32), the selected-block index
+    writes (``num_sel`` int32 ids per layer/kv-head), and the dense tail
+    buffer reset (``buffer_tokens`` K+V slots in pool dtype).  No block
+    KV bytes move — the selected body stays in the pool and is routed by
+    page table at partial-step time (``kernels.ops.
+    routed_partial_attention``)."""
+    summaries = 2 * num_layers * num_blocks * hk * dh * 4
+    index_writes = num_layers * hk * num_sel * 4
+    tail = 2 * num_layers * buffer_tokens * hk * dh * itemsize
+    return batch * (summaries + index_writes + tail)
 
 
 # ---------------------------------------------------------------------------

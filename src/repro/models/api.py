@@ -207,7 +207,8 @@ def decode(cfg: ModelConfig, params, tokens, positions, cache, *,
            select_partial: bool = False,
            emit_queries: bool = False,
            q_weight=None,
-           partial_rows=None) -> DecodeOut:
+           partial_rows=None,
+           pkv_blocks=None) -> DecodeOut:
     """Forward T new (tree/chain) tokens.
 
     mode: "full" | "partial" | "fused" — attention archs only; state
@@ -218,6 +219,9 @@ def decode(cfg: ModelConfig, params, tokens, positions, cache, *,
     launch serves an arbitrary per-row mode mix.
     self_mask: [B, T, T] bool — tree/chain visibility among the new tokens.
     select_partial: emit a freshly retrieved partial cache (Refresh/init).
+    pkv_blocks: [L_attn, B, Hk, NS] int32 — zero-copy partial routing
+    (paged caches): partial rows read their selected blocks in place
+    through the page table; ``pkv`` then carries the tail buffer only.
     """
     b, t = tokens.shape
     if self_mask is None:
@@ -243,7 +247,7 @@ def decode(cfg: ModelConfig, params, tokens, positions, cache, *,
                        spec=spec or SpecPVConfig(),
                        select_partial=select_partial,
                        emit_queries=emit_queries, q_weight=q_weight,
-                       partial_rows=partial_rows)
+                       partial_rows=partial_rows, pkv_blocks=pkv_blocks)
     logits = dn.lm_head(cfg, params, out.h)
     return DecodeOut(logits, Features(*out.features), out.new_kv,
                      out.partial, out.aux_loss, out.queries)

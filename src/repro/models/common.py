@@ -457,6 +457,24 @@ def dense_attn_part_quant(q, k_q, v_q, k_scale, v_scale, kv_valid, *,
     return m, l, acc
 
 
+def merge_attn_partials(parts):
+    """Merge softmax partials from independent segments into one
+    (m, l, acc) partial (un-normalised — feed the result to
+    ``combine_attn_parts`` alongside other segments).  Used by the
+    zero-copy partial path to fuse the kernel-routed pool segment with
+    the dense tail-buffer segment before the fused step's row-select."""
+    m = parts[0][0]
+    for p in parts[1:]:
+        m = jnp.maximum(m, p[0])
+    l = 0.0
+    acc = 0.0
+    for (mi, li, acci) in parts:
+        corr = jnp.exp(mi - m)
+        l = l + li * corr
+        acc = acc + acci * corr[..., None]
+    return m, l, acc
+
+
 def combine_attn_parts(parts, out_dtype):
     """Merge softmax partials from independent segments. -> [B, T, H, Dh]"""
     m = parts[0][0]

@@ -292,6 +292,66 @@ def select_and_gather_partial_paged(spec: SpecPVConfig, scores, pool_k,
             pos.reshape(b, hk, p))
 
 
+def select_partial_blocks(spec: SpecPVConfig, scores, length):
+    """Zero-copy selection: the block ids a refresh would gather, as
+    *indices only*.  Returns [B, Hk, NS] int32 logical block ids with -1
+    for unused selection slots (padded retrieval ranks), so the routed
+    read path derives its validity purely from ``id >= 0`` and the
+    row's committed length — mirroring the gathered baseline's
+    ``(pos < length) & slot_ok`` mask exactly."""
+    idx, slot_ok = _select_block_ids(spec, scores, length)
+    return jnp.where(slot_ok, idx, -1).astype(jnp.int32)
+
+
+def _routed_partial_context(q, pool_k, pool_v, page_table, pbi, length,
+                            pkv_l, use_kernel: bool):
+    """Zero-copy partial context partials: the retrieval-selected blocks
+    are read *in place* from the layer's pool through the slot's live
+    page table (``pbi`` [B, Hk, NS] logical block ids, -1 = unused
+    selection slot), plus the small dense tail buffer that absorbs
+    between-refresh appended tokens as a second segment.
+
+    Off-kernel (CPU fallback) the two segments are CONCATENATED into
+    one per-head dense partial in the gathered baseline's exact slot
+    order — same bytes at valid slots (identical clamped-index gather),
+    same mask, no float reassociation — so the result is bit-identical
+    to attending the materialised partial cache.  The kernel route
+    streams the body blocks via
+    ``kernels.ops.routed_partial_attention`` and merges the buffer
+    partial with exp-rescaling (allclose; TPU or interpret-parity
+    tests).  Returns (m, l, acc) fp32 partials."""
+    np_, bs, hk, dh = pool_k.shape
+    b, nb = page_table.shape
+    ns = pbi.shape[-1]
+    pk_buf, pv_buf, ppos_buf = pkv_l[:3]
+    idxc = jnp.clip(pbi, 0, nb - 1)
+    pg = jnp.take_along_axis(
+        jnp.broadcast_to(page_table[:, None], (b, hk, nb)), idxc, axis=2)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        vlen = jnp.where(
+            pbi >= 0,
+            jnp.clip(length[:, None, None] - pbi * bs, 0, bs), 0)
+        idx = jnp.where(pbi >= 0, pg, 0)
+        part_body = kops.routed_partial_attention(q, pool_k, pool_v,
+                                                  idx, vlen)
+        part_buf = cm.dense_attn_part_perhead(q, pk_buf, pv_buf,
+                                              ppos_buf >= 0)
+        return cm.merge_attn_partials([part_body, part_buf])
+    pool_kh = jnp.moveaxis(pool_k, 2, 0)                  # [Hk, NP, bs, Dh]
+    pool_vh = jnp.moveaxis(pool_v, 2, 0)
+    hsel = jnp.arange(hk)[None, :, None]
+    kb = pool_kh[hsel, pg].reshape(b, hk, ns * bs, dh)
+    vb = pool_vh[hsel, pg].reshape(b, hk, ns * bs, dh)
+    pos = pbi[..., None] * bs + jnp.arange(bs)[None, None, None]
+    valid = ((pbi >= 0)[..., None]
+             & (pos < length[:, None, None, None])).reshape(b, hk, ns * bs)
+    kcat = jnp.concatenate([kb, pk_buf], axis=2)
+    vcat = jnp.concatenate([vb, pv_buf], axis=2)
+    vmask = jnp.concatenate([valid, ppos_buf >= 0], axis=2)
+    return cm.dense_attn_part_perhead(q, kcat, vcat, vmask)
+
+
 # ---------------------------------------------------------------------------
 # per-layer forward
 # ---------------------------------------------------------------------------
@@ -308,7 +368,7 @@ def _self_attention(cfg: ModelConfig, mode: str,
                     lp: Dict, h, positions, self_mask, cache_kv, pkv,
                     length, inv_freq, mscale, page_table=None,
                     paged_kernel: bool = False, partial_rows=None,
-                    t_valid=None):
+                    t_valid=None, pkv_blocks=None):
     """One self-attention sublayer under the given mode.
 
     cache_kv: (k_layer, v_layer) for prefill/decode_full/decode_fused
@@ -331,6 +391,11 @@ def _self_attention(cfg: ModelConfig, mode: str,
     partial_rows: [B] bool, decode_fused only — rows whose context is
               the materialised partial cache; all other rows attend the
               full cache over their real length.
+    pkv_blocks: [B, Hk, NS] int32 logical block ids (-1 = unused slot),
+              zero-copy partial routing (paged caches only): the
+              partial context is read in place from the pool through
+              the slot's live page table instead of a materialised
+              copy; ``pkv`` then carries only the small tail buffer.
     t_valid:  [B] int32, prefill only — ragged chunk: row i carries
               ``t_valid[i]`` real tokens then zero-pads.  Pad positions
               are excluded from KV writes (paged: routed to the null
@@ -450,10 +515,17 @@ def _self_attention(cfg: ModelConfig, mode: str,
         upd["new_k"] = k_new
         upd["new_v"] = v_new
     elif mode == "decode_partial":
-        pk, pv, ppos = pkv[:3]
-        pks, pvs = (pkv[3], pkv[4]) if len(pkv) > 3 else (None, None)
-        part_ctx = cm.dense_attn_part_perhead(q, pk, pv, ppos >= 0,
-                                              k_scale=pks, v_scale=pvs)
+        if pkv_blocks is not None:
+            assert page_table is not None and len(pkv) == 3, \
+                "zero-copy partial routing needs the paged fp cache"
+            part_ctx = _routed_partial_context(
+                q, cache_kv[0], cache_kv[1], page_table, pkv_blocks,
+                length, pkv, paged_kernel)
+        else:
+            pk, pv, ppos = pkv[:3]
+            pks, pvs = (pkv[3], pkv[4]) if len(pkv) > 3 else (None, None)
+            part_ctx = cm.dense_attn_part_perhead(q, pk, pv, ppos >= 0,
+                                                  k_scale=pks, v_scale=pvs)
         part_self = cm.dense_attn_part(q, k_new, v_new,
                                        mask=self_mask[:, None])
         out = cm.combine_attn_parts([part_ctx, part_self], h.dtype)
@@ -489,10 +561,17 @@ def _self_attention(cfg: ModelConfig, mode: str,
                                            kv_valid=kv_valid, chunk=512,
                                            return_partials=True,
                                            k_scale=ksc, v_scale=vsc)
-        pk, pv, ppos = pkv[:3]
-        pks, pvs = (pkv[3], pkv[4]) if len(pkv) > 3 else (None, None)
-        part_part = cm.dense_attn_part_perhead(q, pk, pv, ppos >= 0,
-                                               k_scale=pks, v_scale=pvs)
+        if pkv_blocks is not None:
+            assert page_table is not None and len(pkv) == 3, \
+                "zero-copy partial routing needs the paged fp cache"
+            part_part = _routed_partial_context(
+                q, cache_kv[0], cache_kv[1], page_table, pkv_blocks,
+                length, pkv, paged_kernel)
+        else:
+            pk, pv, ppos = pkv[:3]
+            pks, pvs = (pkv[3], pkv[4]) if len(pkv) > 3 else (None, None)
+            part_part = cm.dense_attn_part_perhead(q, pk, pv, ppos >= 0,
+                                                   k_scale=pks, v_scale=pvs)
         sel = partial_rows[:, None, None]                 # m/l: [B, H, T]
         part_ctx = (jnp.where(sel, part_part[0], part_full[0]),
                     jnp.where(sel, part_part[1], part_full[1]),
@@ -585,13 +664,18 @@ def trunk_fwd(cfg: ModelConfig, stack_params: Dict, h, positions, *,
               partial_rows=None,
               kinds: Optional[Tuple[str, ...]] = None,
               collect_features: bool = True,
-              t_valid=None):
+              t_valid=None,
+              pkv_blocks=None):
     """Run the layer stack.  See module docstring for modes.
 
     cache: dict with "k"/"v": [L_attn,B,S,Hk,Dh], "length": [B],
            "kmax"/"kmin": [L_attn,B,NB,Hk,Dh] (attention archs),
            "cross_k"/"cross_v": [L_cross,B,Te,Hk,Dh] (vlm/audio, decode).
     pkv:   (k, v, pos) arrays [L_attn,B,Hk,P,Dh]/[L_attn,B,Hk,P]
+    pkv_blocks: [L_attn, B, Hk, NS] int32 per-layer selected logical
+           block ids (zero-copy partial routing, paged decode only) —
+           partial context reads route through the page table in place
+           and ``pkv`` carries only the tail buffer.
     """
     kinds = kinds if kinds is not None else cfg.layer_kinds()
     pattern, n_super, rem = superblock_decomp(kinds)
@@ -606,15 +690,23 @@ def trunk_fwd(cfg: ModelConfig, stack_params: Dict, h, positions, *,
     length = cache["length"] if cache is not None else jnp.zeros((b,), jnp.int32)
     paged = cache is not None and "page_table" in cache
     page_table = cache["page_table"] if paged else None
+    routed = (paged and pkv_blocks is not None
+              and mode in ("decode_partial", "decode_fused"))
+    if not routed:
+        pkv_blocks = None
     paged_kernel = (paged and spec is not None
                     and spec.use_pallas and _paged_kernel_ok()
                     and (mode in ("decode_full", "decode_fused")
+                         or (mode == "decode_partial" and routed)
                          or (mode == "prefill" and cfg.window_size == 0)))
     t_eff = t_valid if t_valid is not None else t
     if q_weight is None:
         q_weight = jnp.ones((b, t), jnp.float32)
 
-    needs_cache = mode in ("prefill", "decode_full", "decode_fused")
+    # zero-copy partial routing reads the pool in place, so a pure
+    # partial dispatch needs the cache threaded through the scan too
+    needs_cache = mode in ("prefill", "decode_full", "decode_fused") \
+        or routed
     decode_mode = mode in ("decode_full", "decode_partial", "decode_fused")
 
     # ---- assemble scan xs --------------------------------------------------
@@ -636,6 +728,8 @@ def trunk_fwd(cfg: ModelConfig, stack_params: Dict, h, positions, *,
         xs["pk"], xs["pv"], xs["ppos"] = (rp(pkv[0]), rp(pkv[1]), rp(pkv[2]))
         if len(pkv) > 3:         # int8 partial cache
             xs["pks"], xs["pvs"] = rp(pkv[3]), rp(pkv[4])
+        if routed:
+            xs["pbi"] = rp(pkv_blocks)
     use_cached_cross = (decode_mode and n_cross_per
                         and cache is not None and "cross_k" in cache)
     if use_cached_cross:
@@ -717,7 +811,8 @@ def trunk_fwd(cfg: ModelConfig, stack_params: Dict, h, positions, *,
                     cfg, mode, lp, h, positions, self_mask, cache_kv, pkv_l,
                     length, inv_freq, mscale, page_table=page_table,
                     paged_kernel=paged_kernel, partial_rows=partial_rows,
-                    t_valid=t_valid)
+                    t_valid=t_valid,
+                    pkv_blocks=(x["pbi"][a_i] if "pbi" in x else None))
                 h = h + att
                 if mode == "prefill":
                     if paged:

@@ -98,6 +98,13 @@ class ServingConfig:
     # per-token absmax/448 scale — same byte footprint, no integer
     # rounding grid).  Ignored when tier_lossless=True.
     tier_codec: str = "int8"
+    # zero-copy partial verification (paged only): the partial KV is a
+    # page-table-routed view over the trunk pool — a refresh writes
+    # O(budget) selected-block indices and pins the selected pages
+    # instead of copying their bytes into a dense per-slot buffer.
+    # Greedy outputs are token-identical to the gathered baseline
+    # (benchmarks/bench_serving.py --zero-copy).
+    zero_copy_partial: bool = False
     # copy-on-write prompt-prefix sharing (paged only): requests whose
     # prompts share block-aligned leading tokens attach the cached pages
     # by reference — one physical copy, zero prefill FLOPs for the
@@ -171,6 +178,7 @@ class ServingEngine:
                 tiered=paged and self.scfg.tiered_kv,
                 tier_lossless=self.scfg.tier_lossless,
                 tier_codec=self.scfg.tier_codec,
+                zero_copy=paged and self.scfg.zero_copy_partial,
                 mesh=self._mesh())
         return self._engines[key]
 
@@ -232,7 +240,8 @@ class ServingEngine:
             if k in ("tokens", "wall_s", "steps", "admissions",
                      "page_stalls", "prefix_evictions", "prefill_tokens",
                      "prefill_dispatches", "tier_defers") \
-                    or k.startswith(("mode_rows_", "ticks_modes_")):
+                    or k.startswith(("mode_rows_", "ticks_modes_",
+                                     "tick_wall_", "ticks_wall_")):
                 self.stats[k] += sched.stats.pop(k)
         # sharded engines: the headline residency number is the worst
         # single host, not the pool total (a max across hosts AND runs)

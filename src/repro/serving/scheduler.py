@@ -77,7 +77,8 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
-from repro.core.engine import MODE_NAMES, PrefillCursor, SpecPVEngine
+from repro.core.engine import (MODE_FULL, MODE_NAMES, MODE_PARTIAL,
+                               MODE_REFRESH, PrefillCursor, SpecPVEngine)
 from repro.serving.request import Request, RequestOutput, RequestPhase
 
 
@@ -180,6 +181,12 @@ class ContinuousScheduler:
         self.trace: List[tuple] = []        # (event, request_id, slot)
         self.step_log: List[tuple] = []     # (t, request_id, n_tokens)
         self.stats = defaultdict(float)
+        # refresh-cost observability: raw per-tick decode wall times by
+        # tick class ("refresh" when any row refreshed, "partial" when
+        # every row was partial, else "full"/"mixed") — percentile
+        # source for bench_serving; the sums/counts mirror into stats
+        # as tick_wall_<class> / ticks_wall_<class>
+        self.tick_wall: Dict[str, List[float]] = defaultdict(list)
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -502,6 +509,7 @@ class ContinuousScheduler:
         for mid in distinct:
             self.stats["mode_rows_" + MODE_NAMES[mid]] += int(
                 np.sum(active & (modes == mid)))
+        t_dec = self.clock()
         if self.fused:
             # the whole mode mix in ONE jitted dispatch
             self.st, so = self.engine.step_fused(self.st, active, modes)
@@ -515,7 +523,27 @@ class ContinuousScheduler:
                                                     MODE_NAMES[mid], mask)
                 self.stats["steps"] += 1
                 self._harvest(so, mask)
+        # per-tick decode wall time by tick class (the host wrapper
+        # materialises the step's tokens, so the dispatch has drained)
+        cls = self._tick_class(modes, active)
+        dt = self.clock() - t_dec
+        self.tick_wall[cls].append(dt)
+        self.stats["tick_wall_" + cls] += dt
+        self.stats["ticks_wall_" + cls] += 1
         return True
+
+    @staticmethod
+    def _tick_class(modes: np.ndarray, active: np.ndarray) -> str:
+        """Classify a decode tick for the wall-time breakdown: the
+        refresh cost dominates any tick containing one, so "refresh"
+        wins outright; an all-partial tick is the steady-state cheap
+        case; everything else is full-only or a full+partial mix."""
+        m = modes[active]
+        if np.any(m == MODE_REFRESH):
+            return "refresh"
+        if np.all(m == MODE_PARTIAL):
+            return "partial"
+        return "full" if np.all(m == MODE_FULL) else "mixed"
 
     def _harvest(self, so, mask: np.ndarray) -> None:
         """Collect one step's tokens into the stepped slots (+ the

@@ -434,6 +434,47 @@ def test_record_traffic_refresh_bills_rebuild(serve_tiered, tiny, small_spec):
     assert got == want
 
 
+@pytest.mark.zero_copy
+def test_record_traffic_refresh_routed_contract(tiny, small_spec,
+                                                small_dcfg):
+    """Billing contract under zero-copy: a routed refresh bills the full
+    verify read plus page summaries + index writes + tail-buffer bytes
+    (``routed_refresh_bytes``) — NOT the gathered body copy — and the
+    rebuild term no longer scales with ``partial_budget_tokens``.
+    Partial-step billing is unchanged: the body is still read every
+    partial step, just routed from the trunk pool."""
+    from repro.kvcache.offload import routed_refresh_bytes
+    from repro.models.dense import attn_layer_count
+    cfg, params, dparams = tiny
+    eng = SpecPVEngine(cfg, small_spec, small_dcfg, params, dparams,
+                       batch=2, max_len=MAX_LEN, partial_verification=True,
+                       paged=True, prefix_cache=False, zero_copy=True)
+    l_attn = attn_layer_count(cfg.layer_kinds())
+    itemsize = 2 if cfg.dtype == "bfloat16" else 4
+    hk, dh = cfg.num_kv_heads, cfg.head_dim_
+    rows = np.array([True, True])
+    got = _bill(eng, "refresh", [40, 160], rows)
+    want = full_step_bytes(l_attn, 1, 200, hk, dh, itemsize) \
+        + routed_refresh_bytes(l_attn, 2, eng._nb_seq, eng._ns_blocks,
+                               small_spec.buffer_size, hk, dh, itemsize)
+    assert got == want
+    gathered = full_step_bytes(l_attn, 1, 200, hk, dh, itemsize) \
+        + partial_step_bytes(l_attn, 2, small_spec.partial_budget_tokens,
+                             hk, dh, itemsize)
+    assert got != gathered
+    # single-row refresh scales the rebuild term by nrows
+    got1 = _bill(eng, "refresh", [40, 160], np.array([True, False]))
+    assert got1 == full_step_bytes(l_attn, 1, 40, hk, dh, itemsize) \
+        + routed_refresh_bytes(l_attn, 1, eng._nb_seq, eng._ns_blocks,
+                               small_spec.buffer_size, hk, dh, itemsize)
+    # the per-step partial read is billed identically to the gathered
+    # engine: budget + buffer tokens of K+V per stepping row
+    assert _bill(eng, "partial", [40, 160], rows) == partial_step_bytes(
+        l_attn, 2,
+        small_spec.partial_budget_tokens + small_spec.buffer_size,
+        hk, dh, itemsize)
+
+
 def test_fig4_partial_tokens_derive_from_config():
     """bench_fig4's projected partial-step size is the SpecPV default
     budget + buffer (4480 + 96), not a hardcoded 4576."""
